@@ -1,0 +1,37 @@
+"""Recompute HLO-derived roofline inputs from the saved .hlo.gz artifacts
+(no recompilation) after accounting-rule changes in hlo_analysis."""
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
+from repro.launch import hlo_analysis  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../results/dryrun")
+
+
+def main():
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        hlo_path = os.path.join(RESULTS, "hlo",
+                                os.path.basename(path)[:-5] + ".hlo.gz")
+        if not os.path.exists(hlo_path):
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            hlo = f.read()
+        full = hlo_analysis.full_analysis(hlo)
+        rec["flops"] = full["dot_flops"]
+        rec["traffic_bytes"] = full["traffic_bytes"]
+        rec["collectives"] = full["collectives"]
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"{os.path.basename(path):60s} traffic={rec['traffic_bytes']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, from results/dryrun/*.json:
+    compute term    = HLO_dot_FLOPs_per_device / peak_FLOPs      [s]
+    memory term     = HLO_traffic_per_device / HBM_bw            [s]
+    collective term = collective_bytes_per_device / link_bw      [s]
+(FLOPs/traffic/collectives are trip-count-aware HLO sums; see
+launch/hlo_analysis.py.)  Dominant term == bottleneck; useful-compute
+ratio = MODEL_FLOPS / (HLO_FLOPs * chips).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.base import shape_by_name
+from repro.configs.registry import get_config
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per ICI link (1 link assumed: conservative)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../results/dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.seq_len * shape.global_batch
+    return 2.0 * n_act * shape.global_batch  # decode: one token per stream
+
+
+def analyze(rec: dict, chips: int = 256) -> dict:
+    comp = rec["flops"] / PEAK_FLOPS
+    mem = rec["traffic_bytes"] / HBM_BW
+    coll = rec["collectives"]["total_bytes"] / LINK_BW
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = rec["flops"] * chips
+    return {
+        **{f"{k}_s": v for k, v in terms.items()},
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_fraction": comp / max(terms.values()) if max(terms.values()) else 0.0,
+        "step_lower_bound_s": max(terms.values()),
+    }
+
+
+def load_cells(pattern: str = "*__pod1__atp16x1.json"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(path) as f:
+            rec = json.load(f)
+        cells.append(rec)
+    return cells
+
+
+def table(cells, chips: int = 256) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful FLOPs ratio | roofline frac |")
+    sep = "|" + "---|" * 8
+    rows = [hdr, sep]
+    for rec in cells:
+        if rec.get("status") == "skipped":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"skipped (sub-quadratic rule) | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"ERROR | — | — |")
+            continue
+        a = analyze(rec, chips)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {a['compute_s']:.3f} | "
+            f"{a['memory_s']:.3f} | {a['collective_s']:.3f} | {a['dominant']} | "
+            f"{a['useful_ratio']:.2f} | {a['roofline_fraction']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    cells = load_cells()
+    print(table(cells))
+    interesting = []
+    for rec in cells:
+        if rec.get("status") != "ok":
+            continue
+        a = analyze(rec)
+        interesting.append((a["roofline_fraction"], a["dominant"],
+                            rec["arch"], rec["shape"]))
+    interesting.sort()
+    print("\nworst roofline fractions:")
+    for frac, dom, arch, shape in interesting[:6]:
+        print(f"  {arch} x {shape}: {frac:.3f} ({dom}-bound)")
+
+
+if __name__ == "__main__":
+    main()

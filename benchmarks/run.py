@@ -1,0 +1,57 @@
+"""Benchmark runner: one section per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main() -> None:
+    from benchmarks import paper_tables, roofline
+
+    print("name,us_per_call,derived")
+
+    # --- Fig. 10: SOTA comparison (comm-model, IC1..IC4 x M1..M4) ----------
+    for ic, m, d1, d2, t_atp, t_meg, gain in paper_tables.fig10_sota():
+        print(f"fig10/{ic}/{m},{t_atp*1e3:.1f},mesh=({d1}x{d2});"
+              f"megatron_ms={t_meg:.2f};gain_pct={gain:.1f}")
+
+    # --- Table 3: chunk-based overlapping (measured on host mesh) ----------
+    base = None
+    for chunks, us in paper_tables.table3_overlap():
+        base = base or us
+        print(f"table3/chunks={chunks},{us:.1f},rel={us/base:.3f}")
+
+    # --- Fig. 11: device-mesh sweep ----------------------------------------
+    for ic, d1, d2, t in paper_tables.fig11_mesh_sweep():
+        print(f"fig11/{ic}/mesh{d1}x{d2},{t*1e3:.1f},t_comm_ms={t:.2f}")
+
+    # --- Fig. 12: scaling ---------------------------------------------------
+    for ic, n, d1, d2, t_opt, t_meg in paper_tables.fig12_scaling():
+        print(f"fig12/{ic}/n={n},{t_opt*1e3:.1f},best=({d1}x{d2});"
+              f"megatron_ms={t_meg:.2f}")
+
+    # --- Roofline summary (from the dry-run artifacts, if present) ---------
+    try:
+        cells = roofline.load_cells()
+        for rec in cells:
+            if rec.get("status") != "ok":
+                continue
+            a = roofline.analyze(rec)
+            print(f"roofline/{rec['arch']}/{rec['shape']},"
+                  f"{a['step_lower_bound_s']*1e6:.0f},"
+                  f"dom={a['dominant']};frac={a['roofline_fraction']:.2f};"
+                  f"useful={a['useful_ratio']:.2f}")
+    except Exception as e:  # dry-run artifacts are optional for the bench
+        print(f"roofline/unavailable,0,{type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

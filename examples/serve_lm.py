@@ -1,0 +1,38 @@
+"""Serve a small model with batched requests: wave-batched prefill-into-
+cache + lockstep greedy decode on an ATP mesh (deliverable b).
+
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.mesh import atp_topo
+from repro.launch.serve import serve
+from repro.models import lm
+
+
+def main():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    topo = atp_topo(dp=1, d1=2, d2=2)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)
+               for _ in range(4)]
+    outs = serve(cfg, topo, params, prompts, max_new=8, max_seq=32)
+    print("generated (greedy):")
+    for i, o in enumerate(outs):
+        print(f"  request {i}: {o.tolist()}")
+    assert outs.shape == (4, 8)
+    assert (outs >= 0).all() and (outs < cfg.vocab_size).all()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

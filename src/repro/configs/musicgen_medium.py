@@ -1,0 +1,11 @@
+"""Assigned architecture config (see assignment sheet for source)."""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, SSMConfig  # noqa: F401
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", family="audio",
+    num_layers=48, d_model=1536, num_heads=24, num_kv_heads=24,
+    d_ff=6144, vocab_size=2048, mlp_kind="gelu", norm_kind="layernorm",
+    use_rope=False, frontend="audio_tokens",
+)
+
+MUSICGEN_MEDIUM = CONFIG

@@ -1,0 +1,10 @@
+"""Assigned architecture config (see assignment sheet for source)."""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, SSMConfig  # noqa: F401
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b", family="dense",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+    d_ff=2816, vocab_size=151936, qkv_bias=True, tie_embeddings=True,
+)
+
+QWEN1_5_0_5B = CONFIG

@@ -1,0 +1,11 @@
+"""Assigned architecture config (see assignment sheet for source)."""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, SSMConfig  # noqa: F401
+
+CONFIG = ModelConfig(
+    name="qwen3-8b", family="dense",
+    num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=12288, vocab_size=151936, head_dim=128, qk_norm=True,
+    rope_theta=1000000.0,
+)
+
+QWEN3_8B = CONFIG

@@ -1,0 +1,235 @@
+"""ATP row/column-first tensor-parallel layers (paper §3.2, Fig. 5/6).
+
+Everything here runs *inside* ``jax.shard_map`` with ``check_vma=True``:
+tensors are local shards, collectives are explicit, and JAX's
+varying-manual-axes type system transposes them exactly (the backward
+all-reduce of each boundary is mathematically forced — the cotangent
+arrives Partial on the same mesh dim because the neighbouring GEMM's
+contraction dim is sharded there).
+
+Communication schedule per transformer layer (== paper Fig. 6 / Eq. 2):
+
+    column-first GEMM -> boundary psum over mesh dim 2 (f1 fwd / f3 fwd)
+    row-first GEMM    -> boundary psum over mesh dim 1 (f2 fwd / f4 fwd)
+    + the mirrored backward psums inserted by AD
+
+Summed per layer this is Eq. 2: 2Lbs*(7h/(d1 B2) + 2h/(d2 B1)) for GPT.
+
+Activations between blocks carry the paper's spec [Replicate, Shard(1)]:
+replicated over tp1 (mesh dim 1), feature-sharded over tp2 (mesh dim 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.mesh import MeshTopo, dp_axis_names, tp_axis_names
+
+
+@dataclasses.dataclass(frozen=True)
+class ATPContext:
+    """Static distribution context threaded through all model code."""
+
+    topo: MeshTopo
+    ax1: str | None          # device-mesh dim 1 (size d1)
+    ax2: str | None          # device-mesh dim 2 (size d2)
+    dp_axes: tuple[str, ...]  # data-parallel axes (pod, data)
+    chunks: int = 1           # chunk-based overlapping factor (paper §4.1)
+    use_reduce_scatter: bool = False  # beyond-paper: fuse psum+slice
+
+    @property
+    def d1(self) -> int:
+        return self.topo.axis_size(self.ax1) if self.ax1 else 1
+
+    @property
+    def d2(self) -> int:
+        return self.topo.axis_size(self.ax2) if self.ax2 else 1
+
+    @property
+    def tp(self) -> int:
+        return self.d1 * self.d2
+
+    @property
+    def tp_axes(self) -> tuple[str, ...]:
+        """Combined TP axes, mesh-dim-1 major (for EP / head sharding)."""
+        return tuple(a for a in (self.ax1, self.ax2) if a)
+
+    @property
+    def dp(self) -> int:
+        return math.prod(self.topo.axis_size(a) for a in self.dp_axes) if self.dp_axes else 1
+
+    def index1(self):
+        return lax.axis_index(self.ax1) if self.ax1 else 0
+
+    def index2(self):
+        return lax.axis_index(self.ax2) if self.ax2 else 0
+
+    def tp_index(self):
+        """Flattened TP rank, mesh-dim-1 major."""
+        return self.index1() * self.d2 + self.index2()
+
+    def dp_index(self):
+        idx = 0
+        for a in self.dp_axes:
+            idx = idx * self.topo.axis_size(a) + lax.axis_index(a)
+        return idx
+
+
+def make_context(
+    topo: MeshTopo, chunks: int = 1, use_reduce_scatter: bool = False
+) -> ATPContext:
+    ax1, ax2 = tp_axis_names(topo)
+    return ATPContext(
+        topo=topo, ax1=ax1, ax2=ax2, dp_axes=dp_axis_names(topo),
+        chunks=chunks, use_reduce_scatter=use_reduce_scatter,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Boundary collectives (f1..f4).
+# ---------------------------------------------------------------------------
+
+def atp_boundary(x, axis: str | None):
+    """Resolve a Partial(axis) activation: all-reduce over one mesh dim.
+
+    This is the forward of the paper's conjugate f operator; AD inserts the
+    conjugate backward all-reduce automatically (vma typing)."""
+    if axis is None:
+        return x
+    return lax.psum(x, axis)
+
+
+def atp_gather(x, axis: str | None, dim: int):
+    """all-gather fwd (reduce-scatter bwd): the paper's 'gather the output
+    tensor before the Output Linear'."""
+    if axis is None:
+        return x
+    return lax.all_gather(x, axis, axis=dim, tiled=True)
+
+
+def atp_reduce_scatter(x, axis: str | None, dim: int):
+    """Beyond-paper fused boundary: psum+shard_slice as one reduce-scatter."""
+    if axis is None:
+        return x
+    return lax.psum_scatter(x, axis, scatter_dimension=dim, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# Row/column-first linear layers.
+# ---------------------------------------------------------------------------
+
+def _chunked_boundary_matmul(ctx: ATPContext, x, w, axis):
+    """Chunk-based overlapping (paper §4.1).
+
+    Split the leading (batch) dim into `ctx.chunks` chunks; each chunk's
+    GEMM + all-reduce chain is data-independent of the others, so XLA's
+    latency-hiding scheduler overlaps chunk k's collective with chunk
+    k+1's GEMM.  Semantically identical to the unchunked op.
+    """
+    c = ctx.chunks
+    if c <= 1 or x.shape[0] % c:
+        return atp_boundary(jnp.einsum("...k,kn->...n", x, w), axis)
+    xs = jnp.split(x, c, axis=0)
+    ys = [atp_boundary(jnp.einsum("...k,kn->...n", xc, w), axis) for xc in xs]
+    return jnp.concatenate(ys, axis=0)
+
+
+def atp_linear(
+    ctx: ATPContext,
+    x,
+    w,
+    b=None,
+    *,
+    kind: Literal["col", "row"],
+    chunked: bool = True,
+):
+    """Distributed Y = XW (+b) with ATP sharding.
+
+    column-first (paper Fig. 5 right):
+        W global [K, N] sharded [Shard(1)@ax1, Shard(0)@ax2]
+        (local shard [K/d2, N/d1]); X local [..., K/d2] (block I/O spec
+        [Replicate, Shard(-1)]); local GEMM output is Partial over ax2 ->
+        boundary psum(ax2) -> [..., N/d1]: ax1-feature-sharded,
+        ax2-replicated.
+    row-first (paper Fig. 5 left):
+        W global [K, N] sharded [Shard(0)@ax1, Shard(1)@ax2]
+        (local [K/d1, N/d2]); X local [..., K/d1]; local GEMM output is
+        Partial over ax1 -> boundary psum(ax1) -> [..., N/d2]: back to the
+        block I/O spec [Replicate, Shard(-1)].
+
+    Bias is sharded like the GEMM output dim and added after the boundary
+    (psum is linear; keeps the bias gradient exact and local).
+    """
+    axis = ctx.ax2 if kind == "col" else ctx.ax1
+    if chunked and ctx.chunks > 1 and x.ndim >= 2:
+        y = _chunked_boundary_matmul(ctx, x, w, axis)
+    else:
+        y = atp_boundary(jnp.einsum("...k,kn->...n", x, w), axis)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def shard_slice(x, index, nshards: int, dim: int):
+    """Local slice of dim `dim` into `nshards` parts at `index` (the paper's
+    free 'scatter' of a replicated tensor)."""
+    if nshards == 1:
+        return x
+    size = x.shape[dim] // nshards
+    return lax.dynamic_slice_in_dim(x, index * size, size, axis=dim)
+
+
+# ---------------------------------------------------------------------------
+# Attention-core scatter/gather (paper §3.2.1): fully shard the core over
+# the *combined* d1*d2 ranks.  Head-count shortfall is covered by also
+# sharding the batch dim (policy: DESIGN.md §6).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CoreSharding:
+    """How the attention/SSM core shards over ax2 (it is already sharded
+    over ax1 by the column-first QKV projection): d2 = h2 (more heads) *
+    b2 (batch)."""
+
+    h2: int
+    b2: int
+
+
+def plan_core_sharding(ctx: ATPContext, heads_after_ax1: int, batch_local: int) -> CoreSharding:
+    h2 = math.gcd(heads_after_ax1, ctx.d2)
+    b2 = ctx.d2 // h2
+    if batch_local % b2:
+        raise ValueError(
+            f"cannot shard attention core: {heads_after_ax1} heads vs d2={ctx.d2} "
+            f"leaves batch factor {b2}, but local batch is {batch_local}"
+        )
+    return CoreSharding(h2=h2, b2=b2)
+
+
+def core_scatter(ctx: ATPContext, x, cs: CoreSharding, head_dim: int, batch_dim: int = 0):
+    """Slice (free) the ax2-replicated tensor to this rank's core shard."""
+    if ctx.ax2 is None:
+        return x
+    i2 = ctx.index2()
+    x = shard_slice(x, i2 // cs.b2, cs.h2, head_dim)
+    x = shard_slice(x, i2 % cs.b2, cs.b2, batch_dim)
+    return x
+
+
+def core_gather(ctx: ATPContext, y, cs: CoreSharding, head_dim: int, batch_dim: int = 0):
+    """all-gather the core output back to ax2-replicated layout."""
+    if ctx.ax2 is None:
+        return y
+    if cs.b2 == 1:
+        return atp_gather(y, ctx.ax2, head_dim)
+    if cs.h2 == 1:
+        return atp_gather(y, ctx.ax2, batch_dim)
+    g = lax.all_gather(y, ctx.ax2, axis=0, tiled=False)  # [d2, ...]
+    g = g.reshape((cs.h2, cs.b2) + y.shape)
+    parts_b = jnp.concatenate([g[:, i] for i in range(cs.b2)], axis=batch_dim + 1)
+    return jnp.concatenate([parts_b[i] for i in range(cs.h2)], axis=head_dim)

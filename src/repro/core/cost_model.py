@@ -1,0 +1,82 @@
+"""ATP analytic communication cost model (paper §3.3-§3.5, Eq. 2-4)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.comm_matrix import HierarchicalCommMatrix
+
+
+def rabenseifner_bw(d: int, raw_bw: float) -> float:
+    """Eq. 4: algorithm bandwidth of a d-rank all-reduce on raw link bw."""
+    if d <= 1:
+        return math.inf
+    return d / (2.0 * (d - 1)) * raw_bw
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCommProfile:
+    """Per-transformer-layer TP communication volumes (generalizes Eq. 2).
+
+    col_first_out : sum of output dims of column-first GEMMs (all-reduced
+                    over mesh dim 2 at size dim/d1).  GPT: qkv 3h + mlp-up
+                    4h = 7h.  SwiGLU archs: qkv_dim + 2*d_ff.
+    row_first_out : sum of output dims of row-first GEMMs (all-reduced over
+                    mesh dim 1 at size dim/d2).  GPT: attn-out h + mlp-down
+                    h = 2h.
+    """
+
+    col_first_out: float
+    row_first_out: float
+
+    @staticmethod
+    def gpt(hidden: int) -> "LayerCommProfile":
+        return LayerCommProfile(7.0 * hidden, 2.0 * hidden)
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategyCost:
+    d1: int
+    d2: int
+    b1_raw: float
+    b2_raw: float
+    b1: float
+    b2: float
+    t_comm: float  # seconds per step
+
+
+def axis_algorithm_bw(
+    matrix: HierarchicalCommMatrix, d1: int, d2: int
+) -> tuple[float, float, float, float]:
+    """(B1', B2', B1, B2): Eq. 3 raw then Eq. 4 algorithm bandwidths."""
+    b1_raw, b2_raw = matrix.axis_bandwidths(d1, d2)
+    return b1_raw, b2_raw, rabenseifner_bw(d1, b1_raw), rabenseifner_bw(d2, b2_raw)
+
+
+def t_comm(
+    matrix: HierarchicalCommMatrix,
+    d1: int,
+    d2: int,
+    *,
+    layers: int,
+    batch: int,
+    seq: int,
+    profile: LayerCommProfile,
+    bytes_per_elem: int = 2,
+    calibrated: tuple[float, float] | None = None,
+) -> StrategyCost:
+    """Generalized Eq. 2, in seconds.
+
+    T = 2*L*b*s * ( C_col/(d1*B2) + C_row/(d2*B1) ) * bytes
+
+    `calibrated` optionally overrides (B1, B2) with measured values
+    (paper §5.3, IC1 case).
+    """
+    b1_raw, b2_raw, b1, b2 = axis_algorithm_bw(matrix, d1, d2)
+    if calibrated is not None:
+        b1, b2 = calibrated
+    tokens = 2.0 * layers * batch * seq * bytes_per_elem  # fwd+bwd factor 2
+    term_col = (profile.col_first_out / (d1 * b2)) if d2 > 1 else 0.0
+    term_row = (profile.row_first_out / (d2 * b1)) if d1 > 1 else 0.0
+    t = tokens * (term_col + term_row) / 1e9  # GB/s -> bytes/s
+    return StrategyCost(d1, d2, b1_raw, b2_raw, b1, b2, t)

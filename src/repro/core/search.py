@@ -1,0 +1,66 @@
+"""ATP strategy search (paper §3.5): pick DeviceMesh(d1,d2) minimizing T_comm."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.comm_matrix import HierarchicalCommMatrix
+from repro.core.cost_model import LayerCommProfile, StrategyCost, t_comm
+from repro.core.mesh import factorizations
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    best: StrategyCost
+    ranked: tuple[StrategyCost, ...]  # ascending T_comm
+
+    def mesh(self) -> tuple[int, int]:
+        return (self.best.d1, self.best.d2)
+
+
+def search_strategy(
+    matrix: HierarchicalCommMatrix,
+    tp_degree: int,
+    *,
+    layers: int,
+    batch: int,
+    seq: int,
+    profile: LayerCommProfile,
+    bytes_per_elem: int = 2,
+    calibration: dict[tuple[int, int], tuple[float, float]] | None = None,
+) -> SearchResult:
+    """Enumerate all (d1,d2) factorizations of tp_degree and rank by Eq. 2.
+
+    `calibration` maps (d1,d2) -> measured (B1,B2) overrides (paper §5.3).
+    """
+    costs = []
+    for d1, d2 in factorizations(tp_degree):
+        calib = calibration.get((d1, d2)) if calibration else None
+        try:
+            costs.append(
+                t_comm(
+                    matrix, d1, d2,
+                    layers=layers, batch=batch, seq=seq,
+                    profile=profile, bytes_per_elem=bytes_per_elem,
+                    calibrated=calib,
+                )
+            )
+        except ValueError:
+            continue  # factorization does not embed into the topology
+    if not costs:
+        raise ValueError(f"no valid (d1,d2) for tp={tp_degree} on {matrix.name}")
+    ranked = tuple(sorted(costs, key=lambda c: c.t_comm))
+    return SearchResult(ranked[0], ranked)
+
+
+def recommend_chunks(matrix: HierarchicalCommMatrix, d1: int, d2: int) -> int:
+    """Paper §4.1/§5.2 heuristic: chunk 4 on slow fabrics, 2 otherwise.
+
+    Slow fabric := bottleneck algorithm bandwidth under ~30 GB/s (IB-class),
+    where Table 3 shows chunk=4 keeps winning; on NVLink-class fabrics the
+    gain saturates at chunk=2 and larger chunks hurt small GEMM efficiency.
+    """
+    from repro.core.cost_model import axis_algorithm_bw
+
+    _, _, b1, b2 = axis_algorithm_bw(matrix, d1, d2)
+    bottleneck = min(b for b in (b1, b2) if b != float("inf"))
+    return 4 if bottleneck < 30.0 else 2

@@ -1,0 +1,111 @@
+"""Sharding specs in the paper's notation (Shard / Replicate / Partial).
+
+The paper binds placement to *device-mesh dims* (not tensor dims):
+a spec is a sequence [P_1 .. P_n], one placement per mesh dim.  We keep that
+notation for the search/cost layer and provide lossless conversion to
+jax.sharding.PartitionSpec for execution.  ``Partial`` never appears in a
+materialized jax sharding — it marks pending all-reduces in the
+propagation rules used by the analytic layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.mesh import MeshTopo
+
+
+class Placement:
+    """Base class for per-mesh-dim placements."""
+
+    def is_shard(self) -> bool:
+        return isinstance(self, Shard)
+
+
+@dataclasses.dataclass(frozen=True)
+class Shard(Placement):
+    dim: int  # tensor dim that is split along this mesh dim
+
+    def __repr__(self):
+        return f"Shard({self.dim})"
+
+
+@dataclasses.dataclass(frozen=True)
+class Replicate(Placement):
+    def __repr__(self):
+        return "Replicate"
+
+
+@dataclasses.dataclass(frozen=True)
+class Partial(Placement):
+    op: str = "sum"
+
+    def __repr__(self):
+        return f"Partial({self.op})"
+
+
+REPLICATE = Replicate()
+PARTIAL_SUM = Partial("sum")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingSpec:
+    """[P_1 .. P_n] over the mesh dims named in ``axes``."""
+
+    axes: tuple[str, ...]
+    placements: tuple[Placement, ...]
+
+    def __post_init__(self):
+        assert len(self.axes) == len(self.placements)
+
+    def partition_spec(self, ndim: int) -> P:
+        """Convert to a tensor-dim-major PartitionSpec.
+
+        Mesh dims sharding the same tensor dim stack in mesh-dim order
+        (matches the paper's two-level split, e.g. [Shard(0),Shard(1)] on
+        (tp1,tp2) -> P(('tp1',), ('tp2',)) for a 2D weight).
+        """
+        per_dim: list[list[str]] = [[] for _ in range(ndim)]
+        for axis, pl in zip(self.axes, self.placements):
+            if isinstance(pl, Shard):
+                if pl.dim >= ndim:
+                    raise ValueError(f"Shard({pl.dim}) out of range for ndim={ndim}")
+                per_dim[pl.dim].append(axis)
+            elif isinstance(pl, Partial):
+                raise ValueError("Partial cannot be materialized as a jax sharding")
+        entries = [tuple(d) if len(d) > 1 else (d[0] if d else None) for d in per_dim]
+        # Trim trailing Nones for canonical form.
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def named_sharding(self, mesh, ndim: int) -> NamedSharding:
+        return NamedSharding(mesh, self.partition_spec(ndim))
+
+    def shard_counts(self, topo: MeshTopo, ndim: int) -> tuple[int, ...]:
+        """Per-tensor-dim total split factor."""
+        counts = [1] * ndim
+        for axis, pl in zip(self.axes, self.placements):
+            if isinstance(pl, Shard):
+                counts[pl.dim] *= topo.axis_size(axis)
+        return tuple(counts)
+
+    def local_shape(self, topo: MeshTopo, global_shape: Sequence[int]) -> tuple[int, ...]:
+        counts = self.shard_counts(topo, len(global_shape))
+        out = []
+        for size, c in zip(global_shape, counts):
+            if size % c:
+                raise ValueError(f"dim of size {size} not divisible by {c}")
+            out.append(size // c)
+        return tuple(out)
+
+    def partial_axes(self) -> tuple[str, ...]:
+        return tuple(
+            a for a, p in zip(self.axes, self.placements) if isinstance(p, Partial)
+        )
+
+
+def spec(axes: Sequence[str], *placements: Placement) -> ShardingSpec:
+    return ShardingSpec(tuple(axes), tuple(placements))

@@ -1,0 +1,66 @@
+"""Blocked matmul Pallas TPU kernel with optional fused activation.
+
+Grid (M/bm, N/bn, K/bk), K fastest; fp32 accumulator persists in VMEM
+across K steps (MXU-aligned 128 tiles).  The fused-GeLU variant is the
+compute side of the paper's chunk-based overlapping: one chunk's GEMM+act
+is a single kernel launch whose output feeds the grouped all-reduce while
+the next chunk computes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc, *, activation: str | None):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())))
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        out = acc[...]
+        if activation == "gelu":
+            out = jax.nn.gelu(out, approximate=True)
+        elif activation == "silu":
+            out = jax.nn.silu(out)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def matmul(a, b, *, activation: str | None = None,
+           block_m: int = 128, block_n: int = 128, block_k: int = 128,
+           interpret: bool = False):
+    """a: [M, K] @ b: [K, N] -> [M, N] (+fused activation)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    bm, bn, bk = (min(block_m, M), min(block_n, N), min(block_k, K))
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, activation=activation),
+        grid=(a.shape[0] // bm, b.shape[1] // bn, a.shape[1] // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:M, :N] if (pm or pn) else out

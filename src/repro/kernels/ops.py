@@ -1,0 +1,71 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so correctness tests run on CPU;
+on a real TPU deployment set REPRO_KERNEL_INTERPRET=0 (or pass
+interpret=False) to execute the compiled kernels.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul as _mm
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    env = os.environ.get("REPRO_KERNEL_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128, interpret=None):
+    """q: [b, sq, hq, d]; k/v: [b, sk, hkv, d] (GQA-repeated here)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hq, -1, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hq, -1, d)
+    o = _fa.flash_attention(qf, kf, vf, causal=causal, window=window,
+                            softcap=softcap, block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+    return o.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, gamma, *, eps=1e-6, block_rows=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    shape = x.shape
+    out = _rn.rmsnorm(x.reshape(-1, shape[-1]), gamma, eps=eps,
+                      block_rows=block_rows, interpret=interpret)
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_m",
+                                             "block_n", "block_k", "interpret"))
+def matmul(a, b, *, activation=None, block_m=128, block_n=128, block_k=128,
+           interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _mm.matmul(a, b, activation=activation, block_m=block_m,
+                      block_n=block_n, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A_log, B, C, D, *, chunk=64, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssd.ssd_scan(x, dt, A_log, B, C, D, chunk=chunk,
+                         interpret=interpret)

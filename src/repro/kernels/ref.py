@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: [bh, sq, d]; k/v: [bh, sk, d] — materialized-softmax reference."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    sq, sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, gamma, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv * gamma).astype(x.dtype)
+
+
+def matmul_ref(a, b, *, activation=None):
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    if activation == "gelu":
+        out = jax.nn.gelu(out, approximate=True)
+    elif activation == "silu":
+        out = jax.nn.silu(out)
+    return out.astype(a.dtype)
+
+
+def ssd_ref(x, dt, A_log, B, C, D, state_in=None):
+    """Sequential (step-by-step) SSD reference.
+
+    x: [b, s, nh, hd]; dt: [b, s, nh]; B/C: [b, s, ds]; A_log/D: [nh].
+    Returns (y, state_out [b, nh, hd, ds])."""
+    b, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    state = (jnp.zeros((b, nh, hd, ds), jnp.float32) if state_in is None
+             else state_in.astype(jnp.float32))
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+
+    def step(st, t):
+        g = jnp.exp(dtf[:, t] * A)                       # [b, nh]
+        upd = jnp.einsum("bhd,bs->bhds", xf[:, t] * dtf[:, t][..., None], Bf[:, t])
+        st = st * g[:, :, None, None] + upd
+        y = jnp.einsum("bhds,bs->bhd", st, Cf[:, t])
+        return st, y
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(s))
+    y = jnp.moveaxis(ys, 0, 1) + D[None, None, :, None] * xf
+    return y.astype(x.dtype), state

@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+    jax.jit(step, in_shardings=..., out_shardings=...)\
+        .lower(**ShapeDtypeStruct inputs).compile()
+and record memory_analysis(), cost_analysis(), and collective bytes parsed
+from the optimized HLO into results/dryrun/<cell>.json — the §Roofline
+tables read from these.
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+          --shape train_4k [--multi-pod] [--d1 4 --d2 4] [--all]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LM_SHAPES, ShapeConfig, shape_by_name
+from repro.configs.registry import ARCHS, get_config
+from repro.core.mesh import MeshTopo, atp_topo, production_topo
+from repro.launch import hlo_analysis
+from repro.launch.steps import (batch_struct, build_decode_step, build_prefill,
+                                build_train_step)
+from repro.models import lm
+from repro.optim import adamw
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+def cell_runnable(cfg, shape: ShapeConfig) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("skipped: long_500k requires sub-quadratic decode; "
+                       f"{cfg.name} is full-attention (DESIGN.md §5)")
+    return True, ""
+
+
+def make_topo(multi_pod: bool, d1: int | None, d2: int | None) -> MeshTopo:
+    if d1 is None:
+        return production_topo(multi_pod)
+    return atp_topo(16, d1, d2, pods=2 if multi_pod else 1)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               d1: int | None = None, d2: int | None = None,
+               chunks: int = 1, opt_mode: str = "zero1",
+               remat: bool = True):
+    """Lower + compile one cell; returns the result record dict."""
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    ok, why = cell_runnable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mesh": f"(pod=2,)16x16" if multi_pod else "16x16",
+        "atp": [d1, d2] if d1 else [16, 1],
+        "chunks": chunks, "kind": shape.kind,
+    }
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    topo = make_topo(multi_pod, d1, d2)
+    mesh = topo.build()
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            step, info = build_train_step(
+                cfg, topo, adamw.AdamWConfig(mode=opt_mode), chunks=chunks,
+                remat=remat, mesh=mesh)
+            params = lm.abstract_params(cfg)
+            opt = adamw.init_opt_state(params, info.pspecs, info.ctx,
+                                       opt_mode, abstract=True)
+            batch = batch_struct(cfg, shape, "train")
+            lowered = step.lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            step, info = build_prefill(cfg, topo, chunks=chunks, mesh=mesh)
+            params = lm.abstract_params(cfg)
+            batch = batch_struct(cfg, shape, "prefill")
+            lowered = step.lower(params, batch)
+        else:  # decode
+            step, info = build_decode_step(cfg, topo, shape.global_batch,
+                                           shape.seq_len, mesh=mesh)
+            params = lm.abstract_params(cfg)
+            caches, _ = lm.init_decode_caches(
+                cfg, info.ctx, shape.global_batch, shape.seq_len, abstract=True)
+            tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = step.lower(params, tokens, pos, caches)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        full = hlo_analysis.full_analysis(hlo)
+        rec["status"] = "ok"
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+        rec["memory"] = {
+            k: int(getattr(mem, k, 0) or 0)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "peak_memory_in_bytes")
+        }
+        # cost_analysis counts while bodies once (verified) — kept only for
+        # reference; the roofline uses the trip-aware HLO accounting below.
+        rec["xla_cost_flops_1iter"] = float(cost.get("flops", 0.0)) if cost else 0.0
+        rec["flops"] = full["dot_flops"]              # per device, trip-aware
+        rec["traffic_bytes"] = full["traffic_bytes"]  # per device, trip-aware
+        rec["collectives"] = full["collectives"]      # per device, trip-aware
+        rec["params"] = lm.count_params(lm.abstract_params(cfg))
+        _save_hlo(rec, hlo)
+        print(f"[ok] {arch} x {shape_name} mesh={rec['mesh']} atp={rec['atp']} "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
+              f"flops={rec['flops']:.3e} traffic={rec['traffic_bytes']:.3e} "
+              f"coll={rec['collectives']['total_gbytes']:.2f}GB")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[ERR] {arch} x {shape_name}: {rec['error'][:200]}")
+    return rec
+
+
+def cell_name(rec) -> str:
+    atp = f"atp{rec['atp'][0]}x{rec['atp'][1]}"
+    pod = "pod2" if rec["multi_pod"] else "pod1"
+    ck = f"_ck{rec['chunks']}" if rec.get("chunks", 1) > 1 else ""
+    return f"{rec['arch']}__{rec['shape']}__{pod}__{atp}{ck}"
+
+
+def _save_hlo(rec, hlo: str):
+    import gzip
+    out_dir = os.path.join(RESULTS_DIR, "hlo")
+    os.makedirs(out_dir, exist_ok=True)
+    with gzip.open(os.path.join(out_dir, cell_name(rec) + ".hlo.gz"), "wt") as f:
+        f.write(hlo)
+
+
+def save_rec(rec, out_dir=None):
+    out_dir = out_dir or RESULTS_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    name = cell_name(rec) + ".json"
+    rec = {k: v for k, v in rec.items() if k != "traceback"}
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+    return name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--d1", type=int, default=None)
+    ap.add_argument("--d2", type=int, default=None)
+    ap.add_argument("--chunks", type=int, default=1)
+    ap.add_argument("--opt-mode", default="zero1")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell on this mesh")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) >= 512, "dryrun needs the 512 virtual devices"
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in LM_SHAPES:
+                cells.append((arch, shape.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    for arch, shape in cells:
+        rec = lower_cell(arch, shape, multi_pod=args.multi_pod,
+                         d1=args.d1, d2=args.d2, chunks=args.chunks,
+                         opt_mode=args.opt_mode, remat=not args.no_remat)
+        save_rec(rec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,332 @@
+"""Parse optimized HLO text for collective communication volume.
+
+cost_analysis() has FLOPs and memory bytes but not collective bytes, so we
+walk the HLO: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute contributes its bytes, and ops inside while-loop bodies
+(jax.lax.scan over layers) are multiplied by the loop trip count, read from
+the op's ``backend_config={"known_trip_count":{"n":...}}`` annotation.
+
+Byte conventions (per device):
+    all-reduce         result bytes (== operand bytes)
+    all-gather         result bytes (what lands on each device)
+    reduce-scatter     result bytes * group size (operand contribution)
+    all-to-all         result bytes
+    collective-permute result bytes
+These match the paper's T_comm accounting (tensor size entering the
+collective) and are applied uniformly across strategies, so strategy
+*ratios* — what the search and §Perf consume — are exact.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_OP_KIND_RE = re.compile(
+    r"=\s*[^=]*?\b(all-reduce-start|all-reduce|all-gather-start|all-gather"
+    r"|reduce-scatter|all-to-all|collective-permute-start|collective-permute)\(")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of the result shape(s) on an HLO op line (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _result_shape(line: str) -> str:
+    """Everything between '= ' and the op name: the result shape."""
+    m = re.search(r"=\s*(.*?)\s*\b(?:all-reduce|all-gather|reduce-scatter"
+                  r"|all-to-all|collective-permute)", line)
+    return m.group(1) if m else ""
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def _parse(hlo: str):
+    """-> (entry_name, comps{name: {'coll': [(kind, bytes, group)], 'whiles':
+    [(body_name, trip)]}})"""
+    comps: dict[str, dict] = {}
+    cur = None
+    entry = None
+    depth = 0
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            if s.endswith("{") and _HEAD_RE.match(s):
+                cur = _HEAD_RE.match(s).group(1)
+                comps[cur] = {"coll": [], "whiles": []}
+                if s.startswith("ENTRY"):
+                    entry = cur
+                depth = 1
+            continue
+        depth += s.count("{") - s.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        mo = _OP_KIND_RE.search(s)
+        if mo:
+            kind = mo.group(1).replace("-start", "")
+            b = shape_bytes(_result_shape(s))
+            g = _group_size(s)
+            if kind == "reduce-scatter":
+                b *= g
+            comps[cur]["coll"].append((kind, b, g))
+        if " while(" in s or s.startswith("while("):
+            mb = _BODY_RE.search(s)
+            mt = _TRIP_RE.search(s)
+            if mb:
+                comps[cur]["whiles"].append(
+                    (mb.group(1), int(mt.group(1)) if mt else 1))
+    return entry, comps
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Sum collective bytes over the program, multiplying while bodies by
+    their known trip count.  Returns per-op and total bytes."""
+    entry, comps = _parse(hlo)
+
+    def walk(name: str, mult: float, seen: frozenset) -> dict:
+        out: dict[str, float] = defaultdict(float)
+        if name not in comps or name in seen:
+            return out
+        for kind, b, _ in comps[name]["coll"]:
+            out[kind] += b * mult
+        for body, trip in comps[name]["whiles"]:
+            sub = walk(body, mult * max(1, trip), seen | {name})
+            for k, v in sub.items():
+                out[k] += v
+        return out
+
+    totals = walk(entry, 1.0, frozenset()) if entry else {}
+    # collectives inside non-while called computations (fusions can't hold
+    # collectives; conditional branches counted once) — walk those too:
+    per_op = {k: float(v) for k, v in totals.items()}
+    tot = float(sum(per_op.values()))
+    return {
+        "per_op_bytes": per_op,
+        "total_bytes": tot,
+        "total_gbytes": tot / 1e9,
+    }
+
+
+def count_ops(hlo: str, names=("fusion", "while", "custom-call")) -> dict:
+    out: dict[str, int] = defaultdict(int)
+    for ln in hlo.splitlines():
+        for n in names:
+            if re.search(rf"=\s*\S+\s+{n}\(", ln):
+                out[n] += 1
+    return dict(out)
+
+
+# ---------------------------------------------------------------------------
+# Full trip-aware analysis: XLA's cost_analysis() counts while bodies ONCE
+# (verified empirically), so the roofline terms are derived here instead:
+# dot FLOPs + op-boundary traffic bytes + collective bytes, each multiplied
+# by the enclosing loops' known_trip_count.
+# ---------------------------------------------------------------------------
+
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_TRAFFIC_SKIP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "partition-id", "replica-id", "iota",
+}
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+
+
+def _split_header_params(header: str) -> list[tuple[str, str]]:
+    """'a: f32[2], b: (f32[2], s32[])' -> [(a, type), (b, type)]."""
+    out, depth, cur = [], 0, ""
+    for ch in header:
+        if ch == "," and depth == 0:
+            out.append(cur)
+            cur = ""
+            continue
+        depth += ch in "([{"
+        depth -= ch in ")]}"
+        cur += ch
+    if cur.strip():
+        out.append(cur)
+    pairs = []
+    for item in out:
+        if ":" in item:
+            nm, ty = item.split(":", 1)
+            pairs.append((nm.strip().lstrip("%"), ty.strip()))
+    return pairs
+
+
+def full_analysis(hlo: str) -> dict:
+    """-> {dot_flops, traffic_bytes, collectives:{...}} (trip-multiplied)."""
+    comps: dict[str, dict] = {}
+    cur = None
+    entry = None
+    depth = 0
+    header_re = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        if cur is None:
+            hm = header_re.match(s)
+            if hm and s.endswith("{"):
+                cur = hm.group(1)
+                comps[cur] = {"table": {}, "ops": [], "whiles": []}
+                for nm, ty in _split_header_params(hm.group(2)):
+                    comps[cur]["table"][nm] = ty
+                if s.startswith("ENTRY"):
+                    entry = cur
+                depth = 1
+            continue
+        depth += s.count("{") - s.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        lm_ = _LINE_RE.match(s)
+        if not lm_:
+            continue
+        var, rtype, op, rest = lm_.groups()
+        comps[cur]["table"][var] = rtype
+        comps[cur]["ops"].append((var, rtype, op, rest))
+        if op == "while":
+            mb = _BODY_RE.search(s)
+            mt = _TRIP_RE.search(s)
+            if mb:
+                comps[cur]["whiles"].append(
+                    (mb.group(1), int(mt.group(1)) if mt else 1))
+
+    def _args(rest: str) -> list[str]:
+        # operands up to the closing paren at depth 0
+        out, depthp, curarg = [], 0, ""
+        for ch in rest:
+            if ch == "(":
+                depthp += 1
+            elif ch == ")":
+                if depthp == 0:
+                    break
+                depthp -= 1
+            if ch == "," and depthp == 0:
+                out.append(curarg)
+                curarg = ""
+            else:
+                curarg += ch
+        if curarg.strip():
+            out.append(curarg)
+        return [a.strip().lstrip("%") for a in out if a.strip().startswith("%")]
+
+    def comp_stats(name: str) -> tuple[float, float]:
+        """(dot_flops, traffic_bytes) local to this computation.
+
+        Traffic conventions (match XLA's in-place semantics):
+          dynamic-slice / gather: only the slice read+written (result x2) —
+              the source buffer is not streamed.
+          dynamic-update-slice / scatter (incl. fusions whose output
+              aliases their largest operand): 2x the update bytes.
+          everything else: operands + result.
+        """
+        c = comps[name]
+        table = c["table"]
+        flops = 0.0
+        traffic = 0.0
+        for var, rtype, op, rest in c["ops"]:
+            if op in _TRAFFIC_SKIP:
+                continue
+            rbytes = shape_bytes(rtype)
+            arg_names = _args(rest)
+            arg_bytes = [shape_bytes(table.get(a, "")) for a in arg_names]
+            obytes = sum(arg_bytes)
+            is_dus_fusion = op == "fusion" and arg_bytes and (
+                "dynamic-update-slice" in var or "scatter" in var) and \
+                max(arg_bytes) == rbytes
+            if op in ("dynamic-slice", "gather"):
+                traffic += 2 * rbytes
+            elif op in ("dynamic-update-slice", "scatter") or is_dus_fusion:
+                # in-place update: only the update slice moves
+                traffic += 2 * (obytes - max(arg_bytes, default=0))
+            elif op == "fusion" and "reduce" not in var:
+                # kLoop fusions read each operand at most at the result's
+                # footprint (big operands are sliced inside the fusion);
+                # reduce-fusions keep full operand reads.
+                traffic += rbytes + sum(min(a, rbytes) for a in arg_bytes)
+            else:
+                traffic += rbytes + obytes
+            if op == "dot":
+                dims_m = _DOT_DIMS_RE.search(rest)
+                lhs_shape = (_shape_dims(table.get(arg_names[0], ""))
+                             if arg_names else [])
+                csize = 1
+                if dims_m and lhs_shape:
+                    for idx in dims_m.group(1).split(","):
+                        if idx and int(idx) < len(lhs_shape):
+                            csize *= lhs_shape[int(idx)]
+                flops += 2.0 * max(1, _prod(_shape_dims(rtype))) * csize
+        return flops, traffic
+
+    _stat_cache: dict[str, tuple[float, float]] = {}
+
+    def walk(name: str, mult: float, seen: frozenset) -> tuple[float, float]:
+        if name not in comps or name in seen:
+            return 0.0, 0.0
+        if name not in _stat_cache:
+            _stat_cache[name] = comp_stats(name)
+        f, t = _stat_cache[name]
+        f, t = f * mult, t * mult
+        for body, trip in comps[name]["whiles"]:
+            sf, st = walk(body, mult * max(1, trip), seen | {name})
+            f += sf
+            t += st
+        return f, t
+
+    flops, traffic = walk(entry, 1.0, frozenset()) if entry else (0.0, 0.0)
+    return {
+        "dot_flops": flops,
+        "traffic_bytes": traffic,
+        "collectives": collective_bytes(hlo),
+    }
+
+
+def _prod(xs):
+    p = 1
+    for x in xs:
+        p *= x
+    return p

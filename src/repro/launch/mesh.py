@@ -1,0 +1,30 @@
+"""Production meshes (assignment-specified) + ATP-factorized variants."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.mesh import MeshTopo, atp_topo, production_topo
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Required production mesh: 16x16 single pod / 2x16x16 multi-pod.
+
+    The single "model" axis is the ATP DeviceMesh(16, 1) baseline
+    (== Megatron tensor parallelism)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def production_mesh_topo(multi_pod: bool = False) -> MeshTopo:
+    return production_topo(multi_pod)
+
+
+def make_atp_mesh(d1: int, d2: int, *, dp: int = 16, pods: int = 1):
+    """ATP-factorized production mesh: (pod?, data, tp1, tp2)."""
+    topo = atp_topo(dp, d1, d2, pods=pods)
+    return topo.build()
+
+
+def atp_mesh_topo(d1: int, d2: int, dp: int = 16, pods: int = 1) -> MeshTopo:
+    return atp_topo(dp, d1, d2, pods=pods)

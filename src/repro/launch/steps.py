@@ -1,0 +1,171 @@
+"""Step builders: train_step / prefill / decode, shard_map'd + jitted.
+
+Shared by the dry-run, the trainer, and the server.  Every builder returns
+(jitted_fn, StepInfo) where StepInfo carries the specs needed to construct
+ShapeDtypeStruct inputs (dry-run) or to device_put host data (real run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax, shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.atp import ATPContext, make_context
+from repro.core.mesh import MeshTopo
+from repro.models import lm
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class StepInfo:
+    mesh: jax.sharding.Mesh
+    ctx: ATPContext
+    pspecs: Any
+    bspecs: Any
+    ospecs: Any = None
+    cache_specs: Any = None
+
+    def sharding(self, spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp_axes_spec(topo: MeshTopo):
+    names = [a for a in ("pod", "data")
+             if topo.has_axis(a) and topo.axis_size(a) > 1]
+    return tuple(names) if len(names) > 1 else (names[0] if names else None)
+
+
+def batch_pspecs(cfg: ModelConfig, topo: MeshTopo, kind: str):
+    dp = _dp_axes_spec(topo)
+    if cfg.frontend == "vision_patches":
+        ax2 = "tp2" if topo.has_axis("tp2") else None
+        sp = {"embeds": P(dp, None, ax2), "positions3": P(None, dp, None)}
+    else:
+        sp = {"tokens": P(dp, None)}
+    if kind == "train":
+        sp["labels"] = P(dp, None)
+    return sp
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig, kind: str):
+    """ShapeDtypeStruct stand-ins for every model input (dry-run §e.2)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "vision_patches":
+        b = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+             "positions3": jax.ShapeDtypeStruct((3, B, S), jnp.int32)}
+    else:
+        b = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if kind == "train":
+        b["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return b
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, topo: MeshTopo,
+                     opt_cfg: adamw.AdamWConfig | None = None,
+                     chunks: int = 1, remat: bool = True,
+                     mesh: jax.sharding.Mesh | None = None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    mesh = mesh if mesh is not None else topo.build()
+    ctx = make_context(topo, chunks=chunks)
+    pspecs = lm.param_specs(cfg, ctx)
+    ospecs = adamw.opt_state_specs(pspecs, ctx, opt_cfg.mode)
+    rep = adamw.replication_factors(pspecs, ctx)
+    bspecs = batch_pspecs(cfg, topo, "train")
+    mspecs = {"loss": P(), "lr": P(), "grad_norm": P()}
+
+    def local_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm.train_loss(ctx, cfg, p, batch, remat=remat))(params)
+        new_p, new_o, metrics = adamw.apply_adamw(
+            opt_cfg, ctx, params, grads, opt_state, rep)
+        metrics["loss"] = loss
+        return new_p, new_o, metrics
+
+    fn = shard_map(local_step, mesh=mesh,
+                   in_specs=(pspecs, ospecs, bspecs),
+                   out_specs=(pspecs, ospecs, mspecs), check_vma=True)
+    info = StepInfo(mesh, ctx, pspecs, bspecs, ospecs)
+    jit_fn = jax.jit(
+        fn,
+        in_shardings=(info.sharding(pspecs), info.sharding(ospecs),
+                      info.sharding(bspecs)),
+        out_shardings=(info.sharding(pspecs), info.sharding(ospecs),
+                       info.sharding(mspecs)),
+        donate_argnums=(0, 1))
+    return jit_fn, info
+
+
+def build_prefill(cfg: ModelConfig, topo: MeshTopo, chunks: int = 1,
+                  mesh: jax.sharding.Mesh | None = None):
+    """Forward-only serve step: batch -> greedy next token [B]."""
+    mesh = mesh if mesh is not None else topo.build()
+    ctx = make_context(topo, chunks=chunks)
+    pspecs = lm.param_specs(cfg, ctx)
+    bspecs = batch_pspecs(cfg, topo, "prefill")
+    dp = _dp_axes_spec(topo)
+
+    def local(params, batch):
+        logits = lm.prefill_logits(ctx, cfg, params, batch)
+        return _greedy_pick(ctx, cfg, logits)
+
+    fn = shard_map(local, mesh=mesh, in_specs=(pspecs, bspecs),
+                   out_specs=P(dp), check_vma=True)
+    info = StepInfo(mesh, ctx, pspecs, bspecs)
+    jit_fn = jax.jit(fn,
+                     in_shardings=(info.sharding(pspecs), info.sharding(bspecs)),
+                     out_shardings=NamedSharding(mesh, P(dp)))
+    return jit_fn, info
+
+
+def _greedy_pick(ctx: ATPContext, cfg: ModelConfig, logits):
+    """Vocab-parallel greedy argmax.  logits [b, V/d1] -> token ids [b]."""
+    v_loc = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    local_max = jnp.max(lf, axis=-1)
+    local_arg = jnp.argmax(lf, axis=-1).astype(jnp.int32) + ctx.index1() * v_loc
+    if ctx.ax1 is None:
+        return local_arg
+    gmax = lax.pmax(local_max, ctx.ax1)
+    cand = jnp.where(local_max >= gmax, local_arg, jnp.int32(2**30))
+    return lax.pmin(cand, ctx.ax1)
+
+
+def build_decode_step(cfg: ModelConfig, topo: MeshTopo, B: int, s_max: int,
+                      mesh: jax.sharding.Mesh | None = None,
+                      seq_in: int = 1):
+    """One decode step (seq_in>1 = prefill-into-cache for serving).
+
+    Signature: (params, tokens [B, seq_in], pos scalar, caches) ->
+    (next tokens [B], new caches)."""
+    mesh = mesh if mesh is not None else topo.build()
+    ctx = make_context(topo)
+    pspecs = lm.param_specs(cfg, ctx)
+    _, cache_specs = lm.init_decode_caches(cfg, ctx, B, s_max, abstract=True)
+    dp = _dp_axes_spec(topo) if (ctx.dp and B % ctx.dp == 0) else None
+    tspec = P(dp, None)
+
+    def local(params, tokens, pos, caches):
+        logits, new_caches = lm.decode_step(ctx, cfg, params, tokens, pos, caches)
+        return _greedy_pick(ctx, cfg, logits), new_caches
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(pspecs, tspec, P(), cache_specs),
+                   out_specs=(P(dp), cache_specs), check_vma=True)
+    info = StepInfo(mesh, ctx, pspecs, tspec, cache_specs=cache_specs)
+    jit_fn = jax.jit(
+        fn,
+        in_shardings=(info.sharding(pspecs), NamedSharding(mesh, tspec),
+                      NamedSharding(mesh, P()), info.sharding(cache_specs)),
+        out_shardings=(NamedSharding(mesh, P(dp)), info.sharding(cache_specs)),
+        donate_argnums=(3,))
+    return jit_fn, info

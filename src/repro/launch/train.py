@@ -1,0 +1,124 @@
+"""Training launcher: ATP strategy search -> mesh -> fault-tolerant loop.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+        --steps 200 --dp 2 --d1 2 --d2 2 --seq 128 --batch 8 [--auto-atp]
+
+Device count comes from the environment (single host: set
+XLA_FLAGS=--xla_force_host_platform_device_count=N before launch).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core import comm_matrix
+from repro.core.atp import make_context
+from repro.core.cost_model import LayerCommProfile
+from repro.core.mesh import atp_topo
+from repro.core.search import search_strategy
+from repro.data.pipeline import DataConfig, TokenSource
+from repro.launch.steps import build_train_step
+from repro.models import lm
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+log = logging.getLogger("repro.train")
+
+
+def comm_profile(cfg) -> LayerCommProfile:
+    """Generalized Eq.2 coefficients for this architecture's block."""
+    col = cfg.q_dim + 2 * cfg.kv_dim
+    ff_cols = 2 * cfg.d_ff if cfg.mlp_kind in ("swiglu", "geglu") else cfg.d_ff
+    col += ff_cols
+    row = 2 * cfg.d_model
+    return LayerCommProfile(float(col), float(row))
+
+
+def pick_strategy(cfg, tp: int, seq: int, batch: int, topology: str = "v5e"):
+    matrix = comm_matrix.PRESETS[topology]()
+    return search_strategy(matrix, tp, layers=cfg.num_layers, batch=batch,
+                           seq=seq, profile=comm_profile(cfg))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the tiny smoke config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--dp", type=int, default=2)
+    ap.add_argument("--d1", type=int, default=2)
+    ap.add_argument("--d2", type=int, default=1)
+    ap.add_argument("--auto-atp", action="store_true",
+                    help="pick (d1,d2) with the ATP search (paper §3.5)")
+    ap.add_argument("--topology", default="v5e", choices=list(comm_matrix.PRESETS))
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--opt-mode", default="zero1",
+                    choices=["plain", "zero1", "compressed"])
+    ap.add_argument("--chunks", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    d1, d2 = args.d1, args.d2
+    if args.auto_atp:
+        res = pick_strategy(cfg, d1 * d2, args.seq, args.batch, args.topology)
+        d1, d2 = res.mesh()
+        log.info("ATP search on %s picked DeviceMesh(%d, %d); ranking: %s",
+                 args.topology, d1, d2,
+                 [(c.d1, c.d2, round(c.t_comm * 1e3, 1)) for c in res.ranked])
+
+    topo = atp_topo(args.dp, d1, d2)
+    assert topo.size <= len(jax.devices()), \
+        f"need {topo.size} devices, have {len(jax.devices())}"
+    mesh = topo.build()
+    ctx = make_context(topo, chunks=args.chunks)
+
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, mode=args.opt_mode,
+                                total_steps=args.steps)
+    step_fn, info = build_train_step(cfg, topo, opt_cfg,
+                                     chunks=args.chunks, mesh=mesh)
+
+    source = TokenSource(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch))
+
+    def init_state():
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw.init_opt_state(params, info.pspecs, ctx, args.opt_mode)
+        params = jax.device_put(params, info.sharding(info.pspecs))
+        opt = jax.device_put(opt, info.sharding(info.ospecs))
+        return params, opt
+
+    def put_batch(host_batch):
+        return jax.device_put(
+            {k: jnp.asarray(v) for k, v in host_batch.items()},
+            info.sharding(info.bspecs))
+
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every),
+        build_step=lambda: step_fn,
+        source=source, init_state=init_state, put_batch=put_batch)
+    params, _ = trainer.run()
+    losses = [h["loss"] for h in trainer.history]
+    log.info("done: first loss %.4f -> last loss %.4f (%d steps)",
+             losses[0], losses[-1], len(losses))
+    return params
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,665 @@
+"""Unified language model: embedding -> block stacks -> head, ATP-sharded.
+
+Every architecture is expressed as a list of *segments*; each segment is a
+scan over `count` identical blocks with stacked params (compile-time
+compact HLO).  Segment kinds:
+
+  dense       GQA attention + MLP (all dense archs; gemma2 via window array)
+  moe         GQA attention + MoE FFN (dbrx)
+  mla_dense   MLA attention + dense MLP (deepseek first 3 layers)
+  mla_moe     MLA attention + MoE (deepseek)
+  zamba       super-block: shared attention block + 5 mamba2 blocks
+  mamba       plain mamba2 blocks (zamba tail)
+  xlstm       super-block: 7 mLSTM + 1 sLSTM
+
+All functions here run INSIDE shard_map (local shards + explicit
+collectives) except the init/spec helpers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.atp import ATPContext, atp_boundary, atp_linear, shard_slice
+from repro.models import layers as L
+from repro.models import mamba2, mla, moe, transformer, xlstm
+
+# ---------------------------------------------------------------------------
+# Segment plan.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str
+    count: int          # scan length
+    inner: int = 1      # blocks per scan step (zamba/xlstm super-blocks)
+
+
+def segments(cfg: ModelConfig) -> tuple[Segment, ...]:
+    if cfg.ssm is not None and cfg.ssm.slstm_every:          # xlstm
+        period = cfg.ssm.slstm_every
+        assert cfg.num_layers % period == 0
+        return (Segment("xlstm", cfg.num_layers // period, period),)
+    if cfg.ssm is not None and cfg.ssm.shared_attn_every:    # zamba2
+        per = cfg.ssm.shared_attn_every  # 1 shared attn + (per-1) mamba
+        n_super = cfg.num_layers // per
+        tail = cfg.num_layers - n_super * per
+        segs = [Segment("zamba", n_super, per)]
+        if tail:
+            segs.append(Segment("mamba", tail))
+        return tuple(segs)
+    if cfg.moe is not None:
+        segs = []
+        kind = "mla_moe" if cfg.mla is not None else "moe"
+        dense_kind = "mla_dense" if cfg.mla is not None else "dense"
+        if cfg.moe.first_dense_layers:
+            segs.append(Segment(dense_kind, cfg.moe.first_dense_layers))
+        segs.append(Segment(kind, cfg.num_layers - cfg.moe.first_dense_layers))
+        return tuple(segs)
+    return (Segment("dense", cfg.num_layers),)
+
+
+# ---------------------------------------------------------------------------
+# Per-kind params / specs / apply.
+# ---------------------------------------------------------------------------
+
+
+def _block_params(kind: str, key, cfg: ModelConfig, dtype):
+    if kind == "dense":
+        return transformer.dense_block_params(key, cfg, dtype)
+    if kind == "moe":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln_attn": L.norm_params(cfg, cfg.d_model),
+            "attn": transformer.attn_params(k1, cfg, dtype),
+            "ln_mlp": L.norm_params(cfg, cfg.d_model),
+            "moe": moe.moe_params(k2, cfg, dtype),
+        }
+    if kind == "mla_dense":
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln_attn": L.norm_params(cfg, cfg.d_model),
+            "mla": mla.mla_params(k1, cfg, dtype),
+            "ln_mlp": L.norm_params(cfg, cfg.d_model),
+            "mlp": transformer.mlp_params(k2, cfg, dtype),
+        }
+    if kind == "mla_moe":
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln_attn": L.norm_params(cfg, cfg.d_model),
+            "mla": mla.mla_params(k1, cfg, dtype),
+            "ln_mlp": L.norm_params(cfg, cfg.d_model),
+            "moe": moe.moe_params(k2, cfg, dtype),
+        }
+    if kind == "mamba":
+        return mamba2.mamba_params(key, cfg, dtype)
+    if kind == "zamba":
+        # stacked part: (per-1) mamba blocks per super-block
+        per = cfg.ssm.shared_attn_every
+        ks = jax.random.split(key, per - 1)
+        return {"mamba": jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[mamba2.mamba_params(k, cfg, dtype) for k in ks])}
+    if kind == "xlstm":
+        per = cfg.ssm.slstm_every
+        ks = jax.random.split(key, per)
+        ml = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[xlstm.mlstm_params(k, cfg, dtype) for k in ks[:-1]])
+        sl = xlstm.slstm_params(ks[-1], cfg, dtype)
+        return {"mlstm": ml, "slstm": sl}
+    raise ValueError(kind)
+
+
+def _block_specs(kind: str, ctx: ATPContext, cfg: ModelConfig):
+    nspec = {"scale": L.feat_spec(ctx)}
+    if cfg.norm_kind == "layernorm":
+        nspec["bias"] = L.feat_spec(ctx)
+    if kind == "dense":
+        return transformer.dense_block_specs(ctx, cfg)
+    if kind == "moe":
+        return {
+            "ln_attn": dict(nspec),
+            "attn": transformer.attn_param_specs(ctx, cfg),
+            "ln_mlp": dict(nspec),
+            "moe": moe.moe_param_specs(ctx, cfg),
+        }
+    if kind == "mla_dense":
+        return {
+            "ln_attn": dict(nspec),
+            "mla": mla.mla_param_specs(ctx, cfg),
+            "ln_mlp": dict(nspec),
+            "mlp": transformer.mlp_param_specs(ctx, cfg),
+        }
+    if kind == "mla_moe":
+        return {
+            "ln_attn": dict(nspec),
+            "mla": mla.mla_param_specs(ctx, cfg),
+            "ln_mlp": dict(nspec),
+            "moe": moe.moe_param_specs(ctx, cfg),
+        }
+    if kind == "mamba":
+        return mamba2.mamba_param_specs(ctx, cfg)
+    if kind == "zamba":
+        return {"mamba": _stack_specs(mamba2.mamba_param_specs(ctx, cfg))}
+    if kind == "xlstm":
+        return {"mlstm": _stack_specs(xlstm.mlstm_param_specs(ctx, cfg)),
+                "slstm": xlstm.slstm_param_specs(ctx, cfg)}
+    raise ValueError(kind)
+
+
+def _stack_specs(specs):
+    return jax.tree.map(lambda s: P(None, *s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _apply_block(kind: str, ctx, cfg, p, x, positions, plan, window, cache,
+                 emb0=None, shared=None):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "dense":
+        x, nc = transformer.dense_block(ctx, cfg, p, x, positions, plan,
+                                        layer_window=window, cache=cache)
+        return x, nc, aux
+    if kind == "moe":
+        h = L.norm(ctx, cfg, x, p["ln_attn"])
+        a, nc = transformer.attn_block(ctx, cfg, p["attn"], h, positions, plan,
+                                       layer_window=window, cache=cache)
+        x = x + a
+        h = L.norm(ctx, cfg, x, p["ln_mlp"])
+        m, aux = moe.moe_block(ctx, cfg, p["moe"], h)
+        return x + m, nc, aux
+    if kind in ("mla_dense", "mla_moe"):
+        h = L.norm(ctx, cfg, x, p["ln_attn"])
+        a, nc = mla.mla_block(ctx, cfg, p["mla"], h, positions, cache=cache)
+        x = x + a
+        h = L.norm(ctx, cfg, x, p["ln_mlp"])
+        if kind == "mla_dense":
+            m = transformer.mlp_block(ctx, cfg, p["mlp"], h)
+        else:
+            m, aux = moe.moe_block(ctx, cfg, p["moe"], h)
+        return x + m, nc, aux
+    if kind == "mamba":
+        x, ns = mamba2.mamba_block(ctx, cfg, p, x, state=cache)
+        return x, ns, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Full model params/specs.
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key, dtype=None) -> dict[str, Any]:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 16)
+    h = cfg.d_model
+    p: dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, h), jnp.float32)
+                  * 0.02).astype(dtype),
+        "final_norm": L.norm_params(cfg, h),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(keys[1], (h, cfg.vocab_size), jnp.float32)
+                        / math.sqrt(h)).astype(dtype)
+    for i, seg in enumerate(segments(cfg)):
+        ks = jax.random.split(keys[2 + i], seg.count)
+        p[f"seg{i}"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_block_params(seg.kind, k, cfg, dtype) for k in ks])
+    if any(s.kind == "zamba" for s in segments(cfg)):
+        k1, k2, k3 = jax.random.split(keys[14], 3)
+        # two separate [h, h] projections (a single [2h, h] would break the
+        # ax2 row sharding of the concatenated input)
+        p["shared_attn"] = {
+            "w_in_h": (jax.random.normal(k1, (h, h), jnp.float32)
+                       / math.sqrt(2 * h)).astype(dtype),
+            "w_in_e": (jax.random.normal(k3, (h, h), jnp.float32)
+                       / math.sqrt(2 * h)).astype(dtype),
+            "block": transformer.dense_block_params(k2, cfg, dtype),
+        }
+    if cfg.mtp:
+        k1, k2 = jax.random.split(keys[15])
+        p["mtp"] = {
+            "proj_h": (jax.random.normal(k1, (h, h), jnp.float32)
+                       / math.sqrt(2 * h)).astype(dtype),
+            "proj_e": (jax.random.normal(k2, (h, h), jnp.float32)
+                       / math.sqrt(2 * h)).astype(dtype),
+            "block": _block_params("mla_dense" if cfg.mla else "dense",
+                                   keys[13], cfg, dtype),
+            "norm": L.norm_params(cfg, h),
+        }
+    return p
+
+
+def param_specs(cfg: ModelConfig, ctx: ATPContext) -> dict[str, Any]:
+    sp: dict[str, Any] = {
+        "embed": L.embed_spec(ctx),
+        "final_norm": {"scale": L.feat_spec(ctx)},
+    }
+    if cfg.norm_kind == "layernorm":
+        sp["final_norm"]["bias"] = L.feat_spec(ctx)
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = P(ctx.ax2, ctx.ax1)  # rows over ax2, vocab over ax1
+    for i, seg in enumerate(segments(cfg)):
+        sp[f"seg{i}"] = _stack_specs(_block_specs(seg.kind, ctx, cfg))
+    if any(s.kind == "zamba" for s in segments(cfg)):
+        sp["shared_attn"] = {
+            "w_in_h": L.col_w_spec(ctx),
+            "w_in_e": L.col_w_spec(ctx),
+            "block": transformer.dense_block_specs(ctx, cfg),
+        }
+    if cfg.mtp:
+        sp["mtp"] = {
+            "proj_h": L.col_w_spec(ctx),
+            "proj_e": L.col_w_spec(ctx),
+            "block": _block_specs("mla_dense" if cfg.mla else "dense", ctx, cfg),
+            "norm": {"scale": L.feat_spec(ctx)},
+        }
+    return sp
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Decode caches: global shapes + PartitionSpecs per segment kind.
+# Replication (kv heads shared across r-group ranks, mLSTM conv) is stored
+# explicitly in the global array — memory honesty for the dry-run.
+# ---------------------------------------------------------------------------
+
+
+def _flat_axes(ctx: ATPContext):
+    return ctx.tp_axes if ctx.tp_axes else None
+
+
+def _attn_cache_shape(cfg: ModelConfig, ctx: ATPContext, B: int, s_max: int):
+    plan = L.make_attn_plan(ctx, cfg.num_heads, cfg.num_kv_heads)
+    banks = ctx.tp * plan.kv_count
+    return (B, s_max, banks, cfg.hd)
+
+
+def init_decode_caches(cfg: ModelConfig, ctx: ATPContext, B: int, s_max: int,
+                       dtype=jnp.bfloat16, abstract: bool = False):
+    """Returns (caches, specs): per-segment stacked cache trees (GLOBAL
+    shapes) and matching PartitionSpecs for shard_map."""
+    n = ctx.tp
+    # batch < DP degree (long_500k: B=1): replicate over the data axes —
+    # DP ranks are idle for single-stream long-context decode
+    dp_ok = ctx.dp_axes and B % ctx.dp == 0
+    data_ax = ctx.dp_axes if dp_ok else None
+    flat = _flat_axes(ctx)
+
+    def arr(shape, dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    def attn_cache(count):
+        shape = (count,) + _attn_cache_shape(cfg, ctx, B, s_max)
+        c = {"k": arr(shape, dtype), "v": arr(shape, dtype),
+             "len": arr((count,), jnp.int32)}
+        sp = {"k": P(None, data_ax, None, flat, None),
+              "v": P(None, data_ax, None, flat, None),
+              "len": P(None)}
+        return c, sp
+
+    def mla_cache(count):
+        m = cfg.mla
+        c = {"ckv": arr((count, B, s_max, m.kv_lora_rank), dtype),
+             "krope": arr((count, B, s_max, m.qk_rope_head_dim), dtype),
+             "len": arr((count,), jnp.int32)}
+        sp = {"ckv": P(None, data_ax, None, None),
+              "krope": P(None, data_ax, None, None),
+              "len": P(None)}
+        return c, sp
+
+    def mamba_cache(count):
+        d_inner, nheads = mamba2.mamba_dims(cfg)
+        k = cfg.ssm.conv_kernel
+        c = {"conv_x": arr((count, B, k - 1, d_inner), dtype),
+             "conv_bc": arr((count, B, k - 1, 2 * cfg.ssm.d_state), dtype),
+             "ssd": arr((count, B, nheads, cfg.ssm.head_dim, cfg.ssm.d_state),
+                        jnp.float32)}
+        sp = {"conv_x": P(None, data_ax, None, flat),
+              "conv_bc": P(None, data_ax, None, None),
+              "ssd": P(None, data_ax, flat, None, None)}
+        return c, sp
+
+    def mlstm_cache(count):
+        d_inner, nh, dk, dv = xlstm.mlstm_dims(cfg)
+        g, r = xlstm.mlstm_plan(ctx, cfg)
+        k = cfg.ssm.conv_kernel
+        # conv state channels are flat-sharded (v2 head-major layout)
+        c = {"conv": arr((count, B, k - 1, d_inner), dtype),
+             "C": arr((count, B, n, nh // g, dk, dv // r + 1), jnp.float32)}
+        sp = {"conv": P(None, data_ax, None, flat),
+              "C": P(None, data_ax, flat, None, None, None)}
+        return c, sp
+
+    def slstm_cache(count):
+        nh, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+        c = {k2: arr((count, B, nh, dh), jnp.float32) for k2 in ("c", "n", "h")}
+        sp = {k2: P(None, data_ax, None, None) for k2 in ("c", "n", "h")}
+        return c, sp
+
+    caches, specs = {}, {}
+    for i, seg in enumerate(segments(cfg)):
+        if seg.kind in ("dense", "moe"):
+            caches[f"seg{i}"], specs[f"seg{i}"] = attn_cache(seg.count)
+        elif seg.kind in ("mla_dense", "mla_moe"):
+            caches[f"seg{i}"], specs[f"seg{i}"] = mla_cache(seg.count)
+        elif seg.kind == "mamba":
+            caches[f"seg{i}"], specs[f"seg{i}"] = mamba_cache(seg.count)
+        elif seg.kind == "zamba":
+            ac, asp = attn_cache(seg.count)
+            mc, msp = mamba_cache(seg.count)
+            mc = jax.tree.map(
+                lambda x: (jax.ShapeDtypeStruct(
+                    (x.shape[0], seg.inner - 1) + x.shape[1:], x.dtype)
+                    if abstract else
+                    jnp.zeros((x.shape[0], seg.inner - 1) + x.shape[1:], x.dtype)),
+                mc)
+            msp = jax.tree.map(lambda s: P(None, *s), msp,
+                               is_leaf=lambda x: isinstance(x, P))
+            caches[f"seg{i}"] = {"attn": ac, "mamba": mc}
+            specs[f"seg{i}"] = {"attn": asp, "mamba": msp}
+        elif seg.kind == "xlstm":
+            mc, msp = mlstm_cache(seg.count)
+            mc = jax.tree.map(
+                lambda x: (jax.ShapeDtypeStruct(
+                    (x.shape[0], seg.inner - 1) + x.shape[1:], x.dtype)
+                    if abstract else
+                    jnp.zeros((x.shape[0], seg.inner - 1) + x.shape[1:], x.dtype)),
+                mc)
+            msp = jax.tree.map(lambda s: P(None, *s), msp,
+                               is_leaf=lambda x: isinstance(x, P))
+            sc, ssp = slstm_cache(seg.count)
+            caches[f"seg{i}"] = {"mlstm": mc, "slstm": sc}
+            specs[f"seg{i}"] = {"mlstm": msp, "slstm": ssp}
+    return caches, specs
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss (vocab-parallel over ax1, feature over ax2).
+# ---------------------------------------------------------------------------
+
+
+def _gather_ax1_invariant(ctx: ATPContext, u):
+    """Gather an ax1-sharded feature dim to full width with a provably
+    ax1-invariant result (place + psum; all_gather output cannot be typed
+    invariant under vma — see DESIGN.md)."""
+    if ctx.ax1 is None:
+        return u
+    full = u.shape[-1] * ctx.d1
+    placed = jnp.zeros(u.shape[:-1] + (full,), u.dtype)
+    placed = lax.dynamic_update_slice_in_dim(
+        placed, u, ctx.index1() * u.shape[-1], axis=u.ndim - 1)
+    return lax.psum(placed, ctx.ax1)
+
+
+def embed_tokens(ctx: ATPContext, cfg: ModelConfig, emb, tokens):
+    """emb local [V/d1, h/d2]; tokens [b, s] -> x [b, s, h/d2]."""
+    v_loc = emb.shape[0]
+    rel = tokens - ctx.index1() * v_loc
+    ok = (rel >= 0) & (rel < v_loc)
+    safe = jnp.clip(rel, 0, v_loc - 1)
+    x = jnp.take(emb, safe, axis=0) * ok[..., None].astype(emb.dtype)
+    x = atp_boundary(x, ctx.ax1)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def lm_logits(ctx: ATPContext, cfg: ModelConfig, params, x):
+    """x [b, s, h/d2] -> logits [b, s, V/d1] (ax2-replicated)."""
+    if cfg.tie_embeddings:
+        w = params["embed"].T  # [h/d2, V/d1] local (embed is [V/d1, h/d2])
+    else:
+        w = params["lm_head"]
+    logits = atp_boundary(jnp.einsum("...k,kn->...n", x, w), ctx.ax2)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+def vocab_parallel_ce(ctx: ATPContext, logits, labels, ignore: int = -1):
+    """logits [b, s, V/d1] local; labels [b, s] global ids.
+
+    Returns per-token loss [b, s] (invariant over TP axes)."""
+    lf = logits.astype(jnp.float32)
+    v_loc = lf.shape[-1]
+    zmax = jnp.max(lax.stop_gradient(lf), axis=-1)
+    if ctx.ax1 is not None:
+        zmax = lax.pmax(zmax, ctx.ax1)
+    sumexp = jnp.sum(jnp.exp(lf - zmax[..., None]), axis=-1)
+    sumexp = atp_boundary(sumexp, ctx.ax1)
+    lse = jnp.log(sumexp) + zmax
+    rel = labels - ctx.index1() * v_loc
+    ok = (rel >= 0) & (rel < v_loc)
+    safe = jnp.clip(rel, 0, v_loc - 1)
+    picked = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    picked = atp_boundary(picked * ok.astype(jnp.float32), ctx.ax1)
+    loss = lse - picked
+    return jnp.where(labels == ignore, 0.0, loss)
+
+
+# ---------------------------------------------------------------------------
+# Forward (inside shard_map).
+# ---------------------------------------------------------------------------
+
+
+def _gemma_window_array(cfg: ModelConfig, count: int):
+    """Per-layer sliding window sizes (0 = global) for alternating archs."""
+    if not cfg.local_global_period:
+        return jnp.zeros((count,), jnp.int32)
+    pat = [cfg.local_window if i % cfg.local_global_period == 0 else 0
+           for i in range(count)]
+    return jnp.asarray(pat, jnp.int32)
+
+
+def forward(
+    ctx: ATPContext,
+    cfg: ModelConfig,
+    params,
+    tokens,                 # [b, s] int32, or None when embeds given
+    positions,              # [b, s] ([3, b, s] for M-RoPE)
+    embeds=None,            # [b, s, h/d2] (vision frontend stub)
+    caches=None,            # decode: per-segment stacked cache trees
+    remat: bool = False,
+):
+    """Returns (hidden [b, s, h/d2], new_caches, aux_sum, x_emb0)."""
+    if embeds is not None:
+        x = embeds
+    else:
+        x = embed_tokens(ctx, cfg, params["embed"], tokens)
+    x_emb0 = x
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None and ctx.dp_axes:
+        # MoE aux loss varies with this rank's tokens -> type it varying
+        # over the data axes so the scan carry is consistent
+        aux_total = lax.pcast(aux_total, ctx.dp_axes, to="varying")
+    new_caches = {} if caches is not None else None
+
+    b_loc = x.shape[0]
+    plan = (L.make_attn_plan(ctx, cfg.num_heads, cfg.num_kv_heads)
+            if cfg.family != "ssm" else None)
+
+    for i, seg in enumerate(segments(cfg)):
+        sp = params[f"seg{i}"]
+        seg_cache = caches.get(f"seg{i}") if caches is not None else None
+
+        if seg.kind in ("dense", "moe", "mla_dense", "mla_moe", "mamba"):
+            windows = _gemma_window_array(cfg, seg.count)
+
+            def body(carry, xs, _kind=seg.kind):
+                h, aux = carry
+                bp, win, c = xs
+                h, nc, a = _apply_block(_kind, ctx, cfg, bp, h, positions,
+                                        plan, win, c)
+                return (h, aux + a), nc
+
+            fn = jax.checkpoint(body) if remat else body
+            (x, aux_total), ncs = lax.scan(
+                fn, (x, aux_total), (sp, windows, seg_cache))
+            if new_caches is not None:
+                new_caches[f"seg{i}"] = ncs
+
+        elif seg.kind == "zamba":
+            shared = params["shared_attn"]
+
+            def zbody(carry, xs):
+                h, aux = carry
+                bp, c = xs
+                # shared attention block on (h, emb0): two column-first
+                # projections sharing one f-boundary psum(ax2)
+                u = atp_boundary(
+                    jnp.einsum("...k,kn->...n", h, shared["w_in_h"])
+                    + jnp.einsum("...k,kn->...n", x_emb0, shared["w_in_e"]),
+                    ctx.ax2)                      # [.., h/d1] ax1-sharded
+                u = _gather_ax1_invariant(ctx, u)  # back to block I/O spec
+                if ctx.ax2 is not None:
+                    u = shard_slice(u, ctx.index2(), ctx.d2, dim=-1)
+                ac = c["attn"] if c is not None else None
+                h2, nac = transformer.dense_block(ctx, cfg, shared["block"], h + u,
+                                                  positions, plan, cache=ac)
+                h = h2
+
+                def mbody(hc, xs2):
+                    hh = hc
+                    mp, mc = xs2
+                    hh, nmc = mamba2.mamba_block(ctx, cfg, mp, hh, state=mc)
+                    return hh, nmc
+
+                mc = c["mamba"] if c is not None else None
+                h, nmc = lax.scan(mbody, h, (bp["mamba"], mc))
+                ncs = {"attn": nac, "mamba": nmc} if c is not None else 0.0
+                return (h, aux), ncs
+
+            fn = jax.checkpoint(zbody) if remat else zbody
+            (x, aux_total), ncs = lax.scan(fn, (x, aux_total), (sp, seg_cache))
+            if new_caches is not None:
+                new_caches[f"seg{i}"] = ncs
+
+        elif seg.kind == "xlstm":
+            def xbody(carry, xs):
+                h, aux = carry
+                bp, c = xs
+
+                def mb(hc, xs2):
+                    mp, mc = xs2
+                    hh, ns = xlstm.mlstm_block(ctx, cfg, mp, hc, state=mc)
+                    return hh, ns
+
+                mc = c["mlstm"] if c is not None else None
+                h, nms = lax.scan(mb, h, (bp["mlstm"], mc))
+                sc = c["slstm"] if c is not None else None
+                h, nss = xlstm.slstm_block(ctx, cfg, bp["slstm"], h, state=sc)
+                ncs = {"mlstm": nms, "slstm": nss} if c is not None else 0.0
+                return (h, aux), ncs
+
+            fn = jax.checkpoint(xbody) if remat else xbody
+            (x, aux_total), ncs = lax.scan(fn, (x, aux_total), (sp, seg_cache))
+            if new_caches is not None:
+                new_caches[f"seg{i}"] = ncs
+        else:
+            raise ValueError(seg.kind)
+
+    x = L.norm(ctx, cfg, x, params["final_norm"])
+    return x, new_caches, aux_total, x_emb0
+
+
+def train_loss(ctx: ATPContext, cfg: ModelConfig, params, batch, remat=True):
+    """batch: tokens [b,s], labels [b,s] (+ embeds/positions3).  Scalar loss."""
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    if cfg.mrope_sections:
+        positions = batch["positions3"]
+        b, s = positions.shape[1], positions.shape[2]
+    else:
+        ref = tokens if tokens is not None else embeds
+        b, s = ref.shape[0], ref.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    h, _, aux, x_emb0 = forward(ctx, cfg, params, tokens, positions,
+                                embeds=embeds, remat=remat)
+    logits = lm_logits(ctx, cfg, params, h)
+    per_tok = vocab_parallel_ce(ctx, logits, batch["labels"])
+    total = jnp.sum(per_tok)
+    count = jnp.asarray(per_tok.size, jnp.float32)
+    if ctx.dp_axes:
+        total = lax.psum(total, ctx.dp_axes)
+        count = lax.psum(count, ctx.dp_axes)
+    loss = total / count
+
+    if cfg.mtp and tokens is not None:
+        # multi-token prediction: predict t+2 from (h_t, emb(t+1))
+        mp = params["mtp"]
+        emb_next = embed_tokens(ctx, cfg, params["embed"],
+                                jnp.roll(tokens, -1, axis=1))
+        u = atp_boundary(
+            jnp.einsum("...k,kn->...n", h, mp["proj_h"])
+            + jnp.einsum("...k,kn->...n", emb_next, mp["proj_e"]), ctx.ax2)
+        if ctx.ax1 is not None:  # back to [.., h/d2] block I/O spec
+            u = lax.all_gather(u, ctx.ax1, axis=-1, tiled=True)
+        u = shard_slice(u, ctx.index2(), ctx.d2, dim=-1) if ctx.ax2 is not None else u
+        plan = L.make_attn_plan(ctx, cfg.num_heads, cfg.num_kv_heads)
+        u, _, _ = _apply_block("mla_dense" if cfg.mla else "dense",
+                               ctx, cfg, mp["block"], u, positions, plan, 0, None)
+        u = L.norm(ctx, cfg, u, mp["norm"])
+        logits2 = lm_logits(ctx, cfg, params, u)
+        mtp_labels = jnp.roll(batch["labels"], -1, axis=1)
+        l2 = jnp.sum(vocab_parallel_ce(ctx, logits2, mtp_labels))
+        if ctx.dp_axes:
+            l2 = lax.psum(l2, ctx.dp_axes)
+        loss = loss + cfg.mtp_loss_weight * l2 / count
+
+    if cfg.moe is not None:
+        if ctx.dp_axes:
+            aux = lax.pmean(aux, ctx.dp_axes)
+        loss = loss + cfg.moe.aux_loss_weight * aux / max(1, cfg.num_layers)
+    return loss
+
+
+def prefill_logits(ctx: ATPContext, cfg: ModelConfig, params, batch):
+    """Forward only; returns last-position logits [b, V/d1]."""
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    if cfg.mrope_sections:
+        positions = batch["positions3"]
+        b, s = positions.shape[1], positions.shape[2]
+    else:
+        ref = tokens if tokens is not None else embeds
+        b, s = ref.shape[0], ref.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    h, _, _, _ = forward(ctx, cfg, params, tokens, positions, embeds=embeds)
+    logits = lm_logits(ctx, cfg, params, h[:, -1:])
+    return logits[:, 0]
+
+
+def decode_step(ctx: ATPContext, cfg: ModelConfig, params, tokens, pos, caches):
+    """One token step.  tokens [b,1]; pos scalar; caches per-segment trees.
+
+    Returns (next-token logits [b, V/d1], new caches)."""
+    b, s = tokens.shape
+    prange = (pos + jnp.arange(s)).astype(jnp.int32)
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(prange[None, None, :], (3, b, s))
+    else:
+        positions = jnp.broadcast_to(prange[None, :], (b, s))
+    h, new_caches, _, _ = forward(ctx, cfg, params, tokens, positions,
+                                  caches=caches)
+    logits = lm_logits(ctx, cfg, params, h[:, -1:])
+    return logits[:, 0], new_caches

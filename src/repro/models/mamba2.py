@@ -1,0 +1,239 @@
+"""Mamba2 (SSD) block, ATP-sharded, with chunked scan.
+
+Sharding (DESIGN.md §5): SSD heads shard embarrassingly over the flat
+d1*d2 TP ranks (no contraction over a sharded dim inside the recurrence);
+ATP applies to the in/out projections:
+  - z/x projection: column-first over ax1, d2 sub-slice per rank
+  - B/C/dt projection: replicated output (rows over ax2, psum(ax2)) —
+    B/C are shared across heads (single group), dt sliced per head block
+  - out projection: row-first (f2-style psum(ax1))
+
+The chunked scan (`ssd_chunked`) is the pure-jnp oracle for the Pallas
+kernel in kernels/ssd_scan.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.atp import ATPContext, atp_boundary, atp_linear, shard_slice
+from repro.models import layers as L
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def mamba_dims(cfg: ModelConfig):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    nheads = d_inner // sc.head_dim
+    return d_inner, nheads
+
+
+def mamba_params(key, cfg: ModelConfig, dtype) -> dict[str, Any]:
+    sc = cfg.ssm
+    h = cfg.d_model
+    d_inner, nheads = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(h)
+    return {
+        "w_z": _init(ks[0], (h, d_inner), s, dtype),
+        "w_x": _init(ks[4], (h, d_inner), s, dtype),
+        "w_bcdt": _init(ks[1], (h, 2 * sc.d_state + nheads), s, dtype),
+        "conv": _init(ks[2], (sc.conv_kernel, d_inner + 2 * sc.d_state), 0.5, jnp.float32),
+        "A_log": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "w_out": _init(ks[3], (d_inner, h), 1.0 / math.sqrt(d_inner), dtype),
+        "ln": jnp.ones((h,), jnp.float32),
+        "gn": jnp.ones((d_inner,), jnp.float32),  # grouped RMSNorm pre-out
+    }
+
+
+def mamba_param_specs(ctx: ATPContext, cfg: ModelConfig) -> dict[str, Any]:
+    return {
+        "w_z": L.col_w_spec(ctx),
+        "w_x": L.col_w_spec(ctx),
+        "w_bcdt": P(ctx.ax2, None),
+        "conv": P(None, None),       # xin channels sliced locally below
+        "A_log": L.replicated_spec(),
+        "D": L.replicated_spec(),
+        "dt_bias": L.replicated_spec(),
+        "w_out": L.row_w_spec(ctx),
+        "ln": L.feat_spec(ctx),
+        "gn": L.replicated_spec(),   # sliced per-rank channels locally
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv1d.  x: [b, s, c]; w: [k, c].
+
+    state (decode): [b, k-1, c] previous inputs; returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    windows = jnp.stack([pad[:, i: i + x.shape[1]] for i in range(k)], axis=-1)
+    y = jnp.einsum("bsck,kc->bsc", windows, w.astype(x.dtype))
+    new_state = pad[:, -(k - 1):] if k > 1 else None
+    return y, new_state
+
+
+def ssd_chunked(x, dt, A_log, B, C, D, chunk: int, state_in=None):
+    """Chunked selective-state-space scan (SSD).
+
+    x:  [b, s, nh, hd]   inputs (already gated/conv'd)
+    dt: [b, s, nh]       softplus'd step sizes
+    A_log: [nh]          per-head decay (A = -exp(A_log))
+    B, C: [b, s, ds]     input/output projections (single group)
+    D: [nh]              skip
+    state_in: [b, nh, hd, ds] initial state (decode/continuation)
+
+    Returns (y [b, s, nh, hd], state_out [b, nh, hd, ds]).
+    Pure-jnp oracle for kernels/ssd_scan.py.
+    """
+    b, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    nc = max(1, s // chunk)
+    cl = s // nc
+    A = -jnp.exp(A_log.astype(jnp.float32))                     # [nh]
+    dt = dt.astype(jnp.float32)
+    dA = dt * A                                                  # [b, s, nh]
+    xr = x.reshape(b, nc, cl, nh, hd).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, cl, nh)
+    dAr = dA.reshape(b, nc, cl, nh)
+    Br = B.reshape(b, nc, cl, ds).astype(jnp.float32)
+    Cr = C.reshape(b, nc, cl, ds).astype(jnp.float32)
+
+    la = jnp.cumsum(dAr, axis=2)                                 # [b,nc,cl,nh]
+    # intra-chunk: y[t] = sum_{u<=t} exp(la[t]-la[u]) dt[u] (C_t.B_u) x[u]
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]            # [b,nc,t,u,nh]
+    causal = jnp.tril(jnp.ones((cl, cl), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bntd,bnud->bntu", Cr, Br)                   # [b,nc,t,u]
+    w = cb[..., None] * decay * dtr[:, :, None, :, :]            # [b,nc,t,u,nh]
+    y_intra = jnp.einsum("bntuh,bnuhd->bnthd", w, xr)
+
+    # chunk summaries: S_n = sum_u exp(la[end]-la[u]) dt[u] x[u] B_u^T
+    dec_end = jnp.exp(la[:, :, -1:, :] - la)                     # [b,nc,cl,nh]
+    contrib = xr * (dtr * dec_end)[..., None]                    # [b,nc,cl,nh,hd]
+    S = jnp.einsum("bnuhd,bnus->bnhds", contrib, Br)             # [b,nc,nh,hd,ds]
+
+    # inter-chunk scan: state_{n} = state_{n-1} * exp(la_end_n) + S_n
+    gain = jnp.exp(la[:, :, -1, :])                              # [b,nc,nh]
+
+    def step(carry, inp):
+        S_n, g_n = inp
+        new = carry * g_n[:, :, None, None] + S_n
+        return new, carry  # emit the state *entering* chunk n
+
+    Sm = jnp.moveaxis(S, 1, 0)
+    # zeros_like keeps the vma type of S (varying over the right mesh axes)
+    init = (jnp.zeros_like(Sm[0]) if state_in is None
+            else state_in.astype(jnp.float32))
+    state_out, entering = lax.scan(step, init, (Sm, jnp.moveaxis(gain, 1, 0)))
+    entering = jnp.moveaxis(entering, 0, 1)                      # [b,nc,nh,hd,ds]
+
+    # cross-chunk: y_cross[t] = exp(la[t]) * C_t . state_in^T
+    y_cross = jnp.einsum("bnts,bnhds->bnthd", Cr, entering) * jnp.exp(la)[..., None]
+    y = (y_intra + y_cross).reshape(b, s, nh, hd)
+    y = y + D[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state_out
+
+
+def ssd_step(x, dt, A_log, B, C, D, state):
+    """Single-token decode step.  x: [b, 1, nh, hd]; state [b, nh, hd, ds]."""
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dtf = dt[:, 0].astype(jnp.float32)                           # [b, nh]
+    g = jnp.exp(dtf * A)                                         # [b, nh]
+    xf = x[:, 0].astype(jnp.float32)
+    upd = jnp.einsum("bhd,bs->bhds", xf * dtf[..., None], B[:, 0].astype(jnp.float32))
+    new_state = state.astype(jnp.float32) * g[:, :, None, None] + upd
+    y = jnp.einsum("bhds,bs->bhd", new_state, C[:, 0].astype(jnp.float32))
+    y = y + D[None, :, None] * xf
+    return y[:, None].astype(x.dtype), new_state
+
+
+def _group_rmsnorm(y, gamma, eps=1e-6):
+    """RMSNorm over each head's channels (y: [b, s, nh, hd])."""
+    yf = y.astype(jnp.float32)
+    inv = lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + eps)
+    return (yf * inv * gamma).astype(y.dtype)
+
+
+def mamba_block(ctx: ATPContext, cfg: ModelConfig, p, x, state=None):
+    """x: [b, s, h/d2] -> (same spec, new_state or None).
+
+    state (decode): dict(conv=[b,k-1,c_loc], ssd=[b,nh_loc,hd,ds]).
+    """
+    sc = cfg.ssm
+    d_inner, nheads = mamba_dims(cfg)
+    n = ctx.tp
+    assert nheads % n == 0, "mamba heads must divide flat TP"
+    nh_loc = nheads // n
+    hd = sc.head_dim
+    i2, flat = ctx.index2(), ctx.tp_index()
+
+    h_in = L.rms_norm(ctx, x, p["ln"], cfg.norm_eps)
+
+    # z/x projections: column-first over ax1 (one fused boundary), then split
+    # per part *before* the d2 sub-slice so shard boundaries stay part-aligned
+    w_cat = jnp.concatenate([p["w_z"], p["w_x"]], axis=1)
+    zx = atp_boundary(jnp.einsum("...k,kn->...n", h_in, w_cat), ctx.ax2)
+    z, xin = jnp.split(zx, 2, axis=-1)                  # each [b, s, d_inner/d1]
+    z = shard_slice(z, i2, ctx.d2, dim=-1)              # [b, s, d_inner/n]
+    xin = shard_slice(xin, i2, ctx.d2, dim=-1)
+
+    # B/C/dt: replicated output via psum(ax2)
+    bcdt = atp_boundary(jnp.einsum("...k,kn->...n", h_in, p["w_bcdt"]), ctx.ax2)
+    B = bcdt[..., : sc.d_state]
+    C = bcdt[..., sc.d_state: 2 * sc.d_state]
+    dt_all = bcdt[..., 2 * sc.d_state:]                 # [b, s, nheads]
+    dt = shard_slice(dt_all, flat, n, dim=-1)           # [b, s, nh_loc]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + shard_slice(p["dt_bias"], flat, n, 0))
+
+    # causal conv on (xin | B | C); xin channels are this rank's slice
+    conv_x = shard_slice(p["conv"][:, : d_inner], flat, n, dim=1)
+    conv_bc = p["conv"][:, d_inner:]
+    cs_x = state["conv_x"] if state is not None else None
+    cs_bc = state["conv_bc"] if state is not None else None
+    xin_c, ns_x = _causal_conv(xin, conv_x, cs_x)
+    bc_c, ns_bc = _causal_conv(jnp.concatenate([B, C], -1), conv_bc, cs_bc)
+    xin_c = jax.nn.silu(xin_c)
+    bc_c = jax.nn.silu(bc_c)
+    B_c, C_c = jnp.split(bc_c, 2, axis=-1)
+
+    xh = xin_c.reshape(xin_c.shape[0], xin_c.shape[1], nh_loc, hd)
+    A_log = shard_slice(p["A_log"], flat, n, 0)
+    D = shard_slice(p["D"], flat, n, 0)
+
+    if state is None:
+        y, _ = ssd_chunked(xh, dt, A_log, B_c, C_c, D, sc.chunk)
+        new_state = None
+    else:
+        if xh.shape[1] == 1:
+            y, ssd_new = ssd_step(xh, dt, A_log, B_c, C_c, D, state["ssd"])
+        else:  # prefill-into-state
+            y, ssd_new = ssd_chunked(xh, dt, A_log, B_c, C_c, D, sc.chunk,
+                                     state_in=state["ssd"])
+        new_state = {"conv_x": ns_x, "conv_bc": ns_bc,
+                     "ssd": ssd_new.astype(state["ssd"].dtype)}
+
+    gn = shard_slice(p["gn"], flat, n, 0).reshape(nh_loc, hd)
+    y = _group_rmsnorm(y, gn)
+    y = y.reshape(y.shape[0], y.shape[1], nh_loc * hd)
+    y = y * jax.nn.silu(z)
+
+    # gather heads over ax2 back to ax1-sharded layout for row-first out proj
+    if ctx.ax2 is not None:
+        y = lax.all_gather(y, ctx.ax2, axis=-1, tiled=True)
+    out = atp_linear(ctx, y, p["w_out"], kind="row")
+    return x + out, new_state

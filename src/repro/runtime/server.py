@@ -1,0 +1,87 @@
+"""Batched inference server loop: continuous prefill + decode scheduling.
+
+Single-host reference implementation of the serving pattern the dry-run
+shapes exercise (prefill_32k / decode_32k): a request queue, a fixed
+decode batch with slot recycling, greedy sampling.  Prefill currently
+processes one request per admission at its natural length (padded to the
+slot seq budget); decode advances all active slots one token per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [s] int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    batch_slots: int = 4
+    max_seq: int = 128
+
+
+class Server:
+    """Drives (prefill_fn, decode_fn) over a request stream.
+
+    prefill_fn(tokens [1, s]) -> (next_token [1], caches-delta for slot)
+    decode_fn(tokens [B, 1], pos, caches) -> (next [B], caches)
+
+    The cache plumbing is intentionally slot-batched: caches hold
+    `batch_slots` sequences; prefill writes one slot, decode advances all.
+    """
+
+    def __init__(self, cfg: ServerConfig, prefill_fn: Callable,
+                 decode_fn: Callable, init_caches: Callable[[], Any]):
+        self.cfg = cfg
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.caches = init_caches()
+        self.slots: list[Request | None] = [None] * cfg.batch_slots
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                req = self.queue.pop(0)
+                first, self.caches = self.prefill_fn(req.prompt, i, self.caches)
+                req.out.append(int(first))
+                self.slots[i] = req
+
+    def step(self):
+        """One scheduler tick: admit then advance decode one token."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return False
+        tokens = np.zeros((self.cfg.batch_slots, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].out[-1]
+        nxt, self.caches = self.decode_fn(tokens, self.caches)
+        for i in active:
+            req = self.slots[i]
+            req.out.append(int(nxt[i]))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.completed.append(req)
+                self.slots[i] = None
+        return True
+
+    def run_until_drained(self, max_ticks: int = 1000):
+        ticks = 0
+        while (self.queue or any(self.slots)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return ticks

@@ -1,0 +1,130 @@
+"""Fault-tolerant training loop: checkpoint/restart, failure recovery,
+straggler watchdog, deterministic data replay.
+
+Hardware failures on a real pod surface as raised exceptions from the jit'd
+step (XLA device errors).  The loop's contract:
+
+  - every step is a pure function of (params, opt_state, batch(step))
+  - batches are pure functions of (seed, step)   -> replay is exact
+  - on failure: restore last committed checkpoint, rebuild the step
+    (possibly on a new mesh — elastic), continue from ckpt step
+  - stragglers: per-step wall time is tracked with an EMA; a step slower
+    than `straggler_factor` x EMA fires the mitigation hook (on a real
+    cluster: re-shard away from the slow host / preemptively checkpoint)
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+from repro.data.pipeline import TokenSource
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    max_failures: int = 3
+    straggler_factor: float = 3.0
+    ema_beta: float = 0.9
+    log_every: int = 10
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    factor: float = 3.0
+    beta: float = 0.9
+    ema: float | None = None
+    events: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step is flagged as a straggler."""
+        if self.ema is None:
+            self.ema = dt
+            return False
+        flagged = dt > self.factor * self.ema and self.ema > 0
+        if flagged:
+            self.events.append((step, dt, self.ema))
+        else:
+            # only fold non-outlier steps into the EMA
+            self.ema = self.beta * self.ema + (1 - self.beta) * dt
+        return flagged
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: TrainerConfig,
+        build_step: Callable[[], Callable],  # returns jitted train_step
+        source: TokenSource,
+        init_state: Callable[[], tuple[Any, Any]],  # -> (params, opt_state)
+        put_batch: Callable[[dict], Any],    # host batch -> device arrays
+        mitigation_hook: Callable[[int], None] | None = None,
+        time_fn: Callable[[], float] = time.monotonic,
+    ):
+        self.cfg = cfg
+        self.build_step = build_step
+        self.source = source
+        self.init_state = init_state
+        self.put_batch = put_batch
+        self.watchdog = StragglerWatchdog(cfg.straggler_factor, cfg.ema_beta)
+        self.mitigation_hook = mitigation_hook or (lambda step: None)
+        self.time_fn = time_fn
+        self.failures = 0
+        self.history: list[dict] = []
+
+    def _restore_or_init(self):
+        step = ckpt.latest_step(self.cfg.ckpt_dir)
+        params, opt_state = self.init_state()
+        if step is not None:
+            (params, opt_state), meta = ckpt.restore(
+                self.cfg.ckpt_dir, (params, opt_state))
+            log.info("restored checkpoint at step %d", meta["step"])
+            return params, opt_state, meta["step"]
+        return params, opt_state, 0
+
+    def run(self, fail_injector: Callable[[int], None] | None = None):
+        train_step = self.build_step()
+        params, opt_state, start = self._restore_or_init()
+        step = start
+        while step < self.cfg.total_steps:
+            try:
+                if fail_injector is not None:
+                    fail_injector(step)
+                batch = self.put_batch(self.source.global_batch(step))
+                t0 = self.time_fn()
+                params, opt_state, metrics = train_step(params, opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = self.time_fn() - t0
+                if self.watchdog.observe(step, dt):
+                    log.warning("straggler at step %d (%.3fs vs EMA %.3fs)",
+                                step, dt, self.watchdog.ema)
+                    self.mitigation_hook(step)
+                self.history.append({"step": step, "loss": loss, "dt": dt})
+                if step % self.cfg.log_every == 0:
+                    log.info("step %d loss %.4f (%.3fs)", step, loss, dt)
+                step += 1
+                if step % self.cfg.ckpt_every == 0 or step == self.cfg.total_steps:
+                    ckpt.save(self.cfg.ckpt_dir, step, (params, opt_state))
+                    ckpt.prune(self.cfg.ckpt_dir, self.cfg.keep_ckpts)
+            except (RuntimeError, jax.errors.JaxRuntimeError) as e:
+                self.failures += 1
+                log.error("step %d failed (%s); recovering (%d/%d)",
+                          step, e, self.failures, self.cfg.max_failures)
+                if self.failures > self.cfg.max_failures:
+                    raise
+                # full recovery path: rebuild step (fresh executables /
+                # possibly a new mesh) + restore last committed state
+                train_step = self.build_step()
+                params, opt_state, step = self._restore_or_init()
+        return params, opt_state

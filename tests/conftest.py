@@ -1,0 +1,30 @@
+"""Shared fixtures.  Tests that need a multi-device mesh run in a subprocess
+spawned with XLA_FLAGS (device count is locked at first jax init), EXCEPT
+we set a modest 8-device count here for the whole test session — smoke
+tests and benches are told to expect it.
+"""
+import os
+
+# 8 virtual CPU devices for every test in the session (NOT 512 — the
+# dry-run owns that configuration in its own process).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def devices8():
+    d = jax.devices()
+    assert len(d) >= 8, "test session expects 8 virtual CPU devices"
+    return d
+
+
+def assert_trees_close(a, b, rtol=1e-4, atol=1e-5, what=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32),
+            rtol=rtol, atol=atol, err_msg=f"{what} leaf {i}")

@@ -1,0 +1,112 @@
+"""ATP cost model (Eq. 2/3/4) + strategy search vs the paper's own numbers."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.comm_matrix import (CommLayer, HierarchicalCommMatrix,
+                                    ic1_pcie_8gpu, ic2_dual_nvlink_8gpu,
+                                    ic3_nvswitch_8gpu, ic4_ib_cluster_16gpu,
+                                    ic5_nvlink_network, ic6_torus_2d,
+                                    tpu_v5e_pod)
+from repro.core.cost_model import (LayerCommProfile, axis_algorithm_bw,
+                                   rabenseifner_bw, t_comm)
+from repro.core.mesh import factorizations
+from repro.core.search import recommend_chunks, search_strategy
+
+PROF = LayerCommProfile.gpt(8192)
+
+
+def fig7a_matrix():
+    """Paper Fig. 7a: 4 nodes x 4 GPUs (NVLink-v3 in, 200Gb HDR out)."""
+    return HierarchicalCommMatrix("fig7a", (
+        CommLayer("node", 4, 25.0, 25.0),
+        CommLayer("gpu", 4, 200.0, 600.0),
+    ))
+
+
+class TestPaperWorkedExamples:
+    def test_fig7a_devicemesh_8x2(self):
+        """§3.5 worked example: B2'=200 (P2P-limited pair), B1'=12.5."""
+        b1, b2 = fig7a_matrix().axis_bandwidths(8, 2)
+        assert b2 == pytest.approx(200.0)
+        assert b1 == pytest.approx(12.5)
+
+    def test_ic3_selects_atp1(self):
+        """§5.3: NVSwitch 8-GPU -> ATP-1 == DeviceMesh(8,1)."""
+        r = search_strategy(ic3_nvswitch_8gpu(), 8, layers=4, batch=4,
+                            seq=2048, profile=PROF)
+        assert r.mesh() == (8, 1)
+
+    def test_ic4_selects_atp2(self):
+        """§5.3: flat IB 16-GPU -> ATP-2 == DeviceMesh(8,2)."""
+        r = search_strategy(ic4_ib_cluster_16gpu(), 16, layers=4, batch=4,
+                            seq=2048, profile=PROF)
+        assert r.mesh() == (8, 2)
+
+    def test_ic1_calibrated_atp4_wins_by_46pct(self):
+        """§5.3: calibrated IC1 -> ATP-4 T_comm ~46% below ATP-1."""
+        calib = {(2, 4): (1.20, 4.95), (8, 1): (0.97, 0.97)}
+        r = search_strategy(ic1_pcie_8gpu(), 8, layers=4, batch=4, seq=2048,
+                            profile=PROF, calibration=calib)
+        t24 = next(c.t_comm for c in r.ranked if (c.d1, c.d2) == (2, 4))
+        t81 = next(c.t_comm for c in r.ranked if (c.d1, c.d2) == (8, 1))
+        assert 1 - t24 / t81 == pytest.approx(0.46, abs=0.03)
+
+    def test_ic6_torus_b1_eq_b2_eq_groupbw(self):
+        """§5.4: 4x4 2D torus -> B1' == B2' == GroupBW (=50)."""
+        b1, b2 = ic6_torus_2d().axis_bandwidths(4, 4)
+        assert b1 == pytest.approx(50.0)
+        assert b2 == pytest.approx(50.0)
+
+    def test_fig12_comm_decreases_with_scale(self):
+        """§5.4/Fig 12: optimal ATP T_comm decreases with N on IC5."""
+        costs = []
+        for n in (8, 16, 32, 64):
+            r = search_strategy(ic5_nvlink_network(n), n, layers=4, batch=4,
+                                seq=2048, profile=PROF)
+            costs.append(r.best.t_comm)
+        assert all(a > b for a, b in zip(costs, costs[1:]))
+
+    def test_megatron_is_atp1_point(self):
+        """DeviceMesh(N,1) == Megatron: T = 4*L*b*s*h*bytes/B1."""
+        m = ic3_nvswitch_8gpu()
+        c = t_comm(m, 8, 1, layers=2, batch=4, seq=128, profile=PROF)
+        _, _, b1, _ = axis_algorithm_bw(m, 8, 1)
+        expect = 4 * 2 * 4 * 128 * 8192 * 2 / b1 / 1e9
+        assert c.t_comm == pytest.approx(expect, rel=1e-6)
+
+
+class TestInvariants:
+    @given(st.integers(1, 6).map(lambda k: 2 ** k))
+    @settings(max_examples=20, deadline=None)
+    def test_factorizations_cover_powers_of_two(self, n):
+        f = factorizations(n)
+        assert len(f) == int(math.log2(n)) + 1
+        assert all(a * b == n for a, b in f)
+
+    @given(st.integers(2, 64))
+    @settings(max_examples=30, deadline=None)
+    def test_rabenseifner_factor_in_half_to_one(self, d):
+        b = rabenseifner_bw(d, 100.0)
+        assert 50.0 <= b <= 100.0
+
+    @given(st.integers(1, 4), st.integers(1, 4))
+    @settings(max_examples=30, deadline=None)
+    def test_tcomm_positive_and_monotone_in_volume(self, i, j):
+        d1, d2 = 2 ** i, 2 ** j
+        m = ic5_nvlink_network(d1 * d2)
+        small = t_comm(m, d1, d2, layers=1, batch=1, seq=128,
+                       profile=LayerCommProfile.gpt(1024)).t_comm
+        big = t_comm(m, d1, d2, layers=2, batch=1, seq=128,
+                     profile=LayerCommProfile.gpt(1024)).t_comm
+        assert 0 <= small <= big
+
+    def test_search_space_contains_all_meshes(self):
+        r = search_strategy(tpu_v5e_pod(), 16, layers=2, batch=2, seq=128,
+                            profile=PROF)
+        assert {(c.d1, c.d2) for c in r.ranked} == set(factorizations(16))
+
+    def test_chunk_recommendation(self):
+        assert recommend_chunks(ic4_ib_cluster_16gpu(), 8, 2) == 4  # slow
+        assert recommend_chunks(ic3_nvswitch_8gpu(), 8, 1) == 2     # fast

@@ -1,0 +1,117 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), with shape/dtype
+sweeps (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.models.mamba2 import ssd_chunked
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("sq,sk,hq,hkv,d", [
+        (128, 128, 4, 4, 64),
+        (256, 256, 4, 2, 64),     # GQA
+        (96, 96, 2, 1, 32),       # non-128-aligned (padding path)
+        (64, 192, 2, 2, 128),     # kv longer than q
+    ])
+    def test_matches_ref(self, sq, sk, hq, hkv, d, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (2, sq, hq, d), dtype)
+        k = jax.random.normal(ks[1], (2, sk, hkv, d), dtype)
+        v = jax.random.normal(ks[2], (2, sk, hkv, d), dtype)
+        o = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                                interpret=True)
+        rep = hq // hkv
+        kr, vr = jnp.repeat(k, rep, 2), jnp.repeat(v, rep, 2)
+        f = lambda t: t.transpose(0, 2, 1, 3).reshape(2 * hq, t.shape[1], d)
+        r = ref.attention_ref(f(q), f(kr), f(vr), causal=False)
+        r = r.reshape(2, hq, sq, d).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(r, np.float32), **_tol(dtype))
+
+    @pytest.mark.parametrize("window,softcap", [(0, 0.0), (64, 0.0),
+                                                (0, 30.0), (32, 50.0)])
+    def test_causal_window_softcap(self, window, softcap):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.float32)
+        o = ops.flash_attention(q, k, v, causal=True, window=window,
+                                softcap=softcap, block_q=64, block_k=64,
+                                interpret=True)
+        f = lambda t: t.transpose(0, 2, 1, 3).reshape(2, 128, 64)
+        r = ref.attention_ref(f(q), f(k), f(v), causal=True, window=window,
+                              softcap=softcap)
+        r = r.reshape(1, 2, 128, 64).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=2e-4, atol=2e-5)
+
+
+class TestRMSNorm:
+    @given(rows=st.integers(1, 300), h=st.sampled_from([64, 128, 512]),
+           bf16=st.booleans())
+    @settings(max_examples=10, deadline=None)
+    def test_matches_ref(self, rows, h, bf16):
+        dt = jnp.bfloat16 if bf16 else jnp.float32
+        x = jax.random.normal(jax.random.PRNGKey(rows), (rows, h), dt)
+        g = jax.random.normal(jax.random.PRNGKey(h), (h,), jnp.float32)
+        o = ops.rmsnorm(x, g, block_rows=64, interpret=True)
+        r = ref.rmsnorm_ref(x, g)
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(r, np.float32), **_tol(dt))
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,k,n", [(128, 128, 128), (200, 300, 150),
+                                       (64, 512, 96)])
+    @pytest.mark.parametrize("act", [None, "gelu", "silu"])
+    def test_matches_ref(self, m, k, n, act):
+        a = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+        o = ops.matmul(a, b, activation=act, block_m=64, block_n=64,
+                       block_k=64, interpret=True)
+        r = ref.matmul_ref(a, b, activation=act)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("s,chunk", [(64, 32), (128, 64), (96, 32)])
+    def test_kernel_matches_sequential_ref(self, s, chunk):
+        b, nh, hd, ds = 2, 3, 16, 8
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        x = jax.random.normal(ks[0], (b, s, nh, hd), jnp.float32) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+        A_log = jax.random.normal(ks[2], (nh,)) * 0.3
+        B = jax.random.normal(ks[3], (b, s, ds)) * 0.5
+        C = jax.random.normal(ks[4], (b, s, ds)) * 0.5
+        D = jnp.ones((nh,))
+        y = ops.ssd_scan(x, dt, A_log, B, C, D, chunk=chunk, interpret=True)
+        yr, _ = ref.ssd_ref(x, dt, A_log, B, C, D)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_model_chunked_path_matches_ref_and_state(self):
+        b, s, nh, hd, ds = 1, 64, 2, 8, 4
+        ks = jax.random.split(jax.random.PRNGKey(7), 5)
+        x = jax.random.normal(ks[0], (b, s, nh, hd)) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+        A_log = jax.random.normal(ks[2], (nh,)) * 0.3
+        B = jax.random.normal(ks[3], (b, s, ds)) * 0.5
+        C = jax.random.normal(ks[4], (b, s, ds)) * 0.5
+        D = jnp.ones((nh,))
+        y, st = ssd_chunked(x, dt, A_log, B, C, D, chunk=16)
+        yr, str_ = ref.ssd_ref(x, dt, A_log, B, C, D)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(str_),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,61 @@
+"""Paper-notation sharding specs (Shard/Replicate/Partial) — §3.1."""
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core.mesh import MeshTopo
+from repro.core.sharding import (PARTIAL_SUM, REPLICATE, Shard, ShardingSpec,
+                                 spec)
+
+TOPO = MeshTopo((("tp1", 2), ("tp2", 4)))
+
+
+class TestPaperFigure4:
+    """Figure 4: sharding a 2D tensor on DeviceMesh(2,2)."""
+
+    def test_shard1_shard0(self):
+        # [Shard(1), Shard(0)]: column-split at level 1, row-split at level 2
+        s = spec(("tp1", "tp2"), Shard(1), Shard(0))
+        assert s.partition_spec(2) == P("tp2", "tp1")
+
+    def test_replicate_shard0(self):
+        s = spec(("tp1", "tp2"), REPLICATE, Shard(0))
+        assert s.partition_spec(2) == P("tp2")
+
+    def test_row_first_weight(self):
+        # W: [Shard(0), Shard(1)] (paper Fig. 5 left)
+        s = spec(("tp1", "tp2"), Shard(0), Shard(1))
+        assert s.partition_spec(2) == P("tp1", "tp2")
+
+    def test_local_shape(self):
+        s = spec(("tp1", "tp2"), Shard(0), Shard(1))
+        assert s.local_shape(TOPO, (8, 8)) == (4, 2)
+
+    def test_both_levels_same_dim_stack(self):
+        # two mesh levels splitting the same tensor dim
+        s = spec(("tp1", "tp2"), Shard(0), Shard(0))
+        assert s.partition_spec(2) == P(("tp1", "tp2"))
+        assert s.local_shape(TOPO, (8, 8)) == (1, 8)
+
+    def test_partial_cannot_materialize(self):
+        s = spec(("tp1", "tp2"), PARTIAL_SUM, Shard(1))
+        with pytest.raises(ValueError):
+            s.partition_spec(2)
+        assert s.partial_axes() == ("tp1",)
+
+    def test_indivisible_rejected(self):
+        s = spec(("tp1", "tp2"), Shard(0), Shard(1))
+        with pytest.raises(ValueError):
+            s.local_shape(TOPO, (7, 8))
+
+
+@given(d0=st.integers(0, 2), d1=st.integers(0, 2))
+@settings(max_examples=20, deadline=None)
+def test_local_shape_product_invariant(d0, d1):
+    """prod(local) * prod(shard counts) == prod(global) for any placement."""
+    s = spec(("tp1", "tp2"), Shard(d0), Shard(d1))
+    g = (8, 8, 8)
+    loc = s.local_shape(TOPO, g)
+    counts = s.shard_counts(TOPO, 3)
+    import math
+    assert math.prod(loc) * math.prod(counts) == math.prod(g)
