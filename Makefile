@@ -1,0 +1,19 @@
+PYTHON ?= python
+XLA_DEVICES ?= 8
+
+# Tier-1 verify: the whole suite on a simulated multi-device host mesh.
+.PHONY: test
+test:
+	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	$(PYTHON) -m pytest -x -q
+
+.PHONY: bench-overlap
+bench-overlap:
+	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
+	$(PYTHON) -m benchmarks.overlap_bench
+
+.PHONY: bench
+bench:
+	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
+	$(PYTHON) -m benchmarks.run

@@ -17,8 +17,9 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 from repro.core.atp import atp_linear, make_context
 from repro.core.mesh import MeshTopo

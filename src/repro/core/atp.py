@@ -17,6 +17,26 @@ Summed per layer this is Eq. 2: 2Lbs*(7h/(d1 B2) + 2h/(d2 B1)) for GPT.
 
 Activations between blocks carry the paper's spec [Replicate, Shard(1)]:
 replicated over tp1 (mesh dim 1), feature-sharded over tp2 (mesh dim 2).
+
+Beyond-paper boundary modes (see docs/overlap.md):
+
+``boundary_mode``
+    "psum"  — monolithic lax collectives at every boundary (paper Fig. 6).
+    "ring"  — boundaries run as explicit ppermute rings from
+              repro.core.overlap: the chunked GEMM is software-pipelined
+              against the ring steps (a collective-matmul, §4.1 made
+              structural), and jax.custom_vjp gives the backward pass the
+              mirrored ring schedule instead of AD-inserted monolithic
+              psums.
+
+``seq_parallel``
+    Opt-in sequence-parallel block I/O spec [Shard(seq)@ax1, Shard(f)@ax2]:
+    the f2/f4 row boundaries become psum_scatter over ax1 along the
+    sequence dim (half the wire bytes of the all-reduce they replace) and
+    the block-entry norms fold the conjugate all-gather (rms_norm /
+    layer_norm `gather_seq=True`).  Activation memory between blocks drops
+    by d1.  Eq. 2's row term keeps its volume across fwd+bwd but every
+    boundary op halves, which is what the overlap engine pipelines against.
 """
 from __future__ import annotations
 
@@ -28,6 +48,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import overlap
 from repro.core.mesh import MeshTopo, dp_axis_names, tp_axis_names
 
 
@@ -41,6 +62,8 @@ class ATPContext:
     dp_axes: tuple[str, ...]  # data-parallel axes (pod, data)
     chunks: int = 1           # chunk-based overlapping factor (paper §4.1)
     use_reduce_scatter: bool = False  # beyond-paper: fuse psum+slice
+    boundary_mode: Literal["psum", "ring"] = "psum"  # see module docstring
+    seq_parallel: bool = False  # block I/O [Shard(seq)@ax1, Shard(f)@ax2]
 
     @property
     def d1(self) -> int:
@@ -81,12 +104,17 @@ class ATPContext:
 
 
 def make_context(
-    topo: MeshTopo, chunks: int = 1, use_reduce_scatter: bool = False
+    topo: MeshTopo,
+    chunks: int = 1,
+    use_reduce_scatter: bool = False,
+    boundary_mode: Literal["psum", "ring"] = "psum",
+    seq_parallel: bool = False,
 ) -> ATPContext:
     ax1, ax2 = tp_axis_names(topo)
     return ATPContext(
         topo=topo, ax1=ax1, ax2=ax2, dp_axes=dp_axis_names(topo),
         chunks=chunks, use_reduce_scatter=use_reduce_scatter,
+        boundary_mode=boundary_mode, seq_parallel=seq_parallel,
     )
 
 
@@ -120,22 +148,59 @@ def atp_reduce_scatter(x, axis: str | None, dim: int):
 
 
 # ---------------------------------------------------------------------------
+# Sequence-parallel block I/O helpers (spec [Shard(seq)@ax1, Shard(f)@ax2]).
+# ---------------------------------------------------------------------------
+
+def seq_scatter(ctx: ATPContext, x, dim: int = 1):
+    """Free slice of an ax1-replicated activation to this rank's seq shard
+    (entry into the sequence-parallel domain, e.g. after the embedding)."""
+    if not ctx.seq_parallel or ctx.ax1 is None:
+        return x
+    if x.shape[dim] % ctx.d1:
+        raise ValueError(
+            f"seq_parallel requires seq ({x.shape[dim]}) divisible by d1={ctx.d1}")
+    return shard_slice(x, ctx.index1(), ctx.d1, dim)
+
+
+def seq_gather(ctx: ATPContext, x, dim: int = 1):
+    """all-gather a seq-sharded activation back to full sequence over ax1
+    (the conjugate of the psum_scatter row boundary)."""
+    if not ctx.seq_parallel or ctx.ax1 is None:
+        return x
+    if ctx.boundary_mode == "ring":
+        return overlap.ring_all_gather(x, ctx.ax1, ctx.d1, dim)
+    return lax.all_gather(x, ctx.ax1, axis=dim, tiled=True)
+
+
+# ---------------------------------------------------------------------------
 # Row/column-first linear layers.
 # ---------------------------------------------------------------------------
 
-def _chunked_boundary_matmul(ctx: ATPContext, x, w, axis):
+def _chunked_boundary_matmul(ctx: ATPContext, x, w, axis, b=None):
     """Chunk-based overlapping (paper §4.1).
 
-    Split the leading (batch) dim into `ctx.chunks` chunks; each chunk's
-    GEMM + all-reduce chain is data-independent of the others, so XLA's
-    latency-hiding scheduler overlaps chunk k's collective with chunk
-    k+1's GEMM.  Semantically identical to the unchunked op.
+    Split the leading (batch) dim into `ctx.chunks` chunks (uneven leading
+    dims use jnp.array_split); each chunk's GEMM + all-reduce chain is
+    data-independent of the others.  In "psum" mode the overlap is left to
+    XLA's latency-hiding scheduler; in "ring" mode the collective is an
+    explicit ppermute ring issued between consecutive chunk GEMMs
+    (overlap.overlap_matmul_ar).  The bias add is fused into each chunk's
+    post-boundary epilogue rather than a separate full-tensor add.
+    Semantically identical to the unchunked op.
     """
-    c = ctx.chunks
-    if c <= 1 or x.shape[0] % c:
-        return atp_boundary(jnp.einsum("...k,kn->...n", x, w), axis)
-    xs = jnp.split(x, c, axis=0)
-    ys = [atp_boundary(jnp.einsum("...k,kn->...n", xc, w), axis) for xc in xs]
+    d = ctx.d2 if axis == ctx.ax2 else ctx.d1
+    if ctx.boundary_mode == "ring":
+        return overlap.overlap_matmul_ar(x, w, axis, d, ctx.chunks, b=b)
+    c = max(1, min(ctx.chunks, x.shape[0]))
+    if c <= 1:
+        y = atp_boundary(jnp.einsum("...k,kn->...n", x, w), axis)
+        return y + b if b is not None else y
+    xs = (jnp.split(x, c, axis=0) if x.shape[0] % c == 0
+          else jnp.array_split(x, c, axis=0))
+    ys = []
+    for xc in xs:
+        yc = atp_boundary(jnp.einsum("...k,kn->...n", xc, w), axis)
+        ys.append(yc + b if b is not None else yc)
     return jnp.concatenate(ys, axis=0)
 
 
@@ -162,12 +227,28 @@ def atp_linear(
         Partial over ax1 -> boundary psum(ax1) -> [..., N/d2]: back to the
         block I/O spec [Replicate, Shard(-1)].
 
-    Bias is sharded like the GEMM output dim and added after the boundary
-    (psum is linear; keeps the bias gradient exact and local).
+    With ``ctx.seq_parallel`` the row boundary becomes a psum_scatter over
+    ax1 along the sequence dim (x.ndim - 2), leaving the output in the
+    sequence-parallel block I/O spec [Shard(seq)@ax1, Shard(-1)@ax2].
+
+    Bias is sharded like the GEMM output dim and applied in the boundary
+    epilogue (psum is linear; keeps the bias gradient exact and local).
     """
     axis = ctx.ax2 if kind == "col" else ctx.ax1
+    if (ctx.seq_parallel and kind == "row" and axis is not None
+            and x.ndim >= 3):
+        seq_dim = x.ndim - 2
+        if ctx.boundary_mode == "ring" and x.shape[seq_dim] % ctx.d1 == 0:
+            y = overlap.overlap_matmul_rs(x, w, axis, ctx.d1, seq_dim)
+        else:
+            y = atp_reduce_scatter(
+                jnp.einsum("...k,kn->...n", x, w), axis, seq_dim)
+        return y + b if b is not None else y
     if chunked and ctx.chunks > 1 and x.ndim >= 2:
-        y = _chunked_boundary_matmul(ctx, x, w, axis)
+        return _chunked_boundary_matmul(ctx, x, w, axis, b)
+    if ctx.boundary_mode == "ring" and axis is not None:
+        d = ctx.d2 if kind == "col" else ctx.d1
+        y = overlap.ring_all_reduce(jnp.einsum("...k,kn->...n", x, w), axis, d)
     else:
         y = atp_boundary(jnp.einsum("...k,kn->...n", x, w), axis)
     if b is not None:

@@ -1,0 +1,207 @@
+"""Version-compat shims between jax 0.4.x and 0.5+/0.6 APIs.
+
+Every module in this repo that touches a version-sensitive jax surface
+routes through here instead of importing from jax directly:
+
+  shard_map    jax>=0.6 exports ``jax.shard_map`` with a ``check_vma``
+               kwarg; 0.4.x has ``jax.experimental.shard_map.shard_map``
+               with the same semantics under the older ``check_rep`` name.
+  pcast        ``lax.pcast`` (varying-manual-axes cast) does not exist on
+               0.4.x; the 0.4 replication checker infers the same typing,
+               so the fallback is the identity.
+  make_mesh    0.4.x ``jax.make_mesh``/``Mesh`` do not accept
+               ``axis_types``; the kwarg is dropped there.
+  AxisType     dummy enum stand-in on 0.4.x (only ``.Auto`` is used here).
+  abstract_mesh  ``AbstractMesh`` takes ``(shape, names)`` on 0.5+ but a
+               single ``((name, size), ...)`` tuple on 0.4.x.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Any, Sequence
+
+import jax
+
+# --------------------------------------------------------------------------
+# shard_map: jax.shard_map (>=0.6, check_vma) vs
+# jax.experimental.shard_map.shard_map (0.4.x, check_rep).
+# --------------------------------------------------------------------------
+
+try:  # jax >= 0.6
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = set(inspect.signature(_shard_map).parameters)
+_CHECK_KW = "check_vma" if "check_vma" in _SHARD_MAP_PARAMS else "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kw):
+    """``jax.shard_map`` with the ``check_vma`` spelling on every version."""
+    kw[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+# --------------------------------------------------------------------------
+# 0.4.x replication-checker fixes.  Two upstream bugs make check_rep=True
+# reject valid programs there (both fixed by the 0.6 vma rewrite):
+#   1. a multi-output primitive (top_k, sort, ...) whose inputs are all
+#      constants gets a ``None`` rep from ``_standard_check`` and then
+#      crashes ``_check_rep`` ("'NoneType' object is not iterable");
+#   2. ``_scan_check`` does a single pass and requires the carry-in rep
+#      (None for constant-initialised carries, e.g. ``jnp.zeros(())``) to
+#      equal the inferred carry-out rep, instead of running the fixpoint
+#      the rewrite pass itself uses.
+# Patched only when running against the legacy checker.  NOTE: the patch
+# applies process-wide on first `repro` import (the checker is module
+# state in jax.experimental.shard_map).  It is strictly permissive: both
+# fixes only affect programs the stock checker CRASHES or spuriously
+# rejects on (multi-output-of-constants, constant-initialised scan
+# carries); programs the stock checker accepts are typed identically.
+# --------------------------------------------------------------------------
+
+
+def _patch_legacy_rep_checker() -> None:
+    if _CHECK_KW != "check_rep":
+        return
+    try:
+        import jax.experimental.shard_map as _sm
+        from jax._src import core as _core
+        from jax._src.lax.control_flow import loops as _loops
+        from jax._src.util import safe_map as _map
+    except ImportError:  # internal layout moved; leave the checker alone
+        return
+
+    def _check_rep(mesh, jaxpr, in_rep):
+        env: dict = {}
+
+        def read(x):
+            return env[x] if type(x) is _core.Var else None
+
+        def write(v, val):
+            env[v] = val
+
+        _map(write, jaxpr.constvars, [set(mesh.axis_names)] * len(jaxpr.constvars))
+        _map(write, jaxpr.invars, in_rep)
+        last_used = _core.last_used(jaxpr)
+        for e in jaxpr.eqns:
+            rule = _sm._check_rules.get(
+                e.primitive, functools.partial(_sm._rule_missing, e.primitive))
+            out_rep = rule(mesh, *_map(read, e.invars), **e.params)
+            if e.primitive.multiple_results:
+                # fix (1): replicate a scalar set OR None across all outputs
+                if type(out_rep) is set or out_rep is None:
+                    out_rep = [out_rep] * len(e.outvars)
+                _map(write, e.outvars, out_rep)
+            else:
+                write(e.outvars[0], out_rep)
+            _core.clean_up_dead_vars(e, env, last_used)
+        return _map(read, jaxpr.outvars)
+
+    def _scan_check(mesh, *in_rep, jaxpr, num_consts, num_carry, **_):
+        # fix (2): constants (rep None) are replicated everywhere; run the
+        # same meet-fixpoint over the carry as the rewrite pass.
+        top = set(mesh.axis_names)
+        const_rep = list(in_rep[:num_consts])
+        carry = [top if r is None else r
+                 for r in in_rep[num_consts:num_consts + num_carry]]
+        xs_rep = list(in_rep[num_consts + num_carry:])
+        for _i in range(1 + num_carry):
+            out_rep = _check_rep(mesh, jaxpr.jaxpr,
+                                 [*const_rep, *carry, *xs_rep])
+            carry_out = [top if r is None else r for r in out_rep[:num_carry]]
+            new = [a & b for a, b in zip(carry, carry_out)]
+            if new == carry:
+                break
+            carry = new
+        return [*carry, *out_rep[num_carry:]]
+
+    _sm._check_rep = _check_rep
+    _sm._check_rules[_loops.scan_p] = _scan_check
+
+
+_patch_legacy_rep_checker()
+
+
+# --------------------------------------------------------------------------
+# lax.pcast: identity fallback on 0.4.x (replication is inferred there).
+# --------------------------------------------------------------------------
+
+if hasattr(jax.lax, "pcast"):
+    pcast = jax.lax.pcast
+else:
+
+    def pcast(x, axis_name, *, to: str = "varying"):  # noqa: ARG001
+        return x
+
+
+# --------------------------------------------------------------------------
+# lax.axis_size: added after 0.4.x; psum of a python scalar is the classic
+# statically-folded equivalent (returns size * 1 without tracing).
+# --------------------------------------------------------------------------
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+
+    def axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)
+
+
+# --------------------------------------------------------------------------
+# Mesh construction: axis_types exists only on 0.5+.
+# --------------------------------------------------------------------------
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+    _HAS_AXIS_TYPES = True
+else:
+    class AxisType:  # minimal stand-in: the repo only references .Auto
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    _HAS_AXIS_TYPES = False
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Sequence[jax.Device] | None = None,
+    axis_types: Any = None,
+) -> jax.sharding.Mesh:
+    kw: dict[str, Any] = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if _HAS_AXIS_TYPES:
+        if axis_types is None:
+            axis_types = (AxisType.Auto,) * len(tuple(axis_shapes))
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+def mesh_from_devices(
+    devices: Sequence[jax.Device],
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+) -> jax.sharding.Mesh:
+    """Mesh over an explicit device array (axis_types dropped on 0.4.x)."""
+    import numpy as np
+
+    arr = np.asarray(devices).reshape(tuple(axis_shapes))
+    if _HAS_AXIS_TYPES:
+        return jax.sharding.Mesh(
+            arr, tuple(axis_names),
+            axis_types=(AxisType.Auto,) * len(tuple(axis_shapes)))
+    return jax.sharding.Mesh(arr, tuple(axis_names))
+
+
+def abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """jax.sharding.AbstractMesh across the 0.4/0.5 signature change."""
+    try:  # 0.5+: AbstractMesh(shape, names)
+        return jax.sharding.AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:  # 0.4.x: AbstractMesh(((name, size), ...))
+        return jax.sharding.AbstractMesh(
+            tuple(zip(tuple(axis_names), tuple(axis_shapes))))

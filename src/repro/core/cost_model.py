@@ -1,4 +1,13 @@
-"""ATP analytic communication cost model (paper §3.3-§3.5, Eq. 2-4)."""
+"""ATP analytic communication cost model (paper §3.3-§3.5, Eq. 2-4).
+
+Beyond the paper's Eq. 2 (``t_comm``), ``t_comm_overlap`` models the
+explicit overlap engine (repro.core.overlap + docs/overlap.md): per-chunk
+effective communication time max(0, comm - overlappable GEMM), ring vs.
+Rabenseifner algorithm step counts per hierarchy level, and the
+sequence-parallel boundary (reduce-scatter wire bytes = half an
+all-reduce's, plus the conjugate block-entry all-gather accounted
+separately).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -12,6 +21,45 @@ def rabenseifner_bw(d: int, raw_bw: float) -> float:
     if d <= 1:
         return math.inf
     return d / (2.0 * (d - 1)) * raw_bw
+
+
+#: wire-transfer factor and ring/rabenseifner step counts per collective
+_COLLECTIVE_SHAPE = {
+    # op: (transfer fraction of payload, ring steps fn, raben steps fn)
+    "all_reduce": (lambda d: 2.0 * (d - 1) / d,
+                   lambda d: 2 * (d - 1),
+                   lambda d: 2 * math.ceil(math.log2(d))),
+    "reduce_scatter": (lambda d: (d - 1) / d,
+                       lambda d: d - 1,
+                       lambda d: math.ceil(math.log2(d))),
+    "all_gather": (lambda d: (d - 1) / d,
+                   lambda d: d - 1,
+                   lambda d: math.ceil(math.log2(d))),
+}
+
+
+def collective_seconds(
+    vol_bytes: float,
+    d: int,
+    raw_bw_gbps: float,
+    *,
+    op: str = "all_reduce",
+    algo: str = "ring",
+    alpha_s: float = 0.0,
+) -> float:
+    """Time of one collective over a `d`-rank group on raw link bandwidth.
+
+    vol_bytes is the per-device payload (the tensor size); the wire moves
+    ``transfer_factor * vol_bytes`` of it.  ``alpha_s`` is the per-step
+    latency, where ring uses O(d) steps and Rabenseifner O(log d) — the
+    bandwidth term is identical (Eq. 4), so the algorithm choice only
+    matters through latency and is what chunking has to amortise.
+    """
+    if d <= 1 or vol_bytes <= 0.0:
+        return 0.0
+    transfer, ring_steps, raben_steps = _COLLECTIVE_SHAPE[op]
+    steps = ring_steps(d) if algo == "ring" else raben_steps(d)
+    return vol_bytes * transfer(d) / (raw_bw_gbps * 1e9) + steps * alpha_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,10 +76,11 @@ class LayerCommProfile:
 
     col_first_out: float
     row_first_out: float
+    hidden: float | None = None  # contraction dim (for GEMM-time modelling)
 
     @staticmethod
     def gpt(hidden: int) -> "LayerCommProfile":
-        return LayerCommProfile(7.0 * hidden, 2.0 * hidden)
+        return LayerCommProfile(7.0 * hidden, 2.0 * hidden, hidden=hidden)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,3 +129,158 @@ def t_comm(
     term_row = (profile.row_first_out / (d2 * b1)) if d1 > 1 else 0.0
     t = tokens * (term_col + term_row) / 1e9  # GB/s -> bytes/s
     return StrategyCost(d1, d2, b1_raw, b2_raw, b1, b2, t)
+
+
+# ---------------------------------------------------------------------------
+# Overlap-aware extension (docs/overlap.md).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapStrategyCost:
+    """Per-(d1, d2, chunks, seq_parallel) modelled step communication.
+
+    t_comm          raw (un-overlapped) collective time per step [s]
+    t_exposed       comm time left on the critical path after per-chunk
+                    overlap with the producing GEMMs [s]
+    t_gemm          boundary-producing GEMM time per step [s]
+    ax1_boundary_bytes   wire bytes of the ax1 *boundary* collectives
+                    (f2/f4: all-reduce, or reduce-scatter when seq-parallel)
+    ax1_total_bytes      ax1 boundary + block-entry gather wire bytes
+                    (seq-parallel conserves total fwd+bwd volume; the win is
+                    per-op size, overlap granularity and activation memory)
+    """
+
+    d1: int
+    d2: int
+    chunks: int
+    seq_parallel: bool
+    b1_raw: float
+    b2_raw: float
+    t_comm: float
+    t_exposed: float
+    t_gemm: float
+    ax1_boundary_bytes: float
+    ax1_total_bytes: float
+    ax2_boundary_bytes: float
+    #: chunks > 1 and every chunk-credited boundary's per-chunk collective
+    #: time (incl. per-step latency) fits inside its per-chunk GEMM time —
+    #: when True, t_exposed is strictly below the chunks=1 exposure.
+    fully_overlapped: bool = False
+
+
+def _exposed(vol_bytes: float, d: int, raw_bw: float, op: str, algo: str,
+             alpha_s: float, chunks: int, t_gemm: float) -> float:
+    """Critical-path comm after pipelining `chunks` chunks against the
+    producing GEMM: chunk k's collective overlaps chunk k+1's GEMM; the
+    last chunk's collective is always exposed.  Each chunk pays its own
+    per-step latency (chunking amortises bandwidth, not alpha)."""
+    if d <= 1:
+        return 0.0
+    c = max(1, chunks)
+    tc = collective_seconds(vol_bytes / c, d, raw_bw, op=op, algo=algo,
+                            alpha_s=alpha_s)
+    return tc + (c - 1) * max(0.0, tc - t_gemm / c)
+
+
+def t_comm_overlap(
+    matrix: HierarchicalCommMatrix,
+    d1: int,
+    d2: int,
+    *,
+    layers: int,
+    batch: int,
+    seq: int,
+    profile: LayerCommProfile,
+    bytes_per_elem: int = 2,
+    chunks: int = 1,
+    seq_parallel: bool = False,
+    peak_tflops: float = 200.0,
+    algo: str = "ring",
+    alpha_s: float = 0.0,
+) -> OverlapStrategyCost:
+    """Generalised Eq. 2 with explicit-overlap accounting.
+
+    Per layer and direction (fwd+bwd = factor 2):
+      col boundary: payload b*s*C_col/d1 bytes all-reduced over ax2 (d2)
+      row boundary: payload b*s*C_row/d2 bytes over ax1 (d1) — all-reduce
+        under the replicated block I/O spec, reduce-scatter (+ the
+        conjugate block-entry all-gather) under sequence-parallel.
+    Effective comm per boundary = _exposed(comm, producing-GEMM, chunks).
+    With chunks=1, algo="rabenseifner", alpha_s=0 this reduces exactly to
+    Eq. 2 (the parity the strategy-search acceptance test pins down).
+    """
+    if profile.hidden is None:
+        raise ValueError(
+            "t_comm_overlap needs profile.hidden to model GEMM time; use "
+            "LayerCommProfile.gpt(...) or pass hidden= explicitly")
+    b1_raw, b2_raw = matrix.axis_bandwidths(d1, d2)
+    steps = 2.0 * layers  # fwd + bwd per layer
+    vol_col = batch * seq * profile.col_first_out / max(1, d1) * bytes_per_elem
+    vol_row = batch * seq * profile.row_first_out / max(1, d2) * bytes_per_elem
+
+    # producing-GEMM time per boundary group (overlappable work)
+    hidden = profile.hidden
+    flops_col = 2.0 * batch * seq * hidden * profile.col_first_out / (d1 * d2)
+    flops_row = 2.0 * batch * seq * hidden * profile.row_first_out / (d1 * d2)
+    tg_col = flops_col / (peak_tflops * 1e12)
+    tg_row = flops_row / (peak_tflops * 1e12)
+
+    t_col = (collective_seconds(vol_col, d2, b2_raw, op="all_reduce",
+                                algo=algo, alpha_s=alpha_s) if d2 > 1 else 0.0)
+    if seq_parallel and d1 > 1:
+        t_row = collective_seconds(vol_row, d1, b1_raw, op="reduce_scatter",
+                                   algo=algo, alpha_s=alpha_s)
+        t_gather = collective_seconds(vol_row, d1, b1_raw, op="all_gather",
+                                      algo=algo, alpha_s=alpha_s)
+    else:
+        t_row = (collective_seconds(vol_row, d1, b1_raw, op="all_reduce",
+                                    algo=algo, alpha_s=alpha_s)
+                 if d1 > 1 else 0.0)
+        t_gather = 0.0
+
+    if seq_parallel and d1 > 1:
+        # the psum_scatter row boundary is not batch-chunked by atp_linear
+        # (the ring rs collective-matmul pipelines over its own d1 steps);
+        # credit no chunk overlap to it — conservative for both modes
+        row_boundary_op, row_chunks = "reduce_scatter", 1
+    else:
+        row_boundary_op, row_chunks = "all_reduce", chunks
+    t_comm = steps * (t_col + t_row + t_gather)
+    t_exposed = steps * (
+        _exposed(vol_col, d2, b2_raw, "all_reduce", algo, alpha_s,
+                 chunks, tg_col)
+        + _exposed(vol_row, d1, b1_raw, row_boundary_op, algo, alpha_s,
+                   row_chunks, tg_row)
+        + t_gather)  # entry gathers overlap the norm only
+    t_gemm = steps * (tg_col + tg_row)
+
+    # does every chunk-credited boundary hide its per-chunk collective
+    # (with its own per-step latency) inside the per-chunk GEMM?
+    chunked_boundaries = [
+        (vol_col, d2, b2_raw, "all_reduce", chunks, tg_col),
+        (vol_row, d1, b1_raw, row_boundary_op, row_chunks, tg_row),
+    ]
+    active = [(v, d, bw, op, c, tg) for v, d, bw, op, c, tg
+              in chunked_boundaries if d > 1 and c > 1 and v > 0]
+    fully_overlapped = bool(active) and all(
+        collective_seconds(v / c, d, bw, op=op, algo=algo, alpha_s=alpha_s)
+        <= tg / c
+        for v, d, bw, op, c, tg in active)
+
+    def wire(vol, d, op):
+        if d <= 1:
+            return 0.0
+        return vol * _COLLECTIVE_SHAPE[op][0](d)
+
+    row_op = "reduce_scatter" if seq_parallel else "all_reduce"
+    ax1_boundary = steps * wire(vol_row, d1, row_op)
+    ax1_total = ax1_boundary + steps * wire(
+        vol_row, d1, "all_gather") * (1.0 if seq_parallel else 0.0)
+    ax2_boundary = steps * wire(vol_col, d2, "all_reduce")
+    return OverlapStrategyCost(
+        d1=d1, d2=d2, chunks=chunks, seq_parallel=seq_parallel,
+        b1_raw=b1_raw, b2_raw=b2_raw,
+        t_comm=t_comm, t_exposed=t_exposed, t_gemm=t_gemm,
+        ax1_boundary_bytes=ax1_boundary, ax1_total_bytes=ax1_total,
+        ax2_boundary_bytes=ax2_boundary, fully_overlapped=fully_overlapped)

@@ -15,6 +15,8 @@ from typing import Sequence
 import jax
 import numpy as np
 
+from repro.core import compat
+
 # Canonical axis names used throughout the framework.
 AXIS_POD = "pod"      # across pods (DCN)
 AXIS_DATA = "data"    # data parallel (within pod)
@@ -78,15 +80,14 @@ class MeshTopo:
 
     def build(self, devices: Sequence[jax.Device] | None = None) -> jax.sharding.Mesh:
         """Materialize into a jax Mesh (touches device state)."""
-        axis_types = (jax.sharding.AxisType.Auto,) * len(self.axes)
         if devices is None:
-            return jax.make_mesh(self.shape, self.names, axis_types=axis_types)
-        arr = np.asarray(devices)[: self.size].reshape(self.shape)
-        return jax.sharding.Mesh(arr, self.names, axis_types=axis_types)
+            return compat.make_mesh(self.shape, self.names)
+        return compat.mesh_from_devices(
+            np.asarray(devices)[: self.size], self.shape, self.names)
 
     def abstract(self) -> jax.sharding.AbstractMesh:
         """AbstractMesh — enough for sharding specs / eval_shape, no devices."""
-        return jax.sharding.AbstractMesh(self.shape, self.names)
+        return compat.abstract_mesh(self.shape, self.names)
 
 
 def production_topo(multi_pod: bool = False) -> MeshTopo:

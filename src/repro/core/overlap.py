@@ -1,0 +1,358 @@
+"""Explicit latency-hiding ring collectives for ATP boundaries (§4.1+).
+
+The seed's chunk-based overlapping split the batch and hoped XLA's
+latency-hiding scheduler would interleave each chunk's all-reduce with the
+next chunk's GEMM.  This module makes the overlap *structural* instead:
+
+  ring_all_reduce / ring_reduce_scatter / ring_all_gather
+      d-1 step ``lax.ppermute`` rings (all-reduce optionally bidirectional:
+      half the payload circles each direction, doubling link utilisation on
+      full-duplex fabrics).  Each is wrapped in ``jax.custom_vjp`` so the
+      backward pass runs the *mirrored* ring schedule instead of whatever
+      monolithic collective AD would insert:
+
+          all_reduce^T     = all_reduce
+          reduce_scatter^T = all_gather
+          all_gather^T     = reduce_scatter
+
+  overlap_matmul_ar
+      chunk-pipelined GEMM + ring all-reduce: chunk k's ring steps are
+      issued between chunk k's and chunk k+1's GEMMs, so they are
+      data-independent of every later GEMM — a collective-matmul pipeline,
+      not a scheduler prayer.
+
+  overlap_matmul_rs / overlap_matmul_ag
+      true collective matmuls for the sequence-parallel boundary: the GEMM
+      is decomposed over ring steps.  ``rs``: step t computes the block
+      destined t hops away and accumulates into the rotating partial-sum
+      buffer (== psum_scatter(x @ w)).  ``ag``: the local shard's GEMM runs
+      while the raw activations rotate; each arriving shard is multiplied
+      immediately (== all_gather(x) @ w).  Their VJPs are each other's
+      schedule plus a rank-local weight-gradient GEMM.
+
+Everything runs INSIDE shard_map on local shards.  ``ring_all_reduce``
+falls back to monolithic ``lax.psum`` when no dimension divides by the
+ring size; the scatter/gather ops require divisibility of the scatter
+dim exactly like their ``lax`` counterparts (tiled psum_scatter) and
+raise a clear error otherwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Ring plumbing.  `axis_size` is threaded statically (the ATPContext knows
+# mesh sizes without touching the axis env).
+# ---------------------------------------------------------------------------
+
+
+def _perm_next(d: int):
+    return [(i, (i + 1) % d) for i in range(d)]
+
+
+def _perm_prev(d: int):
+    return [(i, (i - 1) % d) for i in range(d)]
+
+
+def _take_block(xs, i, d):
+    """xs: [d, ...] stacked blocks; i: traced block index (mod d)."""
+    return lax.dynamic_index_in_dim(xs, jnp.mod(i, d), axis=0, keepdims=False)
+
+
+def _split_stack(x, d: int, dim: int):
+    return jnp.stack(jnp.split(x, d, axis=dim))
+
+
+def _ring_reduce_scatter_raw(x, axis, d: int, dim: int, reverse: bool = False):
+    """Rank i of the ring ends with block i of the full sum (tiled layout).
+
+    The accumulator starts at block (i-1), travels to the next rank each
+    step, and picks up that rank's matching local block; after d-1 hops it
+    lands on its home rank fully reduced.
+    """
+    if d == 1:
+        return x
+    xs = _split_stack(x, d, dim)
+    idx = lax.axis_index(axis)
+    sgn = -1 if reverse else 1
+    perm = _perm_prev(d) if reverse else _perm_next(d)
+    acc = _take_block(xs, idx - sgn, d)
+    for t in range(1, d):
+        acc = lax.ppermute(acc, axis, perm)
+        acc = acc + _take_block(xs, idx - sgn * (1 + t), d)
+    return acc
+
+
+def _ring_all_gather_raw(x, axis, d: int, dim: int, reverse: bool = False):
+    """Rank i's shard ends up in slot i of the concatenated output.
+
+    ``reverse`` circulates the opposite direction (the bidirectional
+    all-reduce's second half); after t hops the payload originated t
+    ranks behind (ahead, when reversed)."""
+    if d == 1:
+        return x
+    idx = lax.axis_index(axis)
+    sgn = -1 if reverse else 1
+    perm = _perm_prev(d) if reverse else _perm_next(d)
+    buf = jnp.zeros((d,) + x.shape, x.dtype)
+    buf = lax.dynamic_update_index_in_dim(buf, x, idx, axis=0)
+    cur = x
+    for t in range(1, d):
+        cur = lax.ppermute(cur, axis, perm)
+        buf = lax.dynamic_update_index_in_dim(
+            buf, cur, jnp.mod(idx - sgn * t, d), axis=0)
+    return jnp.concatenate([buf[i] for i in range(d)], axis=dim)
+
+
+def _ring_all_reduce_raw(x, axis, d: int, bidirectional: bool = True):
+    """reduce-scatter + all-gather ring; halves circle opposite directions
+    when the payload splits cleanly (bidirectional ring)."""
+    if d == 1:
+        return x
+    dim = _pick_ring_dim(x.shape, d)
+    if dim is None:
+        return lax.psum(x, axis)  # no dimension divides: monolithic fallback
+    if bidirectional and x.shape[dim] % (2 * d) == 0:
+        lo, hi = jnp.split(x, 2, axis=dim)
+        lo = _ring_reduce_scatter_raw(lo, axis, d, dim, reverse=False)
+        hi = _ring_reduce_scatter_raw(hi, axis, d, dim, reverse=True)
+        lo = _ring_all_gather_raw(lo, axis, d, dim)
+        hi = _ring_all_gather_raw(hi, axis, d, dim, reverse=True)
+        return jnp.concatenate([lo, hi], axis=dim)
+    y = _ring_reduce_scatter_raw(x, axis, d, dim)
+    return _ring_all_gather_raw(y, axis, d, dim)
+
+
+def _pick_ring_dim(shape, d: int) -> int | None:
+    """Largest dimension divisible by the ring size (None if none is)."""
+    best, best_size = None, 0
+    for i, s in enumerate(shape):
+        if s % d == 0 and s > best_size:
+            best, best_size = i, s
+    return best
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrappers: mirrored ring schedules in the backward pass.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def ring_all_reduce(x, axis, axis_size):
+    """== lax.psum(x, axis), decomposed into a (bidirectional) ppermute ring."""
+    return _ring_all_reduce_raw(x, axis, axis_size)
+
+
+def _ar_fwd(x, axis, axis_size):
+    return _ring_all_reduce_raw(x, axis, axis_size), None
+
+
+def _ar_bwd(axis, axis_size, _res, ct):
+    # Sum the cotangents over the ring: correct under the per-rank
+    # partial-cotangent convention that applies to this op on every jax
+    # version — legacy (0.4.x) shard_map transposes lax.psum the same way
+    # (tests pin the equivalence there), and under the 0.6 vma system the
+    # ppermute decomposition types the output *varying* (unlike lax.psum's
+    # invariant output), so each rank's cotangent is a per-rank partial and
+    # the cross-ring sum is still the right transpose.
+    return (_ring_all_reduce_raw(ct, axis, axis_size),)
+
+
+ring_all_reduce.defvjp(_ar_fwd, _ar_bwd)
+
+
+def _require_divisible(size: int, d: int, what: str) -> None:
+    if size % d:
+        raise ValueError(
+            f"{what}: scatter dim size {size} must be divisible by the "
+            f"ring size {d} (same constraint as tiled lax.psum_scatter)")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def ring_reduce_scatter(x, axis, axis_size, dim):
+    """== lax.psum_scatter(x, axis, scatter_dimension=dim, tiled=True)."""
+    _require_divisible(x.shape[dim], axis_size, "ring_reduce_scatter")
+    return _ring_reduce_scatter_raw(x, axis, axis_size, dim)
+
+
+def _rs_fwd(x, axis, axis_size, dim):
+    return ring_reduce_scatter(x, axis, axis_size, dim), None
+
+
+def _rs_bwd(axis, axis_size, dim, _res, ct):
+    return (ring_all_gather(ct, axis, axis_size, dim),)
+
+
+ring_reduce_scatter.defvjp(_rs_fwd, _rs_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def ring_all_gather(x, axis, axis_size, dim):
+    """== lax.all_gather(x, axis, axis=dim, tiled=True)."""
+    return _ring_all_gather_raw(x, axis, axis_size, dim)
+
+
+def _ag_fwd(x, axis, axis_size, dim):
+    return _ring_all_gather_raw(x, axis, axis_size, dim), None
+
+
+def _ag_bwd(axis, axis_size, dim, _res, ct):
+    return (ring_reduce_scatter(ct, axis, axis_size, dim),)
+
+
+ring_all_gather.defvjp(_ag_fwd, _ag_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Collective matmuls.
+# ---------------------------------------------------------------------------
+
+
+def _gemm(x, w):
+    return jnp.einsum("...k,kn->...n", x, w)
+
+
+def overlap_matmul_ar(x, w, axis, axis_size, chunks: int, b=None):
+    """Chunk-pipelined ``psum(x @ w, axis)`` (+ fused per-chunk bias).
+
+    Program order interleaves chunk k's ring with chunk k+1's GEMM; the two
+    are data-independent, so the ring's ppermute chain overlaps the GEMM.
+    Uneven leading dimensions fall back to ``jnp.array_split`` chunks.
+    """
+    if axis is None:
+        y = _gemm(x, w)
+        return y + b if b is not None else y
+    c = max(1, min(chunks, x.shape[0]))
+    if c <= 1:
+        y = ring_all_reduce(_gemm(x, w), axis, axis_size)
+        return y + b if b is not None else y
+    xs = (jnp.split(x, c, axis=0) if x.shape[0] % c == 0
+          else jnp.array_split(x, c, axis=0))
+
+    def _epilogue(y):
+        return y + b if b is not None else y
+
+    ys = []
+    pending = None
+    for xc in xs:
+        g = _gemm(xc, w)
+        if pending is not None:
+            ys.append(_epilogue(ring_all_reduce(pending, axis, axis_size)))
+        pending = g
+    ys.append(_epilogue(ring_all_reduce(pending, axis, axis_size)))
+    return jnp.concatenate(ys, axis=0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def overlap_matmul_rs(x, w, axis, axis_size, dim):
+    """== lax.psum_scatter(x @ w, axis, scatter_dimension=dim, tiled=True).
+
+    Decomposed per ring step: step t computes the GEMM for the output block
+    destined t hops downstream and adds it to the rotating accumulator, so
+    every ppermute is concurrent with the next block's GEMM.
+    """
+    return _rs_matmul_raw(x, w, axis, axis_size, dim)
+
+
+def _rs_matmul_raw(x, w, axis, d, dim):
+    if axis is None or d == 1:
+        return _gemm(x, w)
+    _require_divisible(x.shape[dim], d, "overlap_matmul_rs")
+    xs = _split_stack(x, d, dim)
+    idx = lax.axis_index(axis)
+    acc = _gemm(_take_block(xs, idx - 1, d), w)
+    perm = _perm_next(d)
+    for t in range(1, d):
+        acc = lax.ppermute(acc, axis, perm)
+        acc = acc + _gemm(_take_block(xs, idx - 1 - t, d), w)
+    return acc
+
+
+def _rs_matmul_fwd(x, w, axis, axis_size, dim):
+    return _rs_matmul_raw(x, w, axis, axis_size, dim), (x, w)
+
+
+def _rs_matmul_bwd(axis, axis_size, dim, res, ct):
+    x, w = res
+    # mirrored schedule: ring-all-gather the scattered cotangent while both
+    # backward GEMMs (dx blockwise, dw accumulated) run per arriving block.
+    dx, ct_full = _ag_two_matmuls(ct, w.T, x, axis, axis_size, dim)
+    dw = jnp.einsum("...k,...n->kn", x, ct_full)
+    return dx, dw
+
+
+overlap_matmul_rs.defvjp(_rs_matmul_fwd, _rs_matmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def overlap_matmul_ag(x, w, axis, axis_size, dim):
+    """== lax.all_gather(x, axis, axis=dim, tiled=True) @ w.
+
+    The local shard's GEMM runs while the raw activations rotate around the
+    ring; each arriving shard is multiplied immediately.
+    """
+    return _ag_matmul_raw(x, w, axis, axis_size, dim)
+
+
+def _ag_matmul_raw(x, w, axis, d, dim):
+    if axis is None or d == 1:
+        return _gemm(x, w)
+    idx = lax.axis_index(axis)
+    g0 = _gemm(x, w)
+    buf = jnp.zeros((d,) + g0.shape, g0.dtype)
+    buf = lax.dynamic_update_index_in_dim(buf, g0, idx, axis=0)
+    cur = x
+    perm = _perm_next(d)
+    for t in range(1, d):
+        cur = lax.ppermute(cur, axis, perm)
+        buf = lax.dynamic_update_index_in_dim(
+            buf, _gemm(cur, w), jnp.mod(idx - t, d), axis=0)
+    return jnp.concatenate([buf[i] for i in range(d)], axis=dim)
+
+
+def _ag_matmul_fwd(x, w, axis, axis_size, dim):
+    return _ag_matmul_raw(x, w, axis, axis_size, dim), (x, w)
+
+
+def _ag_matmul_bwd(axis, axis_size, dim, res, ct):
+    x, w = res
+    # dx: reduce-scatter collective matmul (the mirror of the forward AG);
+    # dw: re-gather x (saved sharded, Megatron-style) for the local GEMM.
+    dx = _rs_matmul_raw(ct, w.T, axis, axis_size, dim)
+    x_full = (x if axis is None or axis_size == 1
+              else _ring_all_gather_raw(x, axis, axis_size, dim))
+    dw = jnp.einsum("...k,...n->kn", x_full, ct)
+    return dx, dw
+
+
+overlap_matmul_ag.defvjp(_ag_matmul_fwd, _ag_matmul_bwd)
+
+
+def _ag_two_matmuls(ct, wt, x, axis, d, dim):
+    """Ring all-gather of `ct` fused with both backward GEMMs of the
+    rs-matmul: per arriving block j, emit dx_j = ct_j @ w^T and rebuild the
+    gathered cotangent for the weight-gradient GEMM.  Returns (dx, ct_full).
+    """
+    if axis is None or d == 1:
+        return _gemm(ct, wt), ct
+    idx = lax.axis_index(axis)
+    dx0 = _gemm(ct, wt)
+    dxs = jnp.zeros((d,) + dx0.shape, dx0.dtype)
+    cts = jnp.zeros((d,) + ct.shape, ct.dtype)
+    dxs = lax.dynamic_update_index_in_dim(dxs, dx0, idx, axis=0)
+    cts = lax.dynamic_update_index_in_dim(cts, ct, idx, axis=0)
+    cur = ct
+    perm = _perm_next(d)
+    for t in range(1, d):
+        cur = lax.ppermute(cur, axis, perm)
+        j = jnp.mod(idx - t, d)
+        dxs = lax.dynamic_update_index_in_dim(dxs, _gemm(cur, wt), j, axis=0)
+        cts = lax.dynamic_update_index_in_dim(cts, cur, j, axis=0)
+    dx = jnp.concatenate([dxs[i] for i in range(d)], axis=dim)
+    ct_full = jnp.concatenate([cts[i] for i in range(d)], axis=dim)
+    return dx, ct_full

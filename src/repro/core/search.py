@@ -1,10 +1,18 @@
-"""ATP strategy search (paper §3.5): pick DeviceMesh(d1,d2) minimizing T_comm."""
+"""ATP strategy search (paper §3.5): pick DeviceMesh(d1,d2) minimizing T_comm.
+
+``search_strategy`` is the paper's Eq. 2 ranking over (d1, d2).
+``search_strategy_overlap`` extends the space with the overlap engine's
+knobs — ``chunks`` (§4.1 chunk-pipelining) and ``seq_parallel`` (the
+reduce-scatter/all-gather block I/O spec) — ranked by *exposed* (post-
+overlap) communication time from ``cost_model.t_comm_overlap``.
+"""
 from __future__ import annotations
 
 import dataclasses
 
 from repro.core.comm_matrix import HierarchicalCommMatrix
-from repro.core.cost_model import LayerCommProfile, StrategyCost, t_comm
+from repro.core.cost_model import (LayerCommProfile, OverlapStrategyCost,
+                                   StrategyCost, t_comm, t_comm_overlap)
 from repro.core.mesh import factorizations
 
 
@@ -50,6 +58,68 @@ def search_strategy(
         raise ValueError(f"no valid (d1,d2) for tp={tp_degree} on {matrix.name}")
     ranked = tuple(sorted(costs, key=lambda c: c.t_comm))
     return SearchResult(ranked[0], ranked)
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapSearchResult:
+    best: OverlapStrategyCost
+    ranked: tuple[OverlapStrategyCost, ...]  # ascending t_exposed
+
+    def mesh(self) -> tuple[int, int]:
+        return (self.best.d1, self.best.d2)
+
+    def config(self) -> dict:
+        return {"d1": self.best.d1, "d2": self.best.d2,
+                "chunks": self.best.chunks,
+                "seq_parallel": self.best.seq_parallel}
+
+
+def search_strategy_overlap(
+    matrix: HierarchicalCommMatrix,
+    tp_degree: int,
+    *,
+    layers: int,
+    batch: int,
+    seq: int,
+    profile: LayerCommProfile,
+    bytes_per_elem: int = 2,
+    chunks_options: tuple[int, ...] = (1, 2, 4, 8),
+    seq_parallel_options: tuple[bool, ...] = (False, True),
+    peak_tflops: float = 200.0,
+    algo: str = "ring",
+    alpha_s: float = 0.0,
+) -> OverlapSearchResult:
+    """Rank (d1, d2) x chunks x seq_parallel by exposed comm time.
+
+    ``seq_parallel`` subsumes the seed's vestigial
+    ``ATPContext.use_reduce_scatter`` knob: the fused psum+slice boundary
+    it named is exactly the reduce-scatter row boundary the
+    sequence-parallel spec uses (plus the conjugate entry gather), so
+    ranking seq_parallel on/off covers that axis of the space.
+
+    With ``chunks_options=(1,)``, ``seq_parallel_options=(False,)``,
+    ``algo="rabenseifner"`` and ``alpha_s=0`` the ranking over (d1, d2)
+    coincides exactly with the seed's Eq. 2 ``search_strategy``.
+    """
+    costs = []
+    for d1, d2 in factorizations(tp_degree):
+        try:
+            matrix.axis_bandwidths(d1, d2)
+        except ValueError:
+            continue  # factorization does not embed into the topology
+        for chunks in chunks_options:
+            for sp in seq_parallel_options:
+                costs.append(t_comm_overlap(
+                    matrix, d1, d2, layers=layers, batch=batch, seq=seq,
+                    profile=profile, bytes_per_elem=bytes_per_elem,
+                    chunks=chunks, seq_parallel=sp,
+                    peak_tflops=peak_tflops, algo=algo, alpha_s=alpha_s))
+    if not costs:
+        raise ValueError(
+            f"no valid (d1,d2) for tp={tp_degree} on {matrix.name}")
+    ranked = tuple(sorted(costs, key=lambda c: (c.t_exposed, c.chunks,
+                                                c.seq_parallel)))
+    return OverlapSearchResult(ranked[0], ranked)
 
 
 def recommend_chunks(matrix: HierarchicalCommMatrix, d1: int, d2: int) -> int:

@@ -16,7 +16,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _mm_kernel(a_ref, b_ref, o_ref, acc, *, activation: str | None):
+def _mm_kernel(a_ref, b_ref, *rest, activation: str | None):
+    bias_ref, o_ref, acc = rest if len(rest) == 3 else (None, *rest)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -30,37 +31,54 @@ def _mm_kernel(a_ref, b_ref, o_ref, acc, *, activation: str | None):
 
     @pl.when(ki == nk - 1)
     def _fin():
-        out = acc[...]
-        if activation == "gelu":
-            out = jax.nn.gelu(out, approximate=True)
-        elif activation == "silu":
-            out = jax.nn.silu(out)
+        bias = None if bias_ref is None else bias_ref[...].astype(jnp.float32)
+        out = _epilogue(acc[...], bias, activation)
         o_ref[...] = out.astype(o_ref.dtype)
 
 
-def matmul(a, b, *, activation: str | None = None,
+def _epilogue(out, bias, activation: str | None):
+    """Fused K-loop epilogue: bias add (broadcast over rows), then act."""
+    if bias is not None:
+        out = out + bias
+    if activation == "gelu":
+        out = jax.nn.gelu(out, approximate=True)
+    elif activation == "silu":
+        out = jax.nn.silu(out)
+    return out
+
+
+def matmul(a, b, bias=None, *, activation: str | None = None,
            block_m: int = 128, block_n: int = 128, block_k: int = 128,
            interpret: bool = False):
-    """a: [M, K] @ b: [K, N] -> [M, N] (+fused activation)."""
+    """a: [M, K] @ b: [K, N] -> [M, N] (+fused bias [N] and activation).
+
+    The bias rides the last K-step's epilogue (applied before the
+    activation) instead of a separate post-GEMM elementwise kernel."""
     M, K = a.shape
     K2, N = b.shape
     assert K == K2
+    assert bias is None or bias.shape == (N,)
     bm, bn, bk = (min(block_m, M), min(block_n, N), min(block_k, K))
     pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
     if pm or pk:
         a = jnp.pad(a, ((0, pm), (0, pk)))
     if pk or pn:
         b = jnp.pad(b, ((0, pk), (0, pn)))
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    operands = [a, b]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        operands.append(jnp.pad(bias, (0, pn)).reshape(1, b.shape[1]))
     out = pl.pallas_call(
         functools.partial(_mm_kernel, activation=activation),
         grid=(a.shape[0] // bm, b.shape[1] // bn, a.shape[1] // bk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(a, b)
+    )(*operands)
     return out[:M, :N] if (pm or pn) else out

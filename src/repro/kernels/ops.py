@@ -57,10 +57,11 @@ def rmsnorm(x, gamma, *, eps=1e-6, block_rows=128, interpret=None):
 
 @functools.partial(jax.jit, static_argnames=("activation", "block_m",
                                              "block_n", "block_k", "interpret"))
-def matmul(a, b, *, activation=None, block_m=128, block_n=128, block_k=128,
-           interpret=None):
+def matmul(a, b, bias=None, *, activation=None, block_m=128, block_n=128,
+           block_k=128, interpret=None):
+    """a @ b with optional fused bias [N] + activation epilogue."""
     interpret = _default_interpret() if interpret is None else interpret
-    return _mm.matmul(a, b, activation=activation, block_m=block_m,
+    return _mm.matmul(a, b, bias, activation=activation, block_m=block_m,
                       block_n=block_n, block_k=block_k, interpret=interpret)
 
 

@@ -252,7 +252,19 @@ def full_analysis(hlo: str) -> dict:
                 curarg += ch
         if curarg.strip():
             out.append(curarg)
-        return [a.strip().lstrip("%") for a in out if a.strip().startswith("%")]
+        # XLA prints operands either bare ("%name" / "name") or typed
+        # ("f32[32,64]{1,0} %name" on older versions): name is the last token
+        names = []
+        for a in out:
+            a = a.strip()
+            if not a:
+                continue
+            tok = a.split()[-1]
+            if tok.startswith("%"):
+                names.append(tok.lstrip("%"))
+            elif a == tok and re.fullmatch(r"[\w.\-]+", tok):
+                names.append(tok)
+        return names
 
     def comp_stats(name: str) -> tuple[float, float]:
         """(dot_flops, traffic_bytes) local to this computation.

@@ -11,8 +11,10 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.atp import ATPContext, make_context

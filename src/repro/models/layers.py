@@ -14,7 +14,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.atp import ATPContext, atp_boundary, atp_linear, shard_slice
+from repro.core.atp import (ATPContext, atp_boundary, atp_linear, seq_gather,
+                            shard_slice)
 
 # ---------------------------------------------------------------------------
 # Param spec helpers (global tensor -> PartitionSpec over ATP axes).
@@ -56,34 +57,46 @@ def replicated_spec() -> P:
 # ---------------------------------------------------------------------------
 # Norms (duplicated per TP worker per the paper; feature dim is ax2-sharded
 # so the variance reduction needs one tiny psum over ax2).
+#
+# Under the sequence-parallel block I/O spec the norm input is additionally
+# seq-sharded over ax1; normalisation is per-row, so the math is unchanged
+# and runs on 1/d1 of the rows.  ``gather_seq=True`` folds the conjugate
+# all-gather back to full sequence into the norm epilogue (block-entry
+# norms gather; post-block norms stay in the seq-sharded domain).
 # ---------------------------------------------------------------------------
 
 
-def rms_norm(ctx: ATPContext, x, gamma, eps: float = 1e-6, plus_one: bool = False):
+def rms_norm(ctx: ATPContext, x, gamma, eps: float = 1e-6,
+             plus_one: bool = False, gather_seq: bool = False):
     xf = x.astype(jnp.float32)
     ss = jnp.sum(xf * xf, axis=-1, keepdims=True)
     ss = atp_boundary(ss, ctx.ax2)  # full-feature sum of squares
     d = x.shape[-1] * ctx.d2
     inv = lax.rsqrt(ss / d + eps)
     g = (1.0 + gamma) if plus_one else gamma
-    return (xf * inv * g).astype(x.dtype)
+    out = (xf * inv * g).astype(x.dtype)
+    return seq_gather(ctx, out, dim=out.ndim - 2) if gather_seq else out
 
 
-def layer_norm(ctx: ATPContext, x, gamma, beta, eps: float = 1e-5):
+def layer_norm(ctx: ATPContext, x, gamma, beta, eps: float = 1e-5,
+               gather_seq: bool = False):
     xf = x.astype(jnp.float32)
     d = x.shape[-1] * ctx.d2
     s = atp_boundary(jnp.sum(xf, axis=-1, keepdims=True), ctx.ax2)
     mu = s / d
     ss = atp_boundary(jnp.sum((xf - mu) ** 2, axis=-1, keepdims=True), ctx.ax2)
     inv = lax.rsqrt(ss / d + eps)
-    return ((xf - mu) * inv * gamma + beta).astype(x.dtype)
+    out = ((xf - mu) * inv * gamma + beta).astype(x.dtype)
+    return seq_gather(ctx, out, dim=out.ndim - 2) if gather_seq else out
 
 
-def norm(ctx: ATPContext, cfg: ModelConfig, x, p):
+def norm(ctx: ATPContext, cfg: ModelConfig, x, p, gather_seq: bool = False):
     if cfg.norm_kind == "layernorm":
-        return layer_norm(ctx, x, p["scale"], p["bias"], cfg.norm_eps)
+        return layer_norm(ctx, x, p["scale"], p["bias"], cfg.norm_eps,
+                          gather_seq=gather_seq)
     plus_one = cfg.name.startswith("gemma2")
-    return rms_norm(ctx, x, p["scale"], cfg.norm_eps, plus_one=plus_one)
+    return rms_norm(ctx, x, p["scale"], cfg.norm_eps, plus_one=plus_one,
+                    gather_seq=gather_seq)
 
 
 def norm_params(cfg: ModelConfig, d_local: int):

@@ -28,7 +28,10 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.atp import ATPContext, atp_boundary, atp_linear, shard_slice
+from repro.core import compat
+from repro.core.atp import (ATPContext, atp_boundary, atp_linear,
+                            atp_reduce_scatter, seq_gather, seq_scatter,
+                            shard_slice)
 from repro.models import layers as L
 from repro.models import mamba2, mla, moe, transformer, xlstm
 
@@ -411,14 +414,26 @@ def _gather_ax1_invariant(ctx: ATPContext, u):
     return lax.psum(placed, ctx.ax1)
 
 
-def embed_tokens(ctx: ATPContext, cfg: ModelConfig, emb, tokens):
-    """emb local [V/d1, h/d2]; tokens [b, s] -> x [b, s, h/d2]."""
+def embed_tokens(ctx: ATPContext, cfg: ModelConfig, emb, tokens,
+                 scatter_seq: bool = False):
+    """emb local [V/d1, h/d2]; tokens [b, s] -> x [b, s, h/d2].
+
+    With ``scatter_seq`` (sequence-parallel entry) the vocab-parallel
+    all-reduce over ax1 is fused with the seq slice into one psum_scatter
+    — half the ax1 wire bytes of psum-then-slice."""
     v_loc = emb.shape[0]
     rel = tokens - ctx.index1() * v_loc
     ok = (rel >= 0) & (rel < v_loc)
     safe = jnp.clip(rel, 0, v_loc - 1)
     x = jnp.take(emb, safe, axis=0) * ok[..., None].astype(emb.dtype)
-    x = atp_boundary(x, ctx.ax1)
+    if scatter_seq and ctx.seq_parallel and ctx.ax1 is not None:
+        if x.shape[1] % ctx.d1:
+            raise ValueError(
+                f"seq_parallel requires seq ({x.shape[1]}) divisible by "
+                f"d1={ctx.d1}")
+        x = atp_reduce_scatter(x, ctx.ax1, dim=1)
+    else:
+        x = atp_boundary(x, ctx.ax1)
     if cfg.embed_scale:
         x = x * math.sqrt(cfg.d_model)
     return x
@@ -482,16 +497,33 @@ def forward(
     remat: bool = False,
 ):
     """Returns (hidden [b, s, h/d2], new_caches, aux_sum, x_emb0)."""
+    if ctx.seq_parallel:
+        unsupported = [s.kind for s in segments(cfg) if s.kind != "dense"]
+        if unsupported:
+            raise NotImplementedError(
+                f"seq_parallel block I/O only wired for dense segments, "
+                f"config has {sorted(set(unsupported))}")
+        if caches is not None:
+            raise NotImplementedError("seq_parallel does not apply to decode")
+        if cfg.mtp:
+            raise NotImplementedError("seq_parallel + MTP head unsupported")
     if embeds is not None:
         x = embeds
+        x_emb0 = x
+        # externally-supplied embeds are ax1-replicated: free local slice
+        x = seq_scatter(ctx, x, dim=1)
     else:
-        x = embed_tokens(ctx, cfg, params["embed"], tokens)
-    x_emb0 = x
+        # seq-parallel entry fuses the vocab-parallel psum(ax1) with the
+        # seq slice into one psum_scatter (x_emb0 is then seq-sharded,
+        # fine: its consumers — zamba/MTP — are guarded off under sp)
+        x = embed_tokens(ctx, cfg, params["embed"], tokens,
+                         scatter_seq=ctx.seq_parallel)
+        x_emb0 = x
     aux_total = jnp.zeros((), jnp.float32)
     if cfg.moe is not None and ctx.dp_axes:
         # MoE aux loss varies with this rank's tokens -> type it varying
         # over the data axes so the scan carry is consistent
-        aux_total = lax.pcast(aux_total, ctx.dp_axes, to="varying")
+        aux_total = compat.pcast(aux_total, ctx.dp_axes, to="varying")
     new_caches = {} if caches is not None else None
 
     b_loc = x.shape[0]
@@ -579,6 +611,8 @@ def forward(
             raise ValueError(seg.kind)
 
     x = L.norm(ctx, cfg, x, params["final_norm"])
+    # leave the sequence-parallel domain: heads/loss see the full sequence
+    x = seq_gather(ctx, x, dim=1)
     return x, new_caches, aux_total, x_emb0
 
 

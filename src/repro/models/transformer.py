@@ -202,13 +202,18 @@ def dense_block(
     ctx: ATPContext, cfg: ModelConfig, p, x, positions, plan,
     layer_window: int = 0, cache=None,
 ):
-    h = L.norm(ctx, cfg, x, p["ln_attn"])
+    """With ``ctx.seq_parallel`` the residual stream x is seq-sharded over
+    ax1: the entry norms fold the all-gather to full sequence, and the
+    row-first output projections (f2/f4) psum_scatter back — post-block
+    norms and residual adds stay in the seq-sharded domain."""
+    sp = ctx.seq_parallel and cache is None
+    h = L.norm(ctx, cfg, x, p["ln_attn"], gather_seq=sp)
     a, new_cache = attn_block(ctx, cfg, p["attn"], h, positions, plan,
                               layer_window=layer_window, cache=cache)
     if cfg.post_block_norms:
         a = L.norm(ctx, cfg, a, p["ln_post_attn"])
     x = x + a
-    h = L.norm(ctx, cfg, x, p["ln_mlp"])
+    h = L.norm(ctx, cfg, x, p["ln_mlp"], gather_seq=sp)
     m = mlp_block(ctx, cfg, p["mlp"], h)
     if cfg.post_block_norms:
         m = L.norm(ctx, cfg, m, p["ln_post_mlp"])

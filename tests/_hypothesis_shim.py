@@ -1,0 +1,93 @@
+"""Minimal deterministic stand-in for `hypothesis` when it isn't installed.
+
+The container for this repo does not ship hypothesis and installing deps is
+off-limits; the property tests only use a tiny slice of its API
+(`given`, `settings`, `strategies.integers/sampled_from/booleans`, `.map`).
+This shim replays each property with a fixed-seed PRNG for
+``settings(max_examples=...)`` iterations — strictly weaker than real
+hypothesis (no shrinking, no database) but deterministic and dependency-free.
+
+Installed into ``sys.modules["hypothesis"]`` by conftest only when the real
+package is missing.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def map(self, f):
+        return _Strategy(lambda rnd: f(self._sample(rnd)))
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rnd: rnd.choice(elements))
+
+
+def booleans():
+    return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        n = getattr(fn, "_shim_max_examples", 20)
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        # hypothesis fills positional strategies from the rightmost params
+        # and keyword strategies by name; the remaining (self, fixtures)
+        # must stay visible to pytest.
+        drop = {p.name for p in params[len(params) - len(arg_strats):]}
+        drop |= set(kw_strats)
+        kept = [p for p in params if p.name not in drop]
+        arg_names = [p.name for p in params if p.name in drop
+                     and p.name not in kw_strats]
+
+        def wrapper(*args, **kwargs):
+            rnd = random.Random(0)
+            for _ in range(n):
+                drawn = dict(zip(arg_names, (s._sample(rnd) for s in arg_strats)))
+                drawn.update({k: s._sample(rnd) for k, s in kw_strats.items()})
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.sampled_from = sampled_from
+    strategies.booleans = booleans
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

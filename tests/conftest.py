@@ -13,6 +13,17 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
+try:  # hypothesis is optional in the container; fall back to the shim
+    import hypothesis  # noqa: F401  # noqa: E402
+except ImportError:
+    import os.path as _osp  # noqa: E402
+    import sys as _sys  # noqa: E402
+
+    _sys.path.insert(0, _osp.dirname(__file__))
+    import _hypothesis_shim  # noqa: E402
+
+    _hypothesis_shim.install()
+
 
 @pytest.fixture(scope="session")
 def devices8():

@@ -3,6 +3,7 @@ recovery, straggler watchdog (deliverable: large-scale runnability)."""
 import os
 
 import jax
+from repro.core import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -38,13 +39,11 @@ class TestCheckpoint:
     def test_elastic_reshard_on_restore(self, tmp_path, devices8):
         """Save under one mesh, restore under a different one."""
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh4 = jax.make_mesh((4,), ("data",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+        mesh4 = compat.make_mesh((4,), ("data",))
         x = jax.device_put(jnp.arange(16.0),
                            NamedSharding(mesh4, P("data")))
         ckpt.save(str(tmp_path), 1, {"x": x})
-        mesh8 = jax.make_mesh((8,), ("data",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+        mesh8 = compat.make_mesh((8,), ("data",))
         tgt = NamedSharding(mesh8, P("data"))
         out, _ = ckpt.restore(str(tmp_path), {"x": jnp.zeros(16)},
                               shardings={"x": tgt})
