@@ -13,23 +13,53 @@ strategy-invariant, so comm-time ratios bound the end-to-end gain.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 from repro.configs.registry import PAPER_MODELS
 from repro.core import comm_matrix as cm
+from repro.core.calibrate import CalibrationTable
 from repro.core.cost_model import LayerCommProfile, t_comm
 from repro.core.mesh import factorizations
+from repro.core.plan import plan_search
 from repro.core.search import search_strategy
 
 BATCH, SEQ = 4, 2048  # paper defaults
+
+#: every emitted table row's chosen plan, keyed "artifact/ic/model" —
+#: flushed to BENCH_paper_plans.json so the numbers are reproducible
+PLAN_LOG: dict[str, dict] = {}
 
 
 def _profile(m):
     return LayerCommProfile.gpt(m.d_model)
 
 
+def _log_plan(key: str, plan) -> str:
+    """Record the full plan JSON behind a table row (keyed by the row name);
+    returns a compact comma-free tag safe for the CSV ``derived`` column."""
+    PLAN_LOG[key] = plan.to_dict()
+    sp = "+sp" if plan.seq_parallel else ""
+    return (f"{plan.d1}x{plan.d2}ck{plan.chunks}"
+            f"{plan.boundary_mode}{sp}")
+
+
+def write_plan_log(path: str | None = None) -> str:
+    path = path or os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_paper_plans.json")
+    with open(path, "w") as f:
+        json.dump(PLAN_LOG, f, indent=1, sort_keys=True)
+    return os.path.abspath(path)
+
+
 def fig10_sota(rows=None):
-    """ATP strategy vs Megatron (ATP-1) comm time per interconnect/model."""
+    """ATP strategy vs Megatron (ATP-1) comm time per interconnect/model.
+
+    Both search paths see the measured-calibration table (paper §5.3):
+    the Eq. 2 ranking produces the headline numbers and the overlap-aware
+    ``plan_search`` (same calibration) records the executable plan per row.
+    """
     ics = {
         "IC1(PCIe)": (cm.ic1_pcie_8gpu(), 8,
                       {(2, 4): (1.20, 4.95), (8, 1): (0.97, 0.97),
@@ -40,15 +70,21 @@ def fig10_sota(rows=None):
     }
     out = []
     for ic_name, (matrix, n, calib) in ics.items():
+        table = (CalibrationTable.from_pairs(calib, source="paper-measured")
+                 if calib else None)
         for mname, mcfg in PAPER_MODELS.items():
             r = search_strategy(matrix, n, layers=mcfg.num_layers,
                                 batch=BATCH, seq=SEQ, profile=_profile(mcfg),
-                                calibration=calib)
+                                calibration=table)
             t_meg = next(c.t_comm for c in r.ranked if (c.d1, c.d2) == (n, 1))
             best = r.best
             gain = (t_meg - best.t_comm) / max(t_meg, 1e-12)
+            plan = plan_search(matrix, n, layers=mcfg.num_layers, batch=BATCH,
+                               seq=SEQ, profile=_profile(mcfg),
+                               calibration=table).best
             out.append((ic_name, mname, best.d1, best.d2,
-                        best.t_comm * 1e3, t_meg * 1e3, 100 * gain))
+                        best.t_comm * 1e3, t_meg * 1e3, 100 * gain,
+                        _log_plan(f"fig10/{ic_name}/{mname}", plan)))
     return out
 
 
@@ -93,7 +129,11 @@ def table3_overlap():
 
 
 def fig11_mesh_sweep():
-    """T_comm of every DeviceMesh(N/i, i) per interconnect (paper Fig.11)."""
+    """T_comm of every DeviceMesh(N/i, i) per interconnect (paper Fig.11).
+
+    The calibration table reaches both rankings; each interconnect's
+    overlap-searched winning plan lands in the PLAN_LOG artifact.
+    """
     ics = {
         "IC1(PCIe,calib)": (cm.ic1_pcie_8gpu(), 8,
                             {(2, 4): (1.20, 4.95), (8, 1): (0.97, 0.97)}),
@@ -105,8 +145,14 @@ def fig11_mesh_sweep():
     m = PAPER_MODELS["gpt-m3"]
     out = []
     for ic_name, (matrix, n, calib) in ics.items():
+        table = (CalibrationTable.from_pairs(calib, source="paper-measured")
+                 if calib else None)
         r = search_strategy(matrix, n, layers=m.num_layers, batch=BATCH,
-                            seq=SEQ, profile=_profile(m), calibration=calib)
+                            seq=SEQ, profile=_profile(m), calibration=table)
+        plan = plan_search(matrix, n, layers=m.num_layers, batch=BATCH,
+                           seq=SEQ, profile=_profile(m),
+                           calibration=table).best
+        _log_plan(f"fig11/{ic_name}", plan)
         for c in r.ranked:
             out.append((ic_name, c.d1, c.d2, c.t_comm * 1e3))
     return out

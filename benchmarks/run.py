@@ -19,9 +19,9 @@ def main() -> None:
     print("name,us_per_call,derived")
 
     # --- Fig. 10: SOTA comparison (comm-model, IC1..IC4 x M1..M4) ----------
-    for ic, m, d1, d2, t_atp, t_meg, gain in paper_tables.fig10_sota():
+    for ic, m, d1, d2, t_atp, t_meg, gain, plan_js in paper_tables.fig10_sota():
         print(f"fig10/{ic}/{m},{t_atp*1e3:.1f},mesh=({d1}x{d2});"
-              f"megatron_ms={t_meg:.2f};gain_pct={gain:.1f}")
+              f"megatron_ms={t_meg:.2f};gain_pct={gain:.1f};plan={plan_js}")
 
     # --- Table 3: chunk-based overlapping (measured on host mesh) ----------
     base = None
@@ -51,6 +51,10 @@ def main() -> None:
                   f"useful={a['useful_ratio']:.2f}")
     except Exception as e:  # dry-run artifacts are optional for the bench
         print(f"roofline/unavailable,0,{type(e).__name__}")
+
+    # every row's chosen ParallelPlan, as one auditable artifact
+    path = paper_tables.write_plan_log()
+    print(f"plans/artifact,0,{path}")
 
 
 if __name__ == "__main__":

@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.atp import make_context
-from repro.core.mesh import atp_topo
+from repro.core.cost_model import LayerCommProfile
+from repro.core.plan import plan_search
 from repro.data.pipeline import DataConfig, TokenSource
 from repro.launch.steps import build_train_step
 from repro.models import lm
@@ -52,14 +52,21 @@ def main():
     if args.ckpt_dir is None:
         args.ckpt_dir = f"/tmp/repro_train_lm_{CFG.name}"
 
-    topo = atp_topo(dp=2, d1=2, d2=2)
+    # the searched ParallelPlan is the one strategy artifact: ranked on the
+    # v5e comm model for this workload, then handed to the step builder
+    plan = plan_search(
+        "v5e", 4, layers=CFG.num_layers, batch=args.batch, seq=args.seq,
+        profile=LayerCommProfile.gpt(CFG.d_model), dp=2,
+        chunks_options=(1,), seq_parallel_options=(False,)).best
+    topo = plan.topo()
     mesh = topo.build()
-    ctx = make_context(topo)
-    print(f"params: {CFG.param_count()/1e6:.1f}M  mesh: {topo.shape} {topo.names}")
+    ctx = plan.context(topo)
+    print(f"params: {CFG.param_count()/1e6:.1f}M  mesh: {topo.shape} "
+          f"{topo.names}  plan: {plan.describe()}")
 
     opt_cfg = adamw.AdamWConfig(lr=1e-3, mode="zero1", warmup_steps=20,
                                 total_steps=args.steps)
-    step_fn, info = build_train_step(CFG, topo, opt_cfg, mesh=mesh)
+    step_fn, info = build_train_step(CFG, topo, opt_cfg, mesh=mesh, plan=plan)
     source = TokenSource(DataConfig(vocab_size=CFG.vocab_size,
                                     seq_len=args.seq,
                                     global_batch=args.batch))

@@ -1,3 +1,12 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# The strategy stack's public surface (docs/strategy.md):
+#   plan.ParallelPlan / plan.plan_search — the one serializable strategy
+#   calibrate.calibrate_mesh            — measured (B1,B2) + boundary mode
+#   atp.make_context(plan=...)          — plan -> execution context
+
+from repro.core.calibrate import CalibrationTable, calibrate_mesh  # noqa: F401
+from repro.core.plan import (ParallelPlan, plan_search,  # noqa: F401
+                             replan_elastic)

@@ -52,6 +52,35 @@ from repro.core import overlap
 from repro.core.mesh import MeshTopo, dp_axis_names, tp_axis_names
 
 
+class _Removed:
+    """Sentinel singleton for retired knobs (copies compare identical)."""
+
+    def __repr__(self):
+        return "<removed>"
+
+    def __deepcopy__(self, memo):
+        return self
+
+    def __copy__(self):
+        return self
+
+    def __eq__(self, other):
+        return isinstance(other, _Removed)
+
+    def __hash__(self):
+        return hash(_Removed)
+
+
+_USE_REDUCE_SCATTER_REMOVED = _Removed()
+_USE_REDUCE_SCATTER_MSG = (
+    "ATPContext.use_reduce_scatter was retired: the fused psum+slice "
+    "boundary it named is exactly the reduce-scatter row boundary of the "
+    "sequence-parallel block I/O spec.  Pass seq_parallel=True (or a "
+    "ParallelPlan with seq_parallel=True) instead; the strategy search "
+    "ranks it as part of the plan space (core.plan.plan_search)."
+)
+
+
 @dataclasses.dataclass(frozen=True)
 class ATPContext:
     """Static distribution context threaded through all model code."""
@@ -61,9 +90,23 @@ class ATPContext:
     ax2: str | None          # device-mesh dim 2 (size d2)
     dp_axes: tuple[str, ...]  # data-parallel axes (pod, data)
     chunks: int = 1           # chunk-based overlapping factor (paper §4.1)
-    use_reduce_scatter: bool = False  # beyond-paper: fuse psum+slice
     boundary_mode: Literal["psum", "ring"] = "psum"  # see module docstring
     seq_parallel: bool = False  # block I/O [Shard(seq)@ax1, Shard(f)@ax2]
+    # retired knob: any explicit value raises (subsumed by seq_parallel)
+    use_reduce_scatter: object = dataclasses.field(
+        default=_USE_REDUCE_SCATTER_REMOVED, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.use_reduce_scatter is not _USE_REDUCE_SCATTER_REMOVED:
+            raise TypeError(_USE_REDUCE_SCATTER_MSG)
+        if self.boundary_mode not in ("psum", "ring"):
+            # a bool here is almost certainly a seed-era positional
+            # use_reduce_scatter (this slot used to hold that knob)
+            if isinstance(self.boundary_mode, bool):
+                raise TypeError(_USE_REDUCE_SCATTER_MSG)
+            raise ValueError(
+                f"boundary_mode must be 'psum' or 'ring', got "
+                f"{self.boundary_mode!r}")
 
     @property
     def d1(self) -> int:
@@ -104,18 +147,46 @@ class ATPContext:
 
 
 def make_context(
-    topo: MeshTopo,
+    topo: MeshTopo | None = None,
     chunks: int = 1,
-    use_reduce_scatter: bool = False,
     boundary_mode: Literal["psum", "ring"] = "psum",
     seq_parallel: bool = False,
+    *,
+    plan=None,
+    **retired,
 ) -> ATPContext:
+    """Build the execution context — from loose knobs or a ParallelPlan.
+
+    ``make_context(plan=p)`` is the canonical path: the plan's topology
+    (or an explicitly passed ``topo``, e.g. the dryrun's dp=16 mesh) plus
+    the plan's chunks / boundary_mode / seq_parallel.  A plan whose
+    (d1, d2) disagrees with the topology's TP axes is a hard error — the
+    searched strategy and the executed mesh must be the same artifact.
+    """
+    if "use_reduce_scatter" in retired:
+        raise TypeError(_USE_REDUCE_SCATTER_MSG)
+    if retired:
+        raise TypeError(f"make_context got unexpected kwargs "
+                        f"{sorted(retired)}")
+    if plan is not None:
+        if topo is None:
+            topo = plan.topo()
+        chunks = plan.chunks
+        boundary_mode = plan.boundary_mode
+        seq_parallel = plan.seq_parallel
+    if topo is None:
+        raise TypeError("make_context needs a MeshTopo or a plan")
     ax1, ax2 = tp_axis_names(topo)
-    return ATPContext(
+    ctx = ATPContext(
         topo=topo, ax1=ax1, ax2=ax2, dp_axes=dp_axis_names(topo),
-        chunks=chunks, use_reduce_scatter=use_reduce_scatter,
-        boundary_mode=boundary_mode, seq_parallel=seq_parallel,
+        chunks=chunks, boundary_mode=boundary_mode, seq_parallel=seq_parallel,
     )
+    if plan is not None and (ctx.d1, ctx.d2) != (plan.d1, plan.d2):
+        raise ValueError(
+            f"plan/topology mismatch: plan prescribes DeviceMesh"
+            f"({plan.d1},{plan.d2}) but mesh TP axes give "
+            f"({ctx.d1},{ctx.d2}) on {topo.axes}")
+    return ctx
 
 
 # ---------------------------------------------------------------------------

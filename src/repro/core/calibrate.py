@@ -1,0 +1,230 @@
+"""On-mesh calibration of the ATP cost model (paper §5.3).
+
+The analytic hierarchical comm matrix (Eq. 3/4) predicts per-mesh-dim
+algorithm bandwidths; §5.3 shows the prediction can be badly wrong on
+messy fabrics (IC1: PCIe ACS/NUMA effects), and that re-ranking with
+*measured* (B1, B2) recovers the right strategy.  This module produces
+those measurements as a ``CalibrationTable``: for each (d1, d2)
+factorization of the TP degree that fits the available devices, it
+micro-benchmarks
+
+  - the all-reduce over each mesh dim  -> effective algorithm bandwidths
+    (B1, B2) in the seed convention (payload_bytes / measured_seconds),
+    directly substitutable for Eq. 4's values in ``t_comm`` /
+    ``t_comm_overlap``;
+  - the psum vs explicit-ring boundary  -> preferred ``boundary_mode``.
+
+Tables are plain data (JSON round-trippable) so a ``ParallelPlan`` can
+carry them: a plan searched on one machine records exactly which measured
+numbers drove the choice.  Measurement is injectable (``measure=``) so
+tests and the cost-model path stay deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Mapping
+
+from repro.core.comm_matrix import HierarchicalCommMatrix
+from repro.core.mesh import atp_topo, factorizations
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibEntry:
+    """Measured numbers for one (d1, d2) factorization.
+
+    b1 / b2 are *algorithm* bandwidths in GB/s (the seed ``calibration``
+    convention: all-reduce time = payload_bytes / (B * 1e9)); inf means
+    the dim is singleton.  t_psum / t_ring are measured seconds of one
+    boundary all-reduce in each implementation (None when unmeasured).
+    """
+
+    b1: float
+    b2: float
+    t_psum: float | None = None
+    t_ring: float | None = None
+
+    @property
+    def boundary_mode(self) -> str | None:
+        if self.t_psum is None or self.t_ring is None:
+            return None
+        return "ring" if self.t_ring < self.t_psum else "psum"
+
+    def to_dict(self) -> dict:
+        return {"b1": _enc_inf(self.b1), "b2": _enc_inf(self.b2),
+                "t_psum": self.t_psum, "t_ring": self.t_ring}
+
+    @staticmethod
+    def from_dict(d: Mapping) -> "CalibEntry":
+        return CalibEntry(b1=_dec_inf(d["b1"]), b2=_dec_inf(d["b2"]),
+                          t_psum=d.get("t_psum"), t_ring=d.get("t_ring"))
+
+
+def _enc_inf(v: float):
+    return "inf" if math.isinf(v) else v
+
+
+def _dec_inf(v) -> float:
+    return math.inf if v == "inf" else float(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationTable:
+    """Per-factorization measured entries; JSON round-trippable.
+
+    ``source`` records where the numbers came from ("measured", "model",
+    or a free-form label such as the paper's published IC1 values).
+    """
+
+    entries: tuple[tuple[tuple[int, int], CalibEntry], ...] = ()
+    source: str = "measured"
+
+    def get(self, d1: int, d2: int) -> CalibEntry | None:
+        for (a, b), e in self.entries:
+            if (a, b) == (d1, d2):
+                return e
+        return None
+
+    def bandwidths(self, d1: int, d2: int) -> tuple[float, float] | None:
+        e = self.get(d1, d2)
+        return (e.b1, e.b2) if e is not None else None
+
+    def boundary_mode(self, d1: int, d2: int) -> str | None:
+        e = self.get(d1, d2)
+        return e.boundary_mode if e is not None else None
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @staticmethod
+    def from_pairs(pairs: Mapping[tuple[int, int], tuple[float, float]],
+                   source: str = "external") -> "CalibrationTable":
+        """Lift a seed-style {(d1,d2): (B1,B2)} dict into a table."""
+        return CalibrationTable(
+            entries=tuple(((d1, d2), CalibEntry(b1=b1, b2=b2))
+                          for (d1, d2), (b1, b2) in sorted(pairs.items())),
+            source=source)
+
+    @staticmethod
+    def coerce(calibration) -> "CalibrationTable | None":
+        """Accept a table, a seed-style {(d1,d2): (B1,B2)} dict, or None —
+        the one dispatch point for every calibration-taking API."""
+        if calibration is None or isinstance(calibration, CalibrationTable):
+            return calibration
+        return CalibrationTable.from_pairs(calibration)
+
+    def as_pairs(self) -> dict[tuple[int, int], tuple[float, float]]:
+        """Seed-style {(d1,d2): (B1,B2)} view (for ``search_strategy``)."""
+        return {(d1, d2): (e.b1, e.b2) for (d1, d2), e in self.entries}
+
+    def to_dict(self) -> dict:
+        return {"source": self.source,
+                "entries": {f"{d1}x{d2}": e.to_dict()
+                            for (d1, d2), e in self.entries}}
+
+    @staticmethod
+    def from_dict(d: Mapping) -> "CalibrationTable":
+        entries = []
+        for key, ed in d.get("entries", {}).items():
+            d1, d2 = (int(p) for p in key.split("x"))
+            entries.append(((d1, d2), CalibEntry.from_dict(ed)))
+        return CalibrationTable(entries=tuple(sorted(entries)),
+                                source=d.get("source", "measured"))
+
+
+# ---------------------------------------------------------------------------
+# On-mesh micro-benchmarks.
+# ---------------------------------------------------------------------------
+
+
+def _time_fn(fn, *args, repeats: int = 3,
+             timer: Callable[[], float] = time.perf_counter) -> float:
+    """Best-of-N wall time of a blocking call (min filters scheduler noise)."""
+    import jax
+
+    jax.block_until_ready(fn(*args))  # compile + warm up
+    best = math.inf
+    for _ in range(max(1, repeats)):
+        t0 = timer()
+        jax.block_until_ready(fn(*args))
+        best = min(best, timer() - t0)
+    return best
+
+
+def _measure_factorization(d1: int, d2: int, payload_bytes: int,
+                           repeats: int) -> CalibEntry:
+    """All-reduce timing over each TP mesh dim + psum-vs-ring boundary."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import overlap
+    from repro.core.compat import shard_map
+    from repro.core.mesh import tp_axis_names
+
+    topo = atp_topo(1, d1, d2)
+    mesh = topo.build(jax.devices()[: topo.size])
+    ax1, ax2 = tp_axis_names(topo)
+    elems = max(1, payload_bytes // 4)
+
+    def time_allreduce(axis: str, d: int, ring: bool = False) -> float:
+        x = jnp.ones((d, elems), jnp.float32)
+        red = ((lambda v: overlap.ring_all_reduce(v, axis, d)) if ring
+               else (lambda v: lax.psum(v, axis)))
+        f = jax.jit(shard_map(red, mesh=mesh, in_specs=P(axis),
+                              out_specs=P(axis), check_vma=True))
+        return _time_fn(f, x, repeats=repeats)
+
+    b1 = b2 = math.inf
+    t_psum = t_ring = None
+    if ax1 is not None:
+        t_psum = time_allreduce(ax1, d1)
+        t_ring = time_allreduce(ax1, d1, ring=True)
+        b1 = payload_bytes / t_psum / 1e9
+        if ax2 is not None:
+            b2 = payload_bytes / time_allreduce(ax2, d2) / 1e9
+    elif ax2 is not None:
+        # boundary collectives live on the only non-trivial dim here, so
+        # the psum timing doubles as the b2 measurement
+        t_psum = time_allreduce(ax2, d2)
+        t_ring = time_allreduce(ax2, d2, ring=True)
+        b2 = payload_bytes / t_psum / 1e9
+    return CalibEntry(b1=b1, b2=b2, t_psum=t_psum, t_ring=t_ring)
+
+
+def calibrate_mesh(
+    tp_degree: int,
+    matrix: HierarchicalCommMatrix | None = None,
+    *,
+    payload_kb: int = 256,
+    repeats: int = 3,
+    measure: Callable[[int, int], CalibEntry] | None = None,
+) -> CalibrationTable:
+    """Measure (B1, B2) + boundary latency for every runnable (d1, d2).
+
+    ``matrix`` (optional) restricts the sweep to factorizations that embed
+    into the modelled topology — the same filter the search applies — so
+    the table's keys line up with the strategy space.  Factorizations
+    needing more devices than are attached are skipped (the table is
+    partial; the search falls back to the analytic model for missing
+    keys).  ``measure`` overrides the on-mesh micro-benchmark with an
+    arbitrary (d1, d2) -> CalibEntry function (tests, simulators).
+    """
+    import jax
+
+    ndev = len(jax.devices())
+    entries = []
+    for d1, d2 in factorizations(tp_degree):
+        if matrix is not None:
+            try:
+                matrix.axis_bandwidths(d1, d2)
+            except ValueError:
+                continue
+        if measure is None and d1 * d2 > ndev:
+            continue
+        fn = measure or (lambda a, b: _measure_factorization(
+            a, b, payload_kb * 1024, repeats))
+        entries.append(((d1, d2), fn(d1, d2)))
+    return CalibrationTable(entries=tuple(entries), source="measured")

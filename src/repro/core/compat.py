@@ -36,6 +36,13 @@ except ImportError:  # jax 0.4.x / 0.5.x
 _SHARD_MAP_PARAMS = set(inspect.signature(_shard_map).parameters)
 _CHECK_KW = "check_vma" if "check_vma" in _SHARD_MAP_PARAMS else "check_rep"
 
+#: True on jax 0.4.x/0.5.x, whose legacy replication checker predates the
+#: vma rewrite: it has no rules for custom_vjp boundaries, so full train /
+#: serve steps (gpipe_loss, ring collectives) cannot be statically typed
+#: there even when numerically correct.  Callers building whole-step
+#: shard_maps consult this to fall back to check=False on legacy jax.
+LEGACY_REP_CHECKER = _CHECK_KW == "check_rep"
+
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kw):
     """``jax.shard_map`` with the ``check_vma`` spelling on every version."""

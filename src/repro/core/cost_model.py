@@ -198,6 +198,7 @@ def t_comm_overlap(
     peak_tflops: float = 200.0,
     algo: str = "ring",
     alpha_s: float = 0.0,
+    calibrated: tuple[float, float] | None = None,
 ) -> OverlapStrategyCost:
     """Generalised Eq. 2 with explicit-overlap accounting.
 
@@ -209,12 +210,26 @@ def t_comm_overlap(
     Effective comm per boundary = _exposed(comm, producing-GEMM, chunks).
     With chunks=1, algo="rabenseifner", alpha_s=0 this reduces exactly to
     Eq. 2 (the parity the strategy-search acceptance test pins down).
+
+    ``calibrated`` overrides (B1, B2) with measured *algorithm* bandwidths
+    in the same convention as ``t_comm`` (paper §5.3: all-reduce time =
+    payload/B).  Internally the raw link bandwidth is recovered by
+    inverting Eq. 4, so a calibrated all-reduce costs exactly payload/B
+    regardless of ``algo`` — matching the seed Eq. 2 path bit-for-bit.
     """
     if profile.hidden is None:
         raise ValueError(
             "t_comm_overlap needs profile.hidden to model GEMM time; use "
             "LayerCommProfile.gpt(...) or pass hidden= explicitly")
     b1_raw, b2_raw = matrix.axis_bandwidths(d1, d2)
+    if calibrated is not None:
+        cb1, cb2 = calibrated
+        # invert Eq. 4: raw = B_alg * 2(d-1)/d (the all-reduce transfer
+        # factor), so collective_seconds(vol, d, raw) == vol / B_alg
+        if d1 > 1 and cb1 is not None and not math.isinf(cb1):
+            b1_raw = cb1 * 2.0 * (d1 - 1) / d1
+        if d2 > 1 and cb2 is not None and not math.isinf(cb2):
+            b2_raw = cb2 * 2.0 * (d2 - 1) / d2
     steps = 2.0 * layers  # fwd + bwd per layer
     vol_col = batch * seq * profile.col_first_out / max(1, d1) * bytes_per_elem
     vol_row = batch * seq * profile.row_first_out / max(1, d2) * bytes_per_elem

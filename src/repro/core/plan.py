@@ -1,0 +1,318 @@
+"""ParallelPlan: the single serializable strategy artifact (paper §3.5, §5.3).
+
+ATP's thesis is that the *searched* strategy drives execution.  This module
+makes that literal: ``plan_search`` ranks the whole strategy space —
+DeviceMesh(d1, d2) x chunks x seq_parallel, optionally re-weighted by an
+on-mesh :class:`~repro.core.calibrate.CalibrationTable` — and emits frozen,
+JSON-round-trippable :class:`ParallelPlan` objects.  Every execution layer
+(``make_context(plan=...)``, the ``launch/steps`` builders, the train /
+serve / dryrun launchers, the elastic trainer restart path and the paper
+benchmarks) consumes a plan instead of loose kwargs, so a strategy can be
+saved, diffed, shipped and re-applied:
+
+    plan = plan_search("ic4", 16, layers=..., batch=..., seq=...,
+                       profile=prof).best
+    plan.save("plan.json")                    # -> CI artifact / flag file
+    ctx = make_context(plan=ParallelPlan.load("plan.json"))   # identical
+
+``plan_search(..., chunks_options=(1,), seq_parallel_options=(False,),
+algo="rabenseifner", alpha_s=0)`` degrades exactly to the seed Eq. 2
+``search_strategy`` ranking (pinned by tests on IC1-IC6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Mapping
+
+from repro.core import comm_matrix
+from repro.core.calibrate import CalibrationTable
+from repro.core.comm_matrix import HierarchicalCommMatrix
+from repro.core.cost_model import LayerCommProfile, OverlapStrategyCost
+from repro.core.mesh import MeshTopo, atp_topo
+from repro.core.search import search_strategy_overlap
+
+PLAN_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictedCost:
+    """Modelled per-step seconds behind a plan choice (provenance, not input)."""
+
+    t_comm: float
+    t_exposed: float
+    t_gemm: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: Mapping) -> "PredictedCost":
+        return PredictedCost(t_comm=float(d["t_comm"]),
+                             t_exposed=float(d["t_exposed"]),
+                             t_gemm=float(d["t_gemm"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """One complete, serializable parallelization strategy.
+
+    Only (d1, d2, dp, pods, chunks, boundary_mode, seq_parallel) affect
+    execution — ``context()`` is a pure function of them.  ``topology``,
+    ``calibration``, ``predicted`` and ``provenance`` record *why* the plan
+    was chosen, so saved artifacts are auditable and re-searchable.
+    """
+
+    d1: int
+    d2: int
+    dp: int = 1
+    pods: int = 1
+    chunks: int = 1
+    boundary_mode: str = "psum"
+    seq_parallel: bool = False
+    topology: str | None = None  # comm-matrix preset name (if any)
+    calibration: CalibrationTable | None = None
+    predicted: PredictedCost | None = None
+    provenance: tuple[tuple[str, str], ...] = ()
+
+    def __post_init__(self):
+        if self.d1 < 1 or self.d2 < 1 or self.dp < 1 or self.pods < 1:
+            raise ValueError(f"plan degrees must be >= 1: {self}")
+        if self.chunks < 1:
+            raise ValueError(f"plan chunks must be >= 1, got {self.chunks}")
+        if self.boundary_mode not in ("psum", "ring"):
+            raise ValueError(
+                f"boundary_mode must be 'psum' or 'ring', got "
+                f"{self.boundary_mode!r}")
+        # canonical provenance ordering so equality survives JSON round-trips
+        object.__setattr__(self, "provenance", tuple(sorted(
+            (str(k), str(v)) for k, v in self.provenance)))
+
+    # -- execution ---------------------------------------------------------
+
+    @property
+    def tp(self) -> int:
+        return self.d1 * self.d2
+
+    @property
+    def devices(self) -> int:
+        return self.pods * self.dp * self.tp
+
+    def topo(self) -> MeshTopo:
+        """The logical mesh this plan prescribes."""
+        return atp_topo(self.dp, self.d1, self.d2, pods=self.pods)
+
+    def context(self, topo: MeshTopo | None = None):
+        """Build the ATPContext this plan prescribes (on ``topo`` if given)."""
+        from repro.core.atp import make_context
+
+        return make_context(topo if topo is not None else self.topo(),
+                            plan=self)
+
+    def describe(self) -> str:
+        sp = "+sp" if self.seq_parallel else ""
+        return (f"DeviceMesh({self.d1},{self.d2}) dp={self.dp} "
+                f"chunks={self.chunks} {self.boundary_mode}{sp}")
+
+    def with_(self, **changes) -> "ParallelPlan":
+        """Functional update (e.g. re-binding dp to a new device count)."""
+        return dataclasses.replace(self, **changes)
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "format_version": PLAN_FORMAT_VERSION,
+            "d1": self.d1, "d2": self.d2, "dp": self.dp, "pods": self.pods,
+            "chunks": self.chunks, "boundary_mode": self.boundary_mode,
+            "seq_parallel": self.seq_parallel, "topology": self.topology,
+            "calibration": (self.calibration.to_dict()
+                            if self.calibration is not None else None),
+            "predicted": (self.predicted.to_dict()
+                          if self.predicted is not None else None),
+            # list-of-pairs, not an object: tag keys may repeat (e.g. two
+            # successive "elastic" resizes) and must all survive round-trip
+            "provenance": [[k, v] for k, v in self.provenance],
+        }
+
+    @staticmethod
+    def from_dict(d: Mapping) -> "ParallelPlan":
+        ver = d.get("format_version", PLAN_FORMAT_VERSION)
+        if ver > PLAN_FORMAT_VERSION:
+            raise ValueError(
+                f"plan format_version {ver} is newer than supported "
+                f"({PLAN_FORMAT_VERSION}); upgrade the repro package")
+        calib = d.get("calibration")
+        pred = d.get("predicted")
+        prov = d.get("provenance", ())
+        prov_pairs = prov.items() if isinstance(prov, Mapping) else prov
+        return ParallelPlan(
+            d1=int(d["d1"]), d2=int(d["d2"]),
+            dp=int(d.get("dp", 1)), pods=int(d.get("pods", 1)),
+            chunks=int(d.get("chunks", 1)),
+            boundary_mode=d.get("boundary_mode", "psum"),
+            seq_parallel=bool(d.get("seq_parallel", False)),
+            topology=d.get("topology"),
+            calibration=(CalibrationTable.from_dict(calib)
+                         if calib is not None else None),
+            predicted=(PredictedCost.from_dict(pred)
+                       if pred is not None else None),
+            provenance=tuple((str(k), str(v)) for k, v in prov_pairs),
+        )
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "ParallelPlan":
+        return ParallelPlan.from_dict(json.loads(s))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+        return path
+
+    @staticmethod
+    def load(path: str) -> "ParallelPlan":
+        with open(path) as f:
+            return ParallelPlan.from_json(f.read())
+
+
+# ---------------------------------------------------------------------------
+# Unified strategy search.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSearchResult:
+    best: ParallelPlan
+    ranked: tuple[ParallelPlan, ...]          # ascending modelled cost
+    costs: tuple[OverlapStrategyCost, ...]    # aligned with ``ranked``
+
+    def mesh(self) -> tuple[int, int]:
+        return (self.best.d1, self.best.d2)
+
+
+def _resolve_matrix(matrix) -> tuple[HierarchicalCommMatrix, str | None]:
+    if isinstance(matrix, str):
+        if matrix not in comm_matrix.PRESETS:
+            raise ValueError(f"unknown topology preset {matrix!r}; "
+                             f"have {sorted(comm_matrix.PRESETS)}")
+        return comm_matrix.PRESETS[matrix](), matrix
+    return matrix, None
+
+
+def plan_search(
+    matrix: HierarchicalCommMatrix | str,
+    tp_degree: int,
+    *,
+    layers: int,
+    batch: int,
+    seq: int,
+    profile: LayerCommProfile,
+    dp: int = 1,
+    pods: int = 1,
+    bytes_per_elem: int = 2,
+    chunks_options: tuple[int, ...] = (1, 2, 4, 8),
+    seq_parallel_options: tuple[bool, ...] = (False, True),
+    peak_tflops: float = 200.0,
+    algo: str = "ring",
+    alpha_s: float = 0.0,
+    calibration: CalibrationTable | Mapping | None = None,
+    boundary_mode: str | None = None,
+) -> PlanSearchResult:
+    """Rank the full strategy space and emit ParallelPlans.
+
+    The one entry point subsuming the seed's two searches:
+
+      - overlap knobs wide open (the defaults) == ``search_strategy_overlap``
+        extended with calibration;
+      - ``chunks_options=(1,)``, ``seq_parallel_options=(False,)``,
+        ``algo="rabenseifner"``, ``alpha_s=0`` == the seed Eq. 2
+        ``search_strategy`` ranking, exactly.
+
+    ``calibration`` accepts a :class:`CalibrationTable` or a seed-style
+    ``{(d1,d2): (B1,B2)}`` dict; measured bandwidths override Eq. 3/4 for
+    the factorizations they cover and the winning plan carries the table.
+    ``boundary_mode`` forces psum/ring; by default it follows the
+    calibration's measured preference (falling back to "psum").
+    """
+    hm, preset = _resolve_matrix(matrix)
+    calibration = CalibrationTable.coerce(calibration)
+    res = search_strategy_overlap(
+        hm, tp_degree, layers=layers, batch=batch, seq=seq, profile=profile,
+        bytes_per_elem=bytes_per_elem, chunks_options=chunks_options,
+        seq_parallel_options=seq_parallel_options, peak_tflops=peak_tflops,
+        algo=algo, alpha_s=alpha_s, calibration=calibration)
+
+    prov = (
+        ("searcher", "plan_search"),
+        ("matrix", hm.name),
+        ("algo", algo),
+        ("alpha_s", repr(alpha_s)),
+        ("peak_tflops", repr(peak_tflops)),
+        ("workload", f"layers={layers} batch={batch} seq={seq} "
+                     f"bytes={bytes_per_elem}"),
+        ("calibrated", "yes" if calibration is not None else "no"),
+    )
+
+    def to_plan(c: OverlapStrategyCost) -> ParallelPlan:
+        bm = boundary_mode
+        if bm is None and calibration is not None:
+            bm = calibration.boundary_mode(c.d1, c.d2)
+        return ParallelPlan(
+            d1=c.d1, d2=c.d2, dp=dp, pods=pods, chunks=c.chunks,
+            boundary_mode=bm or "psum", seq_parallel=c.seq_parallel,
+            topology=preset, calibration=calibration,
+            predicted=PredictedCost(t_comm=c.t_comm, t_exposed=c.t_exposed,
+                                    t_gemm=c.t_gemm),
+            provenance=prov)
+
+    ranked = tuple(to_plan(c) for c in res.ranked)
+    return PlanSearchResult(best=ranked[0], ranked=ranked, costs=res.ranked)
+
+
+def replan_elastic(
+    plan: ParallelPlan,
+    n_devices: int,
+    *,
+    layers: int | None = None,
+    batch: int | None = None,
+    seq: int | None = None,
+    profile: LayerCommProfile | None = None,
+) -> ParallelPlan:
+    """Derive a plan for a surviving device pool (elastic restart).
+
+    Data-parallel replicas absorb the loss first (they are fungible); the
+    TP degree is halved only when even dp=1 no longer fits.  dp never
+    *grows* past the original plan's dp*pods — a re-plan may only shrink
+    the job, not silently expand it onto devices the user never asked
+    for.  When the workload is known and the plan records its topology
+    preset, the surviving TP degree is re-searched from scratch;
+    otherwise the mesh is re-factorized arithmetically and every other
+    knob is kept.  The result records the resize in its provenance.
+    """
+    if n_devices < 1:
+        raise ValueError("no surviving devices to re-plan onto")
+    tp = plan.tp
+    while tp > n_devices:
+        tp //= 2
+    dp = max(1, min(plan.dp * plan.pods, n_devices // tp))
+    tag = ("elastic", f"replanned {plan.devices}->{n_devices} devices")
+    workload_known = None not in (layers, batch, seq, profile)
+    if workload_known and plan.topology is not None:
+        res = plan_search(
+            plan.topology, tp, layers=layers, batch=batch, seq=seq,
+            profile=profile, dp=dp,
+            calibration=plan.calibration if tp == plan.tp else None)
+        best = res.best
+        return best.with_(provenance=best.provenance + (tag,))
+    if tp == plan.tp:
+        return plan.with_(dp=dp, pods=1,
+                          provenance=plan.provenance + (tag,))
+    import math as _math
+
+    d1 = _math.gcd(plan.d1, tp)
+    return plan.with_(d1=d1, d2=tp // d1, dp=dp, pods=1,
+                      calibration=None,
+                      provenance=plan.provenance + (tag,))

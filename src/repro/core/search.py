@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.calibrate import CalibrationTable
 from repro.core.comm_matrix import HierarchicalCommMatrix
 from repro.core.cost_model import (LayerCommProfile, OverlapStrategyCost,
                                    StrategyCost, t_comm, t_comm_overlap)
@@ -38,11 +39,14 @@ def search_strategy(
 ) -> SearchResult:
     """Enumerate all (d1,d2) factorizations of tp_degree and rank by Eq. 2.
 
-    `calibration` maps (d1,d2) -> measured (B1,B2) overrides (paper §5.3).
+    `calibration` maps (d1,d2) -> measured (B1,B2) overrides (paper §5.3);
+    a ``calibrate.CalibrationTable`` is accepted in place of the dict.
     """
+    calibration = CalibrationTable.coerce(calibration)
     costs = []
     for d1, d2 in factorizations(tp_degree):
-        calib = calibration.get((d1, d2)) if calibration else None
+        calib = (calibration.bandwidths(d1, d2)
+                 if calibration is not None else None)
         try:
             costs.append(
                 t_comm(
@@ -88,19 +92,31 @@ def search_strategy_overlap(
     peak_tflops: float = 200.0,
     algo: str = "ring",
     alpha_s: float = 0.0,
+    calibration=None,
 ) -> OverlapSearchResult:
     """Rank (d1, d2) x chunks x seq_parallel by exposed comm time.
 
-    ``seq_parallel`` subsumes the seed's vestigial
-    ``ATPContext.use_reduce_scatter`` knob: the fused psum+slice boundary
-    it named is exactly the reduce-scatter row boundary the
-    sequence-parallel spec uses (plus the conjugate entry gather), so
-    ranking seq_parallel on/off covers that axis of the space.
+    ``seq_parallel`` subsumes the retired ``ATPContext.use_reduce_scatter``
+    knob: the fused psum+slice boundary it named is exactly the
+    reduce-scatter row boundary the sequence-parallel spec uses (plus the
+    conjugate entry gather), so ranking seq_parallel on/off covers that
+    axis of the space.
+
+    ``calibration`` maps (d1, d2) to measured (B1, B2) — either a
+    ``calibrate.CalibrationTable`` or the seed-style dict ``t_comm``
+    accepts — overriding the analytic Eq. 3/4 bandwidths (paper §5.3).
 
     With ``chunks_options=(1,)``, ``seq_parallel_options=(False,)``,
     ``algo="rabenseifner"`` and ``alpha_s=0`` the ranking over (d1, d2)
     coincides exactly with the seed's Eq. 2 ``search_strategy``.
     """
+
+    calibration = CalibrationTable.coerce(calibration)
+
+    def calib_for(d1: int, d2: int):
+        return (calibration.bandwidths(d1, d2)
+                if calibration is not None else None)
+
     costs = []
     for d1, d2 in factorizations(tp_degree):
         try:
@@ -113,7 +129,8 @@ def search_strategy_overlap(
                     matrix, d1, d2, layers=layers, batch=batch, seq=seq,
                     profile=profile, bytes_per_elem=bytes_per_elem,
                     chunks=chunks, seq_parallel=sp,
-                    peak_tflops=peak_tflops, algo=algo, alpha_s=alpha_s))
+                    peak_tflops=peak_tflops, algo=algo, alpha_s=alpha_s,
+                    calibrated=calib_for(d1, d2)))
     if not costs:
         raise ValueError(
             f"no valid (d1,d2) for tp={tp_degree} on {matrix.name}")

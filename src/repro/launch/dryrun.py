@@ -49,17 +49,26 @@ def make_topo(multi_pod: bool, d1: int | None, d2: int | None) -> MeshTopo:
 def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
                d1: int | None = None, d2: int | None = None,
                chunks: int = 1, opt_mode: str = "zero1",
-               remat: bool = True):
-    """Lower + compile one cell; returns the result record dict."""
+               remat: bool = True, plan=None):
+    """Lower + compile one cell; returns the result record dict.
+
+    ``plan`` (a ParallelPlan) overrides d1/d2/chunks and is threaded into
+    every builder, so the compiled HLO is certifiably the searched
+    strategy; the record embeds the plan JSON for provenance.
+    """
     cfg = get_config(arch)
     shape = shape_by_name(shape_name)
     ok, why = cell_runnable(cfg, shape)
+    if plan is not None:
+        d1, d2, chunks = plan.d1, plan.d2, plan.chunks
     rec = {
         "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
         "mesh": f"(pod=2,)16x16" if multi_pod else "16x16",
         "atp": [d1, d2] if d1 else [16, 1],
         "chunks": chunks, "kind": shape.kind,
     }
+    if plan is not None:
+        rec["plan"] = plan.to_dict()
     if not ok:
         rec["status"] = "skipped"
         rec["reason"] = why
@@ -72,20 +81,22 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
         if shape.kind == "train":
             step, info = build_train_step(
                 cfg, topo, adamw.AdamWConfig(mode=opt_mode), chunks=chunks,
-                remat=remat, mesh=mesh)
+                remat=remat, mesh=mesh, plan=plan)
             params = lm.abstract_params(cfg)
             opt = adamw.init_opt_state(params, info.pspecs, info.ctx,
                                        opt_mode, abstract=True)
             batch = batch_struct(cfg, shape, "train")
             lowered = step.lower(params, opt, batch)
         elif shape.kind == "prefill":
-            step, info = build_prefill(cfg, topo, chunks=chunks, mesh=mesh)
+            step, info = build_prefill(cfg, topo, chunks=chunks, mesh=mesh,
+                                       plan=plan)
             params = lm.abstract_params(cfg)
             batch = batch_struct(cfg, shape, "prefill")
             lowered = step.lower(params, batch)
         else:  # decode
             step, info = build_decode_step(cfg, topo, shape.global_batch,
-                                           shape.seq_len, mesh=mesh)
+                                           shape.seq_len, mesh=mesh,
+                                           plan=plan)
             params = lm.abstract_params(cfg)
             caches, _ = lm.init_decode_caches(
                 cfg, info.ctx, shape.global_batch, shape.seq_len, abstract=True)
@@ -166,11 +177,19 @@ def main():
     ap.add_argument("--chunks", type=int, default=1)
     ap.add_argument("--opt-mode", default="zero1")
     ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--plan", default=None,
+                    help="saved ParallelPlan JSON driving d1/d2/chunks/"
+                         "boundary_mode/seq_parallel for every cell")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x shape) cell on this mesh")
     args = ap.parse_args()
 
     assert len(jax.devices()) >= 512, "dryrun needs the 512 virtual devices"
+
+    plan = None
+    if args.plan:
+        from repro.core.plan import ParallelPlan
+        plan = ParallelPlan.load(args.plan)
 
     cells = []
     if args.all:
@@ -184,7 +203,8 @@ def main():
     for arch, shape in cells:
         rec = lower_cell(arch, shape, multi_pod=args.multi_pod,
                          d1=args.d1, d2=args.d2, chunks=args.chunks,
-                         opt_mode=args.opt_mode, remat=not args.no_remat)
+                         opt_mode=args.opt_mode, remat=not args.no_remat,
+                         plan=plan)
         save_rec(rec)
 
 

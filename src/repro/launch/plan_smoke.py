@@ -1,0 +1,104 @@
+"""Plan-lifecycle smoke gate (``make plan-smoke``).
+
+Exercises the whole strategy pipeline on the simulated 8-device host mesh
+and exits non-zero on any plan/context mismatch:
+
+    calibrate -> plan_search -> save JSON -> load -> contexts bitwise
+    identical (train AND decode builders) -> 3 training steps run.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.plan_smoke
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+
+def check(ok: bool, what: str):
+    if not ok:
+        print(f"[plan-smoke] FAIL: {what}")
+        sys.exit(1)
+    print(f"[plan-smoke] ok: {what}")
+
+
+def main():
+    from repro.configs.base import ModelConfig
+    from repro.core import comm_matrix
+    from repro.core.calibrate import calibrate_mesh
+    from repro.core.cost_model import LayerCommProfile
+    from repro.core.plan import ParallelPlan, plan_search
+    from repro.data.pipeline import DataConfig, TokenSource
+    from repro.launch.steps import build_decode_step, build_train_step
+
+    ndev = len(jax.devices())
+    check(ndev >= 8, f"8 simulated devices attached (have {ndev})")
+
+    # 1. on-mesh calibration of every tp=4 factorization (tiny payload:
+    #    the gate checks plumbing, not bandwidth accuracy)
+    matrix = comm_matrix.PRESETS["ic3"]()
+    calib = calibrate_mesh(4, matrix, payload_kb=16, repeats=1)
+    check(len(calib) == 3, f"calibration covers (1,4)(2,2)(4,1): {len(calib)}")
+
+    # 2. unified search, calibrated; keep the mesh, boundary and spec knobs
+    #    in play so the executed context actually depends on the plan
+    cfg = ModelConfig(name="smoke-2m", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=256, head_dim=16, dtype="float32")
+    prof = LayerCommProfile.gpt(cfg.d_model)
+    res = plan_search("ic3", 4, layers=cfg.num_layers, batch=8, seq=32,
+                      profile=prof, dp=2, calibration=calib,
+                      chunks_options=(1, 2), seq_parallel_options=(False,))
+    plan = res.best
+    check(plan.calibration == calib, "winning plan carries the table")
+
+    # 3. JSON round-trip: the saved artifact is the strategy
+    with tempfile.TemporaryDirectory() as td:
+        path = plan.save(os.path.join(td, "plan.json"))
+        loaded = ParallelPlan.load(path)
+    check(loaded == plan, "plan JSON round-trip is exact")
+
+    # 4. bitwise-identical contexts from the in-process and loaded plans,
+    #    through the real builders (train + decode)
+    t_step, t_info = build_train_step(cfg, plan=plan)
+    t_step2, t_info2 = build_train_step(cfg, plan=loaded)
+    check(t_info.ctx == t_info2.ctx, "train ATPContext identical (saved vs "
+                                     "in-process plan)")
+    d_step, d_info = build_decode_step(cfg, B=4, s_max=16, plan=plan)
+    _, d_info2 = build_decode_step(cfg, B=4, s_max=16, plan=loaded)
+    check(d_info.ctx == d_info2.ctx, "decode ATPContext identical")
+    check((t_info.ctx.chunks, t_info.ctx.boundary_mode) ==
+          (plan.chunks, plan.boundary_mode),
+          "builder did not drop plan knobs")
+
+    # 5. three real training steps under the plan
+    from repro.models import lm
+    from repro.optim import adamw
+
+    src = TokenSource(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                 global_batch=8))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    opt = adamw.init_opt_state(params, t_info.pspecs, t_info.ctx, "zero1")
+    params = jax.device_put(params, t_info.sharding(t_info.pspecs))
+    opt = jax.device_put(opt, t_info.sharding(t_info.ospecs))
+    losses = []
+    for step in range(3):
+        batch = jax.device_put(
+            {k: jnp.asarray(v) for k, v in src.global_batch(step).items()},
+            t_info.sharding(t_info.bspecs))
+        params, opt, metrics = t_step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    check(all(jnp.isfinite(jnp.asarray(losses))),
+          f"3-step train under plan {plan.describe()}: losses {losses}")
+    print("[plan-smoke] PASS")
+
+
+if __name__ == "__main__":
+    main()

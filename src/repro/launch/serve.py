@@ -2,10 +2,13 @@
 
 Admits up to `--slots` requests per wave, prefills the whole wave with one
 multi-token cache-write step, then decodes all streams in lockstep with
-greedy sampling.
+greedy sampling.  The distribution strategy comes from a ParallelPlan —
+searched in-process (``--auto-atp``) or loaded from a saved artifact
+(``--plan plan.json``), the same file ``train --save-plan`` writes — so a
+searched strategy reaches inference unchanged.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --reduced --requests 6 --max-new 8
+        --reduced --requests 6 --max-new 8 [--plan plan.json | --auto-atp]
 """
 from __future__ import annotations
 
@@ -17,23 +20,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core.atp import make_context
 from repro.core.mesh import atp_topo
-from repro.launch.steps import build_decode_step
+from repro.core.plan import ParallelPlan
+from repro.launch.steps import resolve_ctx, build_decode_step
 from repro.models import lm
 
 log = logging.getLogger("repro.serve")
 
 
-def serve(cfg, topo, params, prompts, max_new: int, max_seq: int):
+def serve(cfg, topo, params, prompts, max_new: int, max_seq: int,
+          plan: ParallelPlan | None = None):
     """prompts: list of equal-length int arrays (one wave)."""
+    topo = topo if topo is not None else plan.topo()
     mesh = topo.build()
-    ctx = make_context(topo)
+    ctx = resolve_ctx(topo, plan, decode=True)
     B = len(prompts)
     plen = len(prompts[0])
     prefill_fn, info = build_decode_step(cfg, topo, B, max_seq, mesh=mesh,
-                                         seq_in=plen)
-    decode_fn, _ = build_decode_step(cfg, topo, B, max_seq, mesh=mesh)
+                                         seq_in=plen, plan=plan)
+    decode_fn, _ = build_decode_step(cfg, topo, B, max_seq, mesh=mesh,
+                                     plan=plan)
     params = jax.device_put(params, info.sharding(info.pspecs))
     caches, cache_specs = lm.init_decode_caches(cfg, ctx, B, max_seq)
     caches = jax.device_put(caches, info.sharding(cache_specs))
@@ -62,13 +68,33 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--plan", default=None,
+                    help="load a saved ParallelPlan JSON (train --save-plan)")
+    ap.add_argument("--auto-atp", action="store_true",
+                    help="search a plan for this arch/shape (paper §3.5)")
+    ap.add_argument("--topology", default="v5e",
+                    help="comm-matrix preset for --auto-atp")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    topo = atp_topo(args.dp, args.d1, args.d2)
+    plan = None
+    if args.plan:
+        plan = ParallelPlan.load(args.plan)
+        log.info("loaded plan %s: %s", args.plan, plan.describe())
+    elif args.auto_atp:
+        from repro.core.plan import plan_search
+        from repro.launch.train import comm_profile
+
+        plan = plan_search(
+            args.topology, args.d1 * args.d2, layers=cfg.num_layers,
+            batch=args.slots, seq=args.prompt_len + args.max_new,
+            profile=comm_profile(cfg), dp=args.dp).best
+        log.info("ATP plan search picked %s", plan.describe())
+    topo = plan.topo() if plan is not None else atp_topo(args.dp, args.d1,
+                                                         args.d2)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
 
     rng = np.random.default_rng(0)
@@ -81,7 +107,8 @@ def main():
         pending = pending[args.slots:]
         while len(batch) < args.slots:   # pad the last wave
             batch.append(np.zeros(args.prompt_len, np.int32))
-        outs = serve(cfg, topo, params, batch, args.max_new, args.max_seq)
+        outs = serve(cfg, topo, params, batch, args.max_new, args.max_seq,
+                     plan=plan)
         for i, o in enumerate(outs[: min(args.slots, done + args.requests - done)]):
             log.info("wave %d slot %d -> %s", wave, i, o.tolist())
         done += len(batch)

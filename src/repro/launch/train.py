@@ -1,7 +1,14 @@
-"""Training launcher: ATP strategy search -> mesh -> fault-tolerant loop.
+"""Training launcher: ATP plan search -> mesh -> fault-tolerant loop.
 
+The strategy is a ParallelPlan artifact end to end:
+
+    # search (optionally after on-mesh calibration), save, train
     PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
-        --steps 200 --dp 2 --d1 2 --d2 2 --seq 128 --batch 8 [--auto-atp]
+        --steps 200 --dp 2 --d1 2 --d2 2 --seq 128 --batch 8 \
+        [--auto-atp [--calibrate]] [--save-plan plan.json]
+
+    # re-apply a saved plan bit-for-bit (train or serve)
+    ... -m repro.launch.train --arch llama3-8b --plan plan.json
 
 Device count comes from the environment (single host: set
 XLA_FLAGS=--xla_force_host_platform_device_count=N before launch).
@@ -18,10 +25,9 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.core import comm_matrix
-from repro.core.atp import make_context
+from repro.core.calibrate import calibrate_mesh
 from repro.core.cost_model import LayerCommProfile
-from repro.core.mesh import atp_topo
-from repro.core.search import search_strategy
+from repro.core.plan import ParallelPlan, plan_search, replan_elastic
 from repro.data.pipeline import DataConfig, TokenSource
 from repro.launch.steps import build_train_step
 from repro.models import lm
@@ -37,13 +43,30 @@ def comm_profile(cfg) -> LayerCommProfile:
     ff_cols = 2 * cfg.d_ff if cfg.mlp_kind in ("swiglu", "geglu") else cfg.d_ff
     col += ff_cols
     row = 2 * cfg.d_model
-    return LayerCommProfile(float(col), float(row))
+    return LayerCommProfile(float(col), float(row), hidden=float(cfg.d_model))
 
 
-def pick_strategy(cfg, tp: int, seq: int, batch: int, topology: str = "v5e"):
-    matrix = comm_matrix.PRESETS[topology]()
-    return search_strategy(matrix, tp, layers=cfg.num_layers, batch=batch,
-                           seq=seq, profile=comm_profile(cfg))
+def pick_plan(cfg, tp: int, seq: int, batch: int, topology: str = "v5e",
+              dp: int = 1, calibrate: bool = False, overlap: bool = True):
+    """Search the plan space for this workload (optionally calibrated).
+
+    ``overlap=False`` restricts to the seed Eq. 2 space — the exact
+    degradation path the acceptance tests pin down.
+    """
+    calib = None
+    if calibrate:
+        matrix = comm_matrix.PRESETS[topology]()
+        calib = calibrate_mesh(tp, matrix)
+        log.info("on-mesh calibration (%d factorizations): %s",
+                 len(calib), {k: (round(e.b1, 2), round(e.b2, 2))
+                              for k, e in calib.entries})
+    kw = {}
+    if not overlap:
+        kw = dict(chunks_options=(1,), seq_parallel_options=(False,),
+                  algo="rabenseifner", alpha_s=0.0)
+    return plan_search(topology, tp, layers=cfg.num_layers, batch=batch,
+                       seq=seq, profile=comm_profile(cfg), dp=dp,
+                       calibration=calib, **kw)
 
 
 def main():
@@ -56,7 +79,16 @@ def main():
     ap.add_argument("--d1", type=int, default=2)
     ap.add_argument("--d2", type=int, default=1)
     ap.add_argument("--auto-atp", action="store_true",
-                    help="pick (d1,d2) with the ATP search (paper §3.5)")
+                    help="search a ParallelPlan (paper §3.5 + overlap knobs)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="restrict --auto-atp to the seed Eq. 2 space")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="micro-benchmark (B1,B2) on the attached mesh and "
+                         "re-rank with the measured table (paper §5.3)")
+    ap.add_argument("--plan", default=None,
+                    help="load a saved ParallelPlan JSON instead of searching")
+    ap.add_argument("--save-plan", default=None,
+                    help="write the executed plan JSON here")
     ap.add_argument("--topology", default="v5e", choices=list(comm_matrix.PRESETS))
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
@@ -74,45 +106,84 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
 
-    d1, d2 = args.d1, args.d2
-    if args.auto_atp:
-        res = pick_strategy(cfg, d1 * d2, args.seq, args.batch, args.topology)
-        d1, d2 = res.mesh()
-        log.info("ATP search on %s picked DeviceMesh(%d, %d); ranking: %s",
-                 args.topology, d1, d2,
-                 [(c.d1, c.d2, round(c.t_comm * 1e3, 1)) for c in res.ranked])
+    if args.plan:
+        plan = ParallelPlan.load(args.plan)
+        log.info("loaded plan %s: %s", args.plan, plan.describe())
+    elif args.auto_atp:
+        res = pick_plan(cfg, args.d1 * args.d2, args.seq, args.batch,
+                        args.topology, dp=args.dp,
+                        calibrate=args.calibrate,
+                        overlap=not args.no_overlap)
+        plan = res.best
+        log.info("ATP plan search on %s picked %s; top of ranking: %s",
+                 args.topology, plan.describe(),
+                 [(c.d1, c.d2, c.chunks, c.seq_parallel,
+                   round(c.t_exposed * 1e3, 2)) for c in res.costs[:4]])
+    else:
+        # manual knobs still produce a plan: one artifact, one code path
+        plan = ParallelPlan(d1=args.d1, d2=args.d2, dp=args.dp,
+                            chunks=args.chunks,
+                            provenance=(("searcher", "manual-cli"),))
+    if args.save_plan:
+        plan.save(args.save_plan)
+        log.info("saved plan -> %s", args.save_plan)
 
-    topo = atp_topo(args.dp, d1, d2)
+    topo = plan.topo()
     assert topo.size <= len(jax.devices()), \
         f"need {topo.size} devices, have {len(jax.devices())}"
     mesh = topo.build()
-    ctx = make_context(topo, chunks=args.chunks)
+    ctx = plan.context(topo)
 
     opt_cfg = adamw.AdamWConfig(lr=args.lr, mode=args.opt_mode,
                                 total_steps=args.steps)
-    step_fn, info = build_train_step(cfg, topo, opt_cfg,
-                                     chunks=args.chunks, mesh=mesh)
+    step_fn, info = build_train_step(cfg, topo, opt_cfg, mesh=mesh, plan=plan)
 
     source = TokenSource(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch))
 
+    # live holder so the elastic re-plan path can swap plan/step/shardings
+    # under the closures the Trainer holds
+    live = {"plan": plan, "step": step_fn, "info": info, "ctx": ctx}
+
     def init_state():
+        inf, c = live["info"], live["ctx"]
         params = lm.init_params(cfg, jax.random.PRNGKey(0))
-        opt = adamw.init_opt_state(params, info.pspecs, ctx, args.opt_mode)
-        params = jax.device_put(params, info.sharding(info.pspecs))
-        opt = jax.device_put(opt, info.sharding(info.ospecs))
+        opt = adamw.init_opt_state(params, inf.pspecs, c, args.opt_mode)
+        params = jax.device_put(params, inf.sharding(inf.pspecs))
+        opt = jax.device_put(opt, inf.sharding(inf.ospecs))
         return params, opt
 
     def put_batch(host_batch):
+        inf = live["info"]
         return jax.device_put(
             {k: jnp.asarray(v) for k, v in host_batch.items()},
-            info.sharding(info.bspecs))
+            inf.sharding(inf.bspecs))
+
+    def replan_step():
+        """Elastic restart: re-plan only if the device pool actually shrank.
+
+        A transient step failure on an intact mesh must NOT change the
+        strategy — the executed plan stays the artifact the user saved."""
+        surviving = len(jax.devices())
+        if surviving >= live["plan"].devices:
+            return live["step"]
+        new_plan = replan_elastic(
+            live["plan"], surviving, layers=cfg.num_layers,
+            batch=args.batch, seq=args.seq, profile=comm_profile(cfg))
+        log.info("elastic re-plan: %s -> %s",
+                 live["plan"].describe(), new_plan.describe())
+        new_step, new_info = build_train_step(cfg, opt_cfg=opt_cfg,
+                                              plan=new_plan)
+        live.update(plan=new_plan, step=new_step, info=new_info,
+                    ctx=new_info.ctx)
+        return new_step
 
     trainer = Trainer(
         TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                       ckpt_every=args.ckpt_every),
-        build_step=lambda: step_fn,
-        source=source, init_state=init_state, put_batch=put_batch)
+        build_step=lambda: live["step"],
+        source=source, init_state=init_state, put_batch=put_batch,
+        replan=replan_step)
     params, _ = trainer.run()
     losses = [h["loss"] for h in trainer.history]
     log.info("done: first loss %.4f -> last loss %.4f (%d steps)",

@@ -71,6 +71,7 @@ class Trainer:
         put_batch: Callable[[dict], Any],    # host batch -> device arrays
         mitigation_hook: Callable[[int], None] | None = None,
         time_fn: Callable[[], float] = time.monotonic,
+        replan: Callable[[], Callable] | None = None,
     ):
         self.cfg = cfg
         self.build_step = build_step
@@ -80,7 +81,12 @@ class Trainer:
         self.watchdog = StragglerWatchdog(cfg.straggler_factor, cfg.ema_beta)
         self.mitigation_hook = mitigation_hook or (lambda step: None)
         self.time_fn = time_fn
+        # elastic recovery: re-derive the ParallelPlan on the surviving mesh
+        # and return a fresh step built from it (launch.train wires
+        # plan.replan_elastic here); None keeps the rebuild-same-plan path.
+        self.replan = replan
         self.failures = 0
+        self.replans: list[int] = []  # steps at which a re-plan happened
         self.history: list[dict] = []
 
     def _restore_or_init(self):
@@ -125,6 +131,11 @@ class Trainer:
                     raise
                 # full recovery path: rebuild step (fresh executables /
                 # possibly a new mesh) + restore last committed state
-                train_step = self.build_step()
+                if self.replan is not None:
+                    train_step = self.replan()
+                    self.replans.append(step)
+                    log.info("elastic re-plan applied at step %d", step)
+                else:
+                    train_step = self.build_step()
                 params, opt_state, step = self._restore_or_init()
         return params, opt_state

@@ -1,0 +1,356 @@
+"""ParallelPlan lifecycle: search -> calibrate -> serialize -> execute.
+
+Pins the PR's acceptance criteria:
+  - plan_search with overlap disabled reproduces the seed Eq. 2 ranking
+    exactly on every IC1-IC6 preset;
+  - a plan JSON round-trips exactly (calibration tables included) and a
+    loaded plan yields a bitwise-identical ATPContext to the in-process
+    one, through the train AND decode builders;
+  - calibrated search prefers the measured-faster factorization (§5.3);
+  - the retired use_reduce_scatter knob raises a loud TypeError;
+  - build_train_step(plan=...) runs end-to-end on the 8-device host mesh.
+"""
+import dataclasses
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import comm_matrix as cm
+from repro.core.atp import ATPContext, make_context
+from repro.core.calibrate import CalibEntry, CalibrationTable, calibrate_mesh
+from repro.core.cost_model import LayerCommProfile, t_comm, t_comm_overlap
+from repro.core.mesh import MeshTopo, atp_topo, factorizations
+from repro.core.plan import (ParallelPlan, PredictedCost, plan_search,
+                             replan_elastic)
+from repro.core.search import search_strategy
+
+PROF = LayerCommProfile.gpt(8192)
+IC_PRESETS = ("ic1", "ic2", "ic3", "ic4", "ic5", "ic6")
+
+
+# ---------------------------------------------------------------------------
+# Serialization.
+# ---------------------------------------------------------------------------
+
+
+def _full_plan() -> ParallelPlan:
+    calib = CalibrationTable(
+        entries=(((2, 4), CalibEntry(b1=1.2, b2=4.95, t_psum=2e-3,
+                                     t_ring=1e-3)),
+                 ((8, 1), CalibEntry(b1=0.97, b2=math.inf))),
+        source="unit-test")
+    return ParallelPlan(
+        d1=2, d2=4, dp=3, pods=2, chunks=4, boundary_mode="ring",
+        seq_parallel=True, topology="ic1", calibration=calib,
+        predicted=PredictedCost(t_comm=1e-3, t_exposed=5e-4, t_gemm=2e-3),
+        provenance=(("searcher", "unit"), ("note", "x")))
+
+
+def test_plan_json_roundtrip_exact():
+    p = _full_plan()
+    assert ParallelPlan.from_json(p.to_json()) == p
+    # calibration metadata survives, including inf encoding
+    q = ParallelPlan.from_json(p.to_json())
+    assert q.calibration.get(8, 1).b2 == math.inf
+    assert q.calibration.boundary_mode(2, 4) == "ring"
+    assert q.predicted.t_exposed == pytest.approx(5e-4)
+
+
+def test_plan_roundtrip_keeps_duplicate_provenance_tags():
+    """Two successive elastic resizes must both survive serialization."""
+    p = ParallelPlan(d1=2, d2=2, provenance=(
+        ("elastic", "replanned 16->8 devices"),
+        ("elastic", "replanned 8->4 devices"),
+        ("searcher", "plan_search")))
+    q = ParallelPlan.from_json(p.to_json())
+    assert q == p
+    assert sum(1 for k, _ in q.provenance if k == "elastic") == 2
+
+
+def test_plan_save_load(tmp_path):
+    p = _full_plan()
+    path = p.save(os.path.join(tmp_path, "plan.json"))
+    assert ParallelPlan.load(path) == p
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        ParallelPlan(d1=0, d2=4)
+    with pytest.raises(ValueError):
+        ParallelPlan(d1=2, d2=2, chunks=0)
+    with pytest.raises(ValueError):
+        ParallelPlan(d1=2, d2=2, boundary_mode="laser")
+
+
+def test_newer_format_version_rejected():
+    d = _full_plan().to_dict()
+    d["format_version"] = 999
+    with pytest.raises(ValueError, match="format_version"):
+        ParallelPlan.from_dict(d)
+
+
+def test_calibration_table_roundtrip_and_pairs():
+    t = CalibrationTable.from_pairs({(2, 4): (1.2, 4.95), (8, 1): (0.97, 0.97)})
+    assert CalibrationTable.from_dict(t.to_dict()) == t
+    assert t.as_pairs()[(2, 4)] == (1.2, 4.95)
+    assert t.bandwidths(3, 3) is None
+
+
+# ---------------------------------------------------------------------------
+# Search parity + calibration semantics.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("preset", IC_PRESETS)
+def test_plan_search_seed_parity_when_overlap_disabled(preset):
+    """Acceptance: degraded plan_search == seed Eq. 2 ranking, exactly."""
+    matrix = cm.PRESETS[preset]()
+    n = matrix.num_devices
+    seed = search_strategy(matrix, n, layers=4, batch=4, seq=2048,
+                           profile=PROF)
+    res = plan_search(preset, n, layers=4, batch=4, seq=2048, profile=PROF,
+                      chunks_options=(1,), seq_parallel_options=(False,),
+                      algo="rabenseifner", alpha_s=0.0)
+    assert [(p.d1, p.d2) for p in res.ranked] == \
+        [(c.d1, c.d2) for c in seed.ranked]
+    assert all(p.chunks == 1 and not p.seq_parallel for p in res.ranked)
+    # and the modelled totals agree to fp round-off
+    for p, c in zip(res.costs, seed.ranked):
+        assert p.t_exposed == pytest.approx(c.t_comm, rel=1e-9)
+
+
+def test_calibrated_search_prefers_measured_faster_mesh():
+    """Paper §5.3: IC1's analytic model picks (8,1); the measured table
+    flips the choice to the factorization that is actually faster."""
+    uncal = plan_search("ic1", 8, layers=4, batch=4, seq=2048, profile=PROF,
+                        chunks_options=(1,), seq_parallel_options=(False,),
+                        algo="rabenseifner", alpha_s=0.0)
+    calib = CalibrationTable.from_pairs(
+        {(2, 4): (1.20, 4.95), (8, 1): (0.97, 0.97),
+         (4, 2): (1.10, 2.5), (1, 8): (0.97, 0.97)}, source="paper")
+    cal = plan_search("ic1", 8, layers=4, batch=4, seq=2048, profile=PROF,
+                      chunks_options=(1,), seq_parallel_options=(False,),
+                      algo="rabenseifner", alpha_s=0.0, calibration=calib)
+    assert uncal.mesh() == (8, 1)
+    assert cal.mesh() == (2, 4)
+    assert cal.best.calibration == calib  # the winning plan carries it
+    assert dict(cal.best.provenance)["calibrated"] == "yes"
+
+
+def test_calibrated_overlap_cost_matches_seed_eq2_path():
+    """t_comm_overlap(calibrated=) must price an all-reduce at payload/B —
+    the identical convention as the seed t_comm(calibrated=)."""
+    m = cm.ic1_pcie_8gpu()
+    cal = (1.20, 4.95)
+    seed = t_comm(m, 2, 4, layers=4, batch=4, seq=2048, profile=PROF,
+                  calibrated=cal)
+    ov = t_comm_overlap(m, 2, 4, layers=4, batch=4, seq=2048, profile=PROF,
+                        chunks=1, algo="rabenseifner", alpha_s=0.0,
+                        calibrated=cal)
+    assert ov.t_comm == pytest.approx(seed.t_comm, rel=1e-9)
+
+
+def test_search_strategy_accepts_calibration_table():
+    tab = CalibrationTable.from_pairs({(2, 4): (1.20, 4.95),
+                                       (8, 1): (0.97, 0.97)})
+    r_tab = search_strategy(cm.ic1_pcie_8gpu(), 8, layers=4, batch=4,
+                            seq=2048, profile=PROF, calibration=tab)
+    r_dict = search_strategy(cm.ic1_pcie_8gpu(), 8, layers=4, batch=4,
+                             seq=2048, profile=PROF,
+                             calibration=tab.as_pairs())
+    assert [(c.d1, c.d2) for c in r_tab.ranked] == \
+        [(c.d1, c.d2) for c in r_dict.ranked]
+
+
+def test_measured_boundary_mode_reaches_plan():
+    measure = {
+        (1, 4): CalibEntry(b1=math.inf, b2=50.0, t_psum=1e-3, t_ring=2e-3),
+        (2, 2): CalibEntry(b1=40.0, b2=40.0, t_psum=2e-3, t_ring=1e-3),
+        (4, 1): CalibEntry(b1=60.0, b2=math.inf, t_psum=1e-3, t_ring=2e-3),
+    }
+    tab = calibrate_mesh(4, measure=lambda d1, d2: measure[(d1, d2)])
+    assert len(tab) == 3
+    res = plan_search("ic3", 4, layers=4, batch=4, seq=2048, profile=PROF,
+                      calibration=tab, chunks_options=(1,),
+                      seq_parallel_options=(False,))
+    by_mesh = {(p.d1, p.d2): p for p in res.ranked}
+    assert by_mesh[(2, 2)].boundary_mode == "ring"   # ring measured faster
+    assert by_mesh[(4, 1)].boundary_mode == "psum"
+
+
+def test_calibrate_mesh_on_host_devices(devices8):
+    """Real micro-benchmark plumbing: tiny payload, tp=2 (cheap)."""
+    tab = calibrate_mesh(2, payload_kb=4, repeats=1)
+    assert {k for k, _ in tab.entries} == {(1, 2), (2, 1)}
+    e = tab.get(2, 1)
+    assert e.b1 > 0 and math.isinf(e.b2)
+    assert e.boundary_mode in ("psum", "ring")
+    assert CalibrationTable.from_dict(tab.to_dict()) == tab
+
+
+# ---------------------------------------------------------------------------
+# Plan -> context -> builders.
+# ---------------------------------------------------------------------------
+
+
+def test_context_from_plan_bitwise_identical_after_json(tmp_path):
+    plan = plan_search("ic4", 4, layers=2, batch=4, seq=128, profile=PROF,
+                       dp=2).best
+    path = plan.save(os.path.join(tmp_path, "p.json"))
+    loaded = ParallelPlan.load(path)
+    assert loaded.context() == plan.context()
+    assert dataclasses.asdict(loaded.context()) == \
+        dataclasses.asdict(plan.context())
+
+
+def test_make_context_plan_topo_mismatch_raises():
+    plan = ParallelPlan(d1=2, d2=2)
+    with pytest.raises(ValueError, match="plan/topology mismatch"):
+        make_context(atp_topo(1, 4, 1), plan=plan)
+
+
+def test_make_context_requires_topo_or_plan():
+    with pytest.raises(TypeError):
+        make_context()
+
+
+def test_use_reduce_scatter_is_retired():
+    topo = MeshTopo((("tp1", 2),))
+    with pytest.raises(TypeError, match="seq_parallel"):
+        make_context(topo, use_reduce_scatter=True)
+    with pytest.raises(TypeError, match="seq_parallel"):
+        ATPContext(topo=topo, ax1="tp1", ax2=None, dp_axes=(),
+                   use_reduce_scatter=False)
+    # the sentinel default stays invisible and replace() keeps working
+    ctx = make_context(topo, chunks=2)
+    assert "use_reduce_scatter" not in repr(ctx)
+    assert dataclasses.replace(ctx, chunks=3).chunks == 3
+    # seed-era POSITIONAL use_reduce_scatter now lands in the
+    # boundary_mode slot — must fail loudly, not silently no-op
+    with pytest.raises(TypeError, match="seq_parallel"):
+        make_context(topo, 2, True)
+    with pytest.raises(ValueError, match="boundary_mode"):
+        make_context(topo, boundary_mode="laser")
+
+
+def test_builders_thread_plan_knobs(devices8):
+    """Decode/prefill builders must not drop plan knobs (the seed bug)."""
+    from repro.configs.base import ModelConfig
+    from repro.launch.steps import (build_decode_step, build_prefill,
+                                    build_train_step)
+
+    cfg = ModelConfig(name="t-plan", family="dense", num_layers=1,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=64, head_dim=16, dtype="float32")
+    plan = ParallelPlan(d1=2, d2=2, dp=2, chunks=4, seq_parallel=True)
+    _, t_info = build_train_step(cfg, plan=plan)
+    assert (t_info.ctx.chunks, t_info.ctx.seq_parallel) == (4, True)
+    _, p_info = build_prefill(cfg, plan=plan)
+    assert p_info.ctx.chunks == 4
+    _, d_info = build_decode_step(cfg, B=4, s_max=8, plan=plan)
+    assert d_info.ctx.chunks == 4
+    # decode deliberately masks seq_parallel (undefined for cached decode)
+    assert d_info.ctx.seq_parallel is False
+    # train and decode contexts agree on everything decode supports
+    assert dataclasses.replace(t_info.ctx, seq_parallel=False) == d_info.ctx
+
+
+def test_train_step_from_plan_runs(devices8):
+    """End-to-end: searched plan -> builder -> one real optimizer step."""
+    from repro.configs.base import ModelConfig
+    from repro.data.pipeline import DataConfig, TokenSource
+    from repro.launch.steps import build_train_step
+    from repro.models import lm
+    from repro.optim import adamw
+
+    cfg = ModelConfig(name="t-e2e", family="dense", num_layers=1,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=64, head_dim=16, dtype="float32")
+    plan = plan_search("ic3", 4, layers=cfg.num_layers, batch=4, seq=16,
+                       profile=LayerCommProfile.gpt(cfg.d_model), dp=2,
+                       chunks_options=(1, 2),
+                       seq_parallel_options=(False,)).best
+    step, info = build_train_step(cfg, plan=plan)
+    src = TokenSource(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                 global_batch=4))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    opt = adamw.init_opt_state(params, info.pspecs, info.ctx, "zero1")
+    params = jax.device_put(params, info.sharding(info.pspecs))
+    opt = jax.device_put(opt, info.sharding(info.ospecs))
+    batch = jax.device_put(
+        {k: jnp.asarray(v) for k, v in src.global_batch(0).items()},
+        info.sharding(info.bspecs))
+    _, _, metrics = step(params, opt, batch)
+    assert jnp.isfinite(metrics["loss"])
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-plan.
+# ---------------------------------------------------------------------------
+
+
+def test_replan_elastic_shrinks_dp_first():
+    plan = ParallelPlan(d1=2, d2=2, dp=4)  # 16 devices
+    new = replan_elastic(plan, 8)
+    assert (new.d1, new.d2, new.dp) == (2, 2, 2)
+    assert any(k == "elastic" for k, _ in new.provenance)
+
+
+def test_replan_elastic_never_grows_the_job():
+    """More surviving devices than the plan used must not inflate dp."""
+    plan = ParallelPlan(d1=2, d2=1, dp=1)  # 2 devices
+    new = replan_elastic(plan, 8)
+    assert (new.d1, new.d2, new.dp) == (2, 1, 1)
+
+
+def test_replan_elastic_halves_tp_when_needed():
+    plan = ParallelPlan(d1=4, d2=2, dp=1)  # 8 devices
+    new = replan_elastic(plan, 4)
+    assert new.tp == 4 and new.devices <= 4
+    assert new.calibration is None  # stale table dropped with the resize
+
+
+def test_replan_elastic_researches_with_workload():
+    plan = plan_search("ic4", 16, layers=4, batch=4, seq=2048,
+                       profile=PROF).best
+    new = replan_elastic(plan, 8, layers=4, batch=4, seq=2048, profile=PROF)
+    assert new.tp == 8
+    assert dict(new.provenance)["searcher"] == "plan_search"
+    # the surviving-tp search is a real ranking over ic4's factorizations
+    assert (new.d1, new.d2) in factorizations(8)
+
+
+def test_trainer_replan_hook_called_on_failure():
+    from repro.runtime.trainer import Trainer, TrainerConfig
+    from repro.data.pipeline import DataConfig, TokenSource
+
+    calls = []
+
+    def step_ok(params, opt, batch):
+        return params, opt, {"loss": jnp.float32(1.0)}
+
+    def step_fail(params, opt, batch):
+        raise RuntimeError("injected device loss")
+
+    live = {"step": step_fail}
+
+    def replan():
+        calls.append(1)
+        live["step"] = step_ok
+        return step_ok
+
+    src = TokenSource(DataConfig(vocab_size=16, seq_len=4, global_batch=2))
+    tr = Trainer(
+        TrainerConfig(total_steps=2, ckpt_dir="/tmp/repro_test_replan",
+                      ckpt_every=100, max_failures=2),
+        build_step=lambda: live["step"], source=src,
+        init_state=lambda: ({}, {}), put_batch=lambda b: b,
+        replan=replan)
+    import shutil
+    shutil.rmtree("/tmp/repro_test_replan", ignore_errors=True)
+    tr.run()
+    assert calls == [1]
+    assert tr.replans == [0]
