@@ -3,19 +3,27 @@ XLA_DEVICES ?= 8
 
 # Tier-1 verify: the whole suite on a simulated multi-device host mesh,
 # then the plan-lifecycle smoke gate (search -> calibrate -> save -> load
-# -> execute must agree bit-for-bit).
+# -> execute must agree bit-for-bit) and the heterogeneous-segment gate
+# (per-segment knobs reach execution on a mixed dense+MoE stack).
 .PHONY: test
 test:
 	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 	$(PYTHON) -m pytest -x -q
 	$(MAKE) plan-smoke
+	$(MAKE) segment-smoke
 
 .PHONY: plan-smoke
 plan-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 	$(PYTHON) -m repro.launch.plan_smoke
+
+.PHONY: segment-smoke
+segment-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	$(PYTHON) -m repro.launch.segment_smoke
 
 .PHONY: bench-overlap
 bench-overlap:

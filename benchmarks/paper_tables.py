@@ -38,11 +38,16 @@ def _profile(m):
 
 def _log_plan(key: str, plan) -> str:
     """Record the full plan JSON behind a table row (keyed by the row name);
-    returns a compact comma-free tag safe for the CSV ``derived`` column."""
+    returns a compact comma-free tag safe for the CSV ``derived`` column.
+    v2 plans carry per-segment knobs; the tag appends them when they
+    differ from a single homogeneous segment."""
     PLAN_LOG[key] = plan.to_dict()
     sp = "+sp" if plan.seq_parallel else ""
-    return (f"{plan.d1}x{plan.d2}ck{plan.chunks}"
-            f"{plan.boundary_mode}{sp}")
+    tag = (f"{plan.d1}x{plan.d2}ck{plan.chunks}"
+           f"{plan.boundary_mode}{sp}")
+    if len(plan.segments) > 1:
+        tag += "[" + ";".join(s.describe() for s in plan.segments) + "]"
+    return tag
 
 
 def write_plan_log(path: str | None = None) -> str:
@@ -79,9 +84,8 @@ def fig10_sota(rows=None):
             t_meg = next(c.t_comm for c in r.ranked if (c.d1, c.d2) == (n, 1))
             best = r.best
             gain = (t_meg - best.t_comm) / max(t_meg, 1e-12)
-            plan = plan_search(matrix, n, layers=mcfg.num_layers, batch=BATCH,
-                               seq=SEQ, profile=_profile(mcfg),
-                               calibration=table).best
+            plan = plan_search(matrix, n, model=mcfg, batch=BATCH,
+                               seq=SEQ, calibration=table).best
             out.append((ic_name, mname, best.d1, best.d2,
                         best.t_comm * 1e3, t_meg * 1e3, 100 * gain,
                         _log_plan(f"fig10/{ic_name}/{mname}", plan)))
@@ -149,8 +153,7 @@ def fig11_mesh_sweep():
                  if calib else None)
         r = search_strategy(matrix, n, layers=m.num_layers, batch=BATCH,
                             seq=SEQ, profile=_profile(m), calibration=table)
-        plan = plan_search(matrix, n, layers=m.num_layers, batch=BATCH,
-                           seq=SEQ, profile=_profile(m),
+        plan = plan_search(matrix, n, model=m, batch=BATCH, seq=SEQ,
                            calibration=table).best
         _log_plan(f"fig11/{ic_name}", plan)
         for c in r.ranked:

@@ -233,6 +233,45 @@ class ModelConfig:
         return dataclasses.replace(self, **changes)
 
 
+# ---------------------------------------------------------------------------
+# Segment plan: every architecture is a list of block segments (models.lm
+# scans each segment; the strategy stack prices and plans them per kind).
+# Lives here — not in models — so the cost model / plan search can derive
+# per-segment workloads from a ModelConfig without importing model code.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str
+    count: int          # scan length
+    inner: int = 1      # blocks per scan step (zamba/xlstm super-blocks)
+
+
+def segments(cfg: ModelConfig) -> tuple[Segment, ...]:
+    if cfg.ssm is not None and cfg.ssm.slstm_every:          # xlstm
+        period = cfg.ssm.slstm_every
+        assert cfg.num_layers % period == 0
+        return (Segment("xlstm", cfg.num_layers // period, period),)
+    if cfg.ssm is not None and cfg.ssm.shared_attn_every:    # zamba2
+        per = cfg.ssm.shared_attn_every  # 1 shared attn + (per-1) mamba
+        n_super = cfg.num_layers // per
+        tail = cfg.num_layers - n_super * per
+        segs = [Segment("zamba", n_super, per)]
+        if tail:
+            segs.append(Segment("mamba", tail))
+        return tuple(segs)
+    if cfg.moe is not None:
+        segs = []
+        kind = "mla_moe" if cfg.mla is not None else "moe"
+        dense_kind = "mla_dense" if cfg.mla is not None else "dense"
+        if cfg.moe.first_dense_layers:
+            segs.append(Segment(dense_kind, cfg.moe.first_dense_layers))
+        segs.append(Segment(kind, cfg.num_layers - cfg.moe.first_dense_layers))
+        return tuple(segs)
+    return (Segment("dense", cfg.num_layers),)
+
+
 @dataclasses.dataclass(frozen=True)
 class ShapeConfig:
     name: str

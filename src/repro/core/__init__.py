@@ -7,6 +7,7 @@
 #   calibrate.calibrate_mesh            — measured (B1,B2) + boundary mode
 #   atp.make_context(plan=...)          — plan -> execution context
 
+from repro.core.atp import SegmentPlan  # noqa: F401
 from repro.core.calibrate import CalibrationTable, calibrate_mesh  # noqa: F401
 from repro.core.plan import (ParallelPlan, plan_search,  # noqa: F401
                              replan_elastic)

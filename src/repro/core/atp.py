@@ -71,6 +71,56 @@ class _Removed:
         return hash(_Removed)
 
 
+#: Segment kinds whose block I/O can run the sequence-parallel spec
+#: [Shard(seq)@ax1, Shard(f)@ax2]: their block-entry norms fold the
+#: conjugate all-gather and their row boundaries psum_scatter back.  MoE
+#: dispatch, SSM scans and the zamba/xlstm super-blocks assume
+#: ax1-replicated full-sequence I/O, so their segments mask seq_parallel
+#: (per-segment gating, not a whole-network error).
+SEQ_PARALLEL_KINDS = frozenset({"dense", "mla_dense"})
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentPlan:
+    """Per-segment execution knobs over the shared (d1, d2, dp) mesh.
+
+    One entry per model segment kind (plan format_version 2): the mesh is
+    global — activation layouts must agree at segment boundaries — but
+    chunking, boundary implementation and the sequence-parallel spec are
+    per-segment properties of each segment's communication profile.
+    """
+
+    kind: str
+    chunks: int = 1
+    boundary_mode: str = "psum"
+    seq_parallel: bool = False
+
+    def __post_init__(self):
+        if self.chunks < 1:
+            raise ValueError(
+                f"segment {self.kind!r}: chunks must be >= 1, got {self.chunks}")
+        if self.boundary_mode not in ("psum", "ring"):
+            raise ValueError(
+                f"segment {self.kind!r}: boundary_mode must be 'psum' or "
+                f"'ring', got {self.boundary_mode!r}")
+
+    def describe(self) -> str:
+        sp = "+sp" if self.seq_parallel else ""
+        return f"{self.kind}:ck{self.chunks}{self.boundary_mode}{sp}"
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "chunks": self.chunks,
+                "boundary_mode": self.boundary_mode,
+                "seq_parallel": self.seq_parallel}
+
+    @staticmethod
+    def from_dict(d) -> "SegmentPlan":
+        return SegmentPlan(kind=str(d["kind"]),
+                           chunks=int(d.get("chunks", 1)),
+                           boundary_mode=d.get("boundary_mode", "psum"),
+                           seq_parallel=bool(d.get("seq_parallel", False)))
+
+
 _USE_REDUCE_SCATTER_REMOVED = _Removed()
 _USE_REDUCE_SCATTER_MSG = (
     "ATPContext.use_reduce_scatter was retired: the fused psum+slice "
@@ -92,6 +142,10 @@ class ATPContext:
     chunks: int = 1           # chunk-based overlapping factor (paper §4.1)
     boundary_mode: Literal["psum", "ring"] = "psum"  # see module docstring
     seq_parallel: bool = False  # block I/O [Shard(seq)@ax1, Shard(f)@ax2]
+    # per-segment knob overrides (plan format_version 2): model code asks
+    # for its segment's view via ``for_segment(kind)``; the scalar knobs
+    # above are the defaults for kinds with no dedicated entry
+    segment_plans: tuple[SegmentPlan, ...] = ()
     # retired knob: any explicit value raises (subsumed by seq_parallel)
     use_reduce_scatter: object = dataclasses.field(
         default=_USE_REDUCE_SCATTER_REMOVED, repr=False, compare=False)
@@ -145,6 +199,48 @@ class ATPContext:
             idx = idx * self.topo.axis_size(a) + lax.axis_index(a)
         return idx
 
+    # -- per-segment views (plan format_version 2) -------------------------
+
+    def for_segment(self, kind: str) -> "ATPContext":
+        """This segment kind's execution view: same mesh, per-segment
+        (chunks, boundary_mode, seq_parallel).
+
+        Falls back to the context's scalar knobs when no dedicated
+        :class:`SegmentPlan` entry exists (v1 plans broadcast their global
+        knobs to every segment), and masks ``seq_parallel`` for kinds
+        outside :data:`SEQ_PARALLEL_KINDS` — the per-segment replacement
+        for the retired whole-network "seq_parallel is dense-only" error.
+        The returned view carries no ``segment_plans`` of its own.
+        """
+        base = self
+        for seg in self.segment_plans:
+            if seg.kind == kind:
+                base = dataclasses.replace(
+                    self, chunks=seg.chunks, boundary_mode=seg.boundary_mode,
+                    seq_parallel=seg.seq_parallel, segment_plans=())
+                break
+        else:
+            if self.segment_plans:
+                base = dataclasses.replace(self, segment_plans=())
+        if base.seq_parallel and kind not in SEQ_PARALLEL_KINDS:
+            base = dataclasses.replace(base, seq_parallel=False)
+        return base
+
+    @property
+    def any_ring(self) -> bool:
+        """True if any segment (or the default knobs) runs ring boundaries."""
+        return (self.boundary_mode == "ring"
+                or any(s.boundary_mode == "ring" for s in self.segment_plans))
+
+    @property
+    def any_seq_parallel(self) -> bool:
+        """True if any knob — the scalar default (which broadcasts to
+        uncovered kinds) or any per-segment entry — requests the
+        sequence-parallel spec.  Capability gating is ``for_segment``'s
+        job; this only answers "could any segment's view ask for it"."""
+        return (self.seq_parallel
+                or any(s.seq_parallel for s in self.segment_plans))
+
 
 def make_context(
     topo: MeshTopo | None = None,
@@ -168,18 +264,21 @@ def make_context(
     if retired:
         raise TypeError(f"make_context got unexpected kwargs "
                         f"{sorted(retired)}")
+    segment_plans: tuple[SegmentPlan, ...] = ()
     if plan is not None:
         if topo is None:
             topo = plan.topo()
         chunks = plan.chunks
         boundary_mode = plan.boundary_mode
         seq_parallel = plan.seq_parallel
+        segment_plans = tuple(getattr(plan, "segments", ()) or ())
     if topo is None:
         raise TypeError("make_context needs a MeshTopo or a plan")
     ax1, ax2 = tp_axis_names(topo)
     ctx = ATPContext(
         topo=topo, ax1=ax1, ax2=ax2, dp_axes=dp_axis_names(topo),
         chunks=chunks, boundary_mode=boundary_mode, seq_parallel=seq_parallel,
+        segment_plans=segment_plans,
     )
     if plan is not None and (ctx.d1, ctx.d2) != (plan.d1, plan.d2):
         raise ValueError(

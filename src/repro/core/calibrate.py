@@ -38,12 +38,19 @@ class CalibEntry:
     convention: all-reduce time = payload_bytes / (B * 1e9)); inf means
     the dim is singleton.  t_psum / t_ring are measured seconds of one
     boundary all-reduce in each implementation (None when unmeasured).
+    alpha_s is the measured per-collective-step latency in seconds (ring
+    step convention: a d-rank all-reduce runs 2(d-1) steps), extracted
+    from a latency-bound tiny-payload all-reduce; it feeds
+    ``t_comm_overlap``'s ring-vs-Rabenseifner and chunk-count choices —
+    chunking amortizes bandwidth but pays alpha per chunk, so a measured
+    alpha is what keeps the search from over-chunking on real fabrics.
     """
 
     b1: float
     b2: float
     t_psum: float | None = None
     t_ring: float | None = None
+    alpha_s: float | None = None
 
     @property
     def boundary_mode(self) -> str | None:
@@ -53,12 +60,14 @@ class CalibEntry:
 
     def to_dict(self) -> dict:
         return {"b1": _enc_inf(self.b1), "b2": _enc_inf(self.b2),
-                "t_psum": self.t_psum, "t_ring": self.t_ring}
+                "t_psum": self.t_psum, "t_ring": self.t_ring,
+                "alpha_s": self.alpha_s}
 
     @staticmethod
     def from_dict(d: Mapping) -> "CalibEntry":
         return CalibEntry(b1=_dec_inf(d["b1"]), b2=_dec_inf(d["b2"]),
-                          t_psum=d.get("t_psum"), t_ring=d.get("t_ring"))
+                          t_psum=d.get("t_psum"), t_ring=d.get("t_ring"),
+                          alpha_s=d.get("alpha_s"))
 
 
 def _enc_inf(v: float):
@@ -93,6 +102,11 @@ class CalibrationTable:
     def boundary_mode(self, d1: int, d2: int) -> str | None:
         e = self.get(d1, d2)
         return e.boundary_mode if e is not None else None
+
+    def alpha(self, d1: int, d2: int) -> float | None:
+        """Measured per-step collective latency (None when unmeasured)."""
+        e = self.get(d1, d2)
+        return e.alpha_s if e is not None else None
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -169,29 +183,43 @@ def _measure_factorization(d1: int, d2: int, payload_bytes: int,
     ax1, ax2 = tp_axis_names(topo)
     elems = max(1, payload_bytes // 4)
 
-    def time_allreduce(axis: str, d: int, ring: bool = False) -> float:
-        x = jnp.ones((d, elems), jnp.float32)
+    def time_allreduce(axis: str, d: int, ring: bool = False,
+                       n_elems: int | None = None) -> float:
+        x = jnp.ones((d, n_elems or elems), jnp.float32)
         red = ((lambda v: overlap.ring_all_reduce(v, axis, d)) if ring
                else (lambda v: lax.psum(v, axis)))
         f = jax.jit(shard_map(red, mesh=mesh, in_specs=P(axis),
                               out_specs=P(axis), check_vma=True))
         return _time_fn(f, x, repeats=repeats)
 
+    def alpha_from_tiny(axis: str, d: int) -> float:
+        """Per-step latency: a 64-element all-reduce is latency-bound, so
+        its wall time over the ring step count is alpha_s (ROADMAP open
+        item — previously analytic-only)."""
+        return max(0.0, time_allreduce(axis, d, n_elems=64)) / (2 * (d - 1))
+
     b1 = b2 = math.inf
-    t_psum = t_ring = None
+    t_psum = t_ring = alpha_s = None
     if ax1 is not None:
         t_psum = time_allreduce(ax1, d1)
         t_ring = time_allreduce(ax1, d1, ring=True)
         b1 = payload_bytes / t_psum / 1e9
+        alpha_s = alpha_from_tiny(ax1, d1)
         if ax2 is not None:
             b2 = payload_bytes / time_allreduce(ax2, d2) / 1e9
+            # one alpha serves every collective of this factorization —
+            # keep the slower axis's latency (conservative: the cost model
+            # must not over-chunk the slow axis on a two-level fabric)
+            alpha_s = max(alpha_s, alpha_from_tiny(ax2, d2))
     elif ax2 is not None:
         # boundary collectives live on the only non-trivial dim here, so
         # the psum timing doubles as the b2 measurement
         t_psum = time_allreduce(ax2, d2)
         t_ring = time_allreduce(ax2, d2, ring=True)
         b2 = payload_bytes / t_psum / 1e9
-    return CalibEntry(b1=b1, b2=b2, t_psum=t_psum, t_ring=t_ring)
+        alpha_s = alpha_from_tiny(ax2, d2)
+    return CalibEntry(b1=b1, b2=b2, t_psum=t_psum, t_ring=t_ring,
+                      alpha_s=alpha_s)
 
 
 def calibrate_mesh(

@@ -62,9 +62,14 @@ def collective_seconds(
     return vol_bytes * transfer(d) / (raw_bw_gbps * 1e9) + steps * alpha_s
 
 
+def _ff_cols(cfg, d_ff: float) -> float:
+    """Column-first output width of one MLP up(-and-gate) projection."""
+    return 2.0 * d_ff if cfg.mlp_kind in ("swiglu", "geglu") else float(d_ff)
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerCommProfile:
-    """Per-transformer-layer TP communication volumes (generalizes Eq. 2).
+    """Per-layer TP communication volumes (generalizes Eq. 2 per segment kind).
 
     col_first_out : sum of output dims of column-first GEMMs (all-reduced
                     over mesh dim 2 at size dim/d1).  GPT: qkv 3h + mlp-up
@@ -72,15 +77,169 @@ class LayerCommProfile:
     row_first_out : sum of output dims of row-first GEMMs (all-reduced over
                     mesh dim 1 at size dim/d2).  GPT: attn-out h + mlp-down
                     h = 2h.
+    col_full_out  : output dims all-reduced over mesh dim 2 at FULL width
+                    (not d1-sharded): MLA's compressed-latent
+                    down-projections, mamba's replicated zx/B/C/dt
+                    projections (the recurrent-state inputs), xlstm's
+                    replicated gate pre-activations.
+    row_full_out  : output dims all-reduced over mesh dim 1 at FULL width
+                    (not d2-sharded): zamba's shared-attention ax1
+                    regather, xlstm's w_down/recurrent-h psum(ax1) parts.
+                    Priced against B1 with no GEMM-overlap credit.
+    flat_dispatch_out : per-token feature widths moved through flat-TP
+                    (d1*d2) all-to-all — MoE expert dispatch + combine
+                    (2 * top_k * capacity_factor * h); priced on the
+                    bottleneck link and never credited with GEMM overlap.
+
+    The per-kind constructors below derive these from a ``ModelConfig``;
+    ``for_segment`` dispatches on the model's segment kinds (configs.base
+    ``segments``), which is what the per-segment plan search prices.
     """
 
     col_first_out: float
     row_first_out: float
     hidden: float | None = None  # contraction dim (for GEMM-time modelling)
+    col_full_out: float = 0.0
+    row_full_out: float = 0.0
+    flat_dispatch_out: float = 0.0
 
     @staticmethod
     def gpt(hidden: int) -> "LayerCommProfile":
         return LayerCommProfile(7.0 * hidden, 2.0 * hidden, hidden=hidden)
+
+    # -- per-segment-kind constructors (derive volumes from ModelConfig) ----
+
+    @staticmethod
+    def dense(cfg) -> "LayerCommProfile":
+        """GQA attention + dense MLP: fused qkv f1, attn-out f2, up(+gate)
+        f3, down f4 (matches models.transformer.dense_block)."""
+        col = cfg.q_dim + 2.0 * cfg.kv_dim + _ff_cols(cfg, cfg.d_ff)
+        return LayerCommProfile(float(col), 2.0 * cfg.d_model,
+                                hidden=float(cfg.d_model))
+
+    @staticmethod
+    def moe(cfg) -> "LayerCommProfile":
+        """GQA attention + EP MoE FFN: the dense-MLP boundaries are replaced
+        by flat-TP all-to-all dispatch bytes (models.moe.moe_block)."""
+        mc = cfg.moe
+        col = cfg.q_dim + 2.0 * cfg.kv_dim
+        row = float(cfg.d_model)  # attn-out f2 only
+        if mc.num_shared:  # deepseek shared experts run the dense MLP path
+            col += _ff_cols(cfg, mc.d_ff_expert * mc.num_shared)
+            row += cfg.d_model
+        flat = 2.0 * mc.top_k * mc.capacity_factor * cfg.d_model
+        return LayerCommProfile(float(col), row, hidden=float(cfg.d_model),
+                                flat_dispatch_out=flat)
+
+    @staticmethod
+    def mla_dense(cfg) -> "LayerCommProfile":
+        """MLA attention + dense MLP: the latent down-projections psum(ax2)
+        at full compressed-KV width (models.mla.mla_block)."""
+        m = cfg.mla
+        latents = m.q_lora_rank + m.kv_lora_rank + m.qk_rope_head_dim
+        return LayerCommProfile(
+            _ff_cols(cfg, cfg.d_ff),            # f3 (up+gate)
+            2.0 * cfg.d_model,                  # wo + mlp-down row boundaries
+            hidden=float(cfg.d_model), col_full_out=float(latents))
+
+    @staticmethod
+    def mla_moe(cfg) -> "LayerCommProfile":
+        mla = LayerCommProfile.mla_dense(cfg)
+        moe = LayerCommProfile.moe(cfg)
+        mc = cfg.moe
+        col = (mla.col_first_out - _ff_cols(cfg, cfg.d_ff)  # MoE replaces MLP
+               + (_ff_cols(cfg, mc.d_ff_expert * mc.num_shared)
+                  if mc.num_shared else 0.0))
+        row = cfg.d_model + (cfg.d_model if mc.num_shared else 0.0)
+        return LayerCommProfile(col, float(row), hidden=float(cfg.d_model),
+                                col_full_out=mla.col_full_out,
+                                flat_dispatch_out=moe.flat_dispatch_out)
+
+    @staticmethod
+    def mamba(cfg) -> "LayerCommProfile":
+        """Mamba2 block: replicated zx in-projection + the recurrent-state
+        inputs (B/C at 2*d_state, dt at nheads) psum(ax2) at full width;
+        out-projection is a standard row boundary."""
+        sc = cfg.ssm
+        d_inner = sc.expand * cfg.d_model
+        nheads = d_inner // sc.head_dim
+        state = 2.0 * sc.d_state + nheads       # recurrent-state volume/token
+        return LayerCommProfile(
+            0.0, float(cfg.d_model), hidden=float(cfg.d_model),
+            col_full_out=2.0 * d_inner + state)
+
+    @staticmethod
+    def zamba(cfg) -> "LayerCommProfile":
+        """One zamba super-block: shared-attention entry (two fused
+        column-first h->h projections + full-width ax1 regather) + a dense
+        block + (shared_attn_every - 1) mamba blocks."""
+        inner = cfg.ssm.shared_attn_every
+        d = LayerCommProfile.dense(cfg)
+        m = LayerCommProfile.mamba(cfg)
+        k = inner - 1
+        return LayerCommProfile(
+            d.col_first_out + cfg.d_model,               # shared entry proj
+            d.row_first_out + k * m.row_first_out,
+            hidden=float(cfg.d_model),
+            col_full_out=k * m.col_full_out,
+            row_full_out=float(cfg.d_model))             # ax1 regather
+
+    @staticmethod
+    def xlstm(cfg) -> "LayerCommProfile":
+        """One xLSTM super-block: (slstm_every - 1) mLSTM blocks (replicated
+        up/gate + qk pre-activations, full-width down psum over both axes)
+        + one sLSTM (replicated gates + recurrent h psum(ax1))."""
+        sc = cfg.ssm
+        inner = sc.slstm_every
+        d_up = int(sc.proj_factor * cfg.d_model)
+        nh = cfg.num_heads
+        dk = (d_up // nh) // 2
+        mlstm_col_full = 2.0 * d_up + 2.0 * nh * dk + cfg.d_model
+        slstm_col_full = 4.0 * cfg.d_model
+        return LayerCommProfile(
+            0.0, 0.0, hidden=float(cfg.d_model),
+            col_full_out=(inner - 1) * mlstm_col_full + slstm_col_full,
+            # per-block w_down / recurrent-h psum(ax1) at full width
+            row_full_out=float(inner * cfg.d_model))
+
+    _KIND_DISPATCH = {
+        "dense": "dense", "moe": "moe", "mla_dense": "mla_dense",
+        "mla_moe": "mla_moe", "mamba": "mamba", "zamba": "zamba",
+        "xlstm": "xlstm",
+    }
+
+    @staticmethod
+    def for_segment(kind: str, cfg) -> "LayerCommProfile":
+        """Per-kind profile for one model segment (configs.base.segments)."""
+        try:
+            ctor = LayerCommProfile._KIND_DISPATCH[kind]
+        except KeyError:
+            raise ValueError(
+                f"no comm profile for segment kind {kind!r}; have "
+                f"{sorted(LayerCommProfile._KIND_DISPATCH)}") from None
+        return getattr(LayerCommProfile, ctor)(cfg)
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentWorkload:
+    """One model segment's search workload: ``layers`` scan steps of a
+    ``profile``-shaped block (super-block kinds fold their inner blocks
+    into the profile, so layers == scan count)."""
+
+    kind: str
+    layers: int
+    profile: LayerCommProfile
+
+
+def segment_workloads(cfg) -> tuple[SegmentWorkload, ...]:
+    """Per-segment (kind, layers, profile) for a ModelConfig — the
+    heterogeneous workload the v2 plan search prices and sums."""
+    from repro.configs.base import segments
+
+    return tuple(
+        SegmentWorkload(kind=s.kind, layers=s.count,
+                        profile=LayerCommProfile.for_segment(s.kind, cfg))
+        for s in segments(cfg))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,6 +326,8 @@ class OverlapStrategyCost:
     #: time (incl. per-step latency) fits inside its per-chunk GEMM time —
     #: when True, t_exposed is strictly below the chunks=1 exposure.
     fully_overlapped: bool = False
+    #: flat-TP all-to-all wire bytes (MoE expert dispatch + combine)
+    flat_dispatch_bytes: float = 0.0
 
 
 def _exposed(vol_bytes: float, d: int, raw_bw: float, op: str, algo: str,
@@ -231,15 +392,39 @@ def t_comm_overlap(
         if d2 > 1 and cb2 is not None and not math.isinf(cb2):
             b2_raw = cb2 * 2.0 * (d2 - 1) / d2
     steps = 2.0 * layers  # fwd + bwd per layer
-    vol_col = batch * seq * profile.col_first_out / max(1, d1) * bytes_per_elem
-    vol_row = batch * seq * profile.row_first_out / max(1, d2) * bytes_per_elem
+    # col boundary pool: d1-sharded column outputs + full-width (unsharded)
+    # psum(ax2) outputs — MLA latents, SSM recurrent-state projections
+    vol_col = batch * seq * (profile.col_first_out / max(1, d1)
+                             + profile.col_full_out) * bytes_per_elem
+    # row boundary pool: d2-sharded row outputs + full-width psum(ax1)
+    # outputs (zamba regather, xlstm recurrent h) — no GEMM-overlap credit
+    # is claimed for the full-width part (conservative: it stays exposed)
+    vol_row = batch * seq * (profile.row_first_out / max(1, d2)
+                             + profile.row_full_out) * bytes_per_elem
 
-    # producing-GEMM time per boundary group (overlappable work)
+    # producing-GEMM time per boundary group (overlappable work); the
+    # full-width outputs' GEMMs shard only over ax2 (K = hidden/d2)
     hidden = profile.hidden
-    flops_col = 2.0 * batch * seq * hidden * profile.col_first_out / (d1 * d2)
+    flops_col = 2.0 * batch * seq * hidden * (
+        profile.col_first_out / (d1 * d2) + profile.col_full_out / d2)
     flops_row = 2.0 * batch * seq * hidden * profile.row_first_out / (d1 * d2)
     tg_col = flops_col / (peak_tflops * 1e12)
     tg_row = flops_row / (peak_tflops * 1e12)
+
+    # flat-TP expert dispatch (MoE all-to-all, there + back): bottleneck
+    # link, ring-step latency over the flat d1*d2 group, no overlap credit
+    n_flat = d1 * d2
+    t_flat = 0.0
+    flat_bytes = 0.0
+    if profile.flat_dispatch_out > 0.0 and n_flat > 1:
+        vol_flat = (batch * seq * profile.flat_dispatch_out / n_flat
+                    * bytes_per_elem)
+        bw_flat = min(b for b, d in ((b1_raw, d1), (b2_raw, d2)) if d > 1)
+        flat_steps = (n_flat - 1) if algo == "ring" \
+            else math.ceil(math.log2(n_flat))
+        t_flat = (vol_flat * (n_flat - 1) / n_flat / (bw_flat * 1e9)
+                  + flat_steps * alpha_s)
+        flat_bytes = steps * vol_flat * (n_flat - 1) / n_flat
 
     t_col = (collective_seconds(vol_col, d2, b2_raw, op="all_reduce",
                                 algo=algo, alpha_s=alpha_s) if d2 > 1 else 0.0)
@@ -261,13 +446,14 @@ def t_comm_overlap(
         row_boundary_op, row_chunks = "reduce_scatter", 1
     else:
         row_boundary_op, row_chunks = "all_reduce", chunks
-    t_comm = steps * (t_col + t_row + t_gather)
+    t_comm = steps * (t_col + t_row + t_gather + t_flat)
     t_exposed = steps * (
         _exposed(vol_col, d2, b2_raw, "all_reduce", algo, alpha_s,
                  chunks, tg_col)
         + _exposed(vol_row, d1, b1_raw, row_boundary_op, algo, alpha_s,
                    row_chunks, tg_row)
-        + t_gather)  # entry gathers overlap the norm only
+        + t_gather   # entry gathers overlap the norm only
+        + t_flat)    # dispatch is on the routing critical path
     t_gemm = steps * (tg_col + tg_row)
 
     # does every chunk-credited boundary hide its per-chunk collective
@@ -298,4 +484,5 @@ def t_comm_overlap(
         b1_raw=b1_raw, b2_raw=b2_raw,
         t_comm=t_comm, t_exposed=t_exposed, t_gemm=t_gemm,
         ax1_boundary_bytes=ax1_boundary, ax1_total_bytes=ax1_total,
-        ax2_boundary_bytes=ax2_boundary, fully_overlapped=fully_overlapped)
+        ax2_boundary_bytes=ax2_boundary, fully_overlapped=fully_overlapped,
+        flat_dispatch_bytes=flat_bytes)

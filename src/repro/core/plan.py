@@ -26,13 +26,19 @@ import json
 from typing import Mapping
 
 from repro.core import comm_matrix
+from repro.core.atp import SegmentPlan
 from repro.core.calibrate import CalibrationTable
 from repro.core.comm_matrix import HierarchicalCommMatrix
-from repro.core.cost_model import LayerCommProfile, OverlapStrategyCost
+from repro.core.cost_model import (LayerCommProfile, OverlapStrategyCost,
+                                   segment_workloads)
 from repro.core.mesh import MeshTopo, atp_topo
-from repro.core.search import search_strategy_overlap
+from repro.core.search import (search_strategy_overlap,
+                               search_strategy_segments)
 
-PLAN_FORMAT_VERSION = 1
+#: v2 adds per-segment ``SegmentPlan`` tuples (heterogeneous per-segment
+#: overlap strategies).  v1 files — one global knob set — load by
+#: broadcasting those knobs to every segment (``segment_plan``).
+PLAN_FORMAT_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,10 +63,17 @@ class PredictedCost:
 class ParallelPlan:
     """One complete, serializable parallelization strategy.
 
-    Only (d1, d2, dp, pods, chunks, boundary_mode, seq_parallel) affect
-    execution — ``context()`` is a pure function of them.  ``topology``,
-    ``calibration``, ``predicted`` and ``provenance`` record *why* the plan
-    was chosen, so saved artifacts are auditable and re-searchable.
+    Only (d1, d2, dp, pods, chunks, boundary_mode, seq_parallel, segments)
+    affect execution — ``context()`` is a pure function of them.
+    ``topology``, ``calibration``, ``predicted`` and ``provenance`` record
+    *why* the plan was chosen, so saved artifacts are auditable and
+    re-searchable.
+
+    ``segments`` (format_version 2) carries one :class:`SegmentPlan` per
+    model segment kind over the shared (d1, d2, dp) mesh; the scalar
+    (chunks, boundary_mode, seq_parallel) stay as the defaults broadcast
+    to kinds with no dedicated entry — which is exactly how v1 files
+    load.
     """
 
     d1: int
@@ -70,6 +83,7 @@ class ParallelPlan:
     chunks: int = 1
     boundary_mode: str = "psum"
     seq_parallel: bool = False
+    segments: tuple[SegmentPlan, ...] = ()
     topology: str | None = None  # comm-matrix preset name (if any)
     calibration: CalibrationTable | None = None
     predicted: PredictedCost | None = None
@@ -84,6 +98,10 @@ class ParallelPlan:
             raise ValueError(
                 f"boundary_mode must be 'psum' or 'ring', got "
                 f"{self.boundary_mode!r}")
+        object.__setattr__(self, "segments", tuple(self.segments))
+        kinds = [s.kind for s in self.segments]
+        if len(set(kinds)) != len(kinds):
+            raise ValueError(f"duplicate segment kinds in plan: {kinds}")
         # canonical provenance ordering so equality survives JSON round-trips
         object.__setattr__(self, "provenance", tuple(sorted(
             (str(k), str(v)) for k, v in self.provenance)))
@@ -109,10 +127,32 @@ class ParallelPlan:
         return make_context(topo if topo is not None else self.topo(),
                             plan=self)
 
+    def segment_plan(self, kind: str) -> SegmentPlan:
+        """This kind's knobs — a dedicated v2 entry, or the plan's global
+        knobs broadcast (the v1-file migration rule)."""
+        for seg in self.segments:
+            if seg.kind == kind:
+                return seg
+        return SegmentPlan(kind=kind, chunks=self.chunks,
+                           boundary_mode=self.boundary_mode,
+                           seq_parallel=self.seq_parallel)
+
+    @property
+    def calibration_stale(self) -> bool:
+        """True when the carried calibration table predates an elastic
+        resize (it was measured on a mesh this plan no longer runs on)."""
+        return ("calibration", "stale") in self.provenance
+
     def describe(self) -> str:
         sp = "+sp" if self.seq_parallel else ""
-        return (f"DeviceMesh({self.d1},{self.d2}) dp={self.dp} "
-                f"chunks={self.chunks} {self.boundary_mode}{sp}")
+        out = (f"DeviceMesh({self.d1},{self.d2}) dp={self.dp} "
+               f"chunks={self.chunks} {self.boundary_mode}{sp}")
+        if self.segments:
+            out += (" segments["
+                    + " ".join(s.describe() for s in self.segments) + "]")
+        if self.calibration_stale:
+            out += " [calibration:stale]"
+        return out
 
     def with_(self, **changes) -> "ParallelPlan":
         """Functional update (e.g. re-binding dp to a new device count)."""
@@ -125,7 +165,9 @@ class ParallelPlan:
             "format_version": PLAN_FORMAT_VERSION,
             "d1": self.d1, "d2": self.d2, "dp": self.dp, "pods": self.pods,
             "chunks": self.chunks, "boundary_mode": self.boundary_mode,
-            "seq_parallel": self.seq_parallel, "topology": self.topology,
+            "seq_parallel": self.seq_parallel,
+            "segments": [s.to_dict() for s in self.segments],
+            "topology": self.topology,
             "calibration": (self.calibration.to_dict()
                             if self.calibration is not None else None),
             "predicted": (self.predicted.to_dict()
@@ -152,6 +194,10 @@ class ParallelPlan:
             chunks=int(d.get("chunks", 1)),
             boundary_mode=d.get("boundary_mode", "psum"),
             seq_parallel=bool(d.get("seq_parallel", False)),
+            # absent in v1 files: the global knobs above broadcast to every
+            # segment through ``segment_plan`` / ``ATPContext.for_segment``
+            segments=tuple(SegmentPlan.from_dict(s)
+                           for s in d.get("segments", ())),
             topology=d.get("topology"),
             calibration=(CalibrationTable.from_dict(calib)
                          if calib is not None else None),
@@ -206,10 +252,11 @@ def plan_search(
     matrix: HierarchicalCommMatrix | str,
     tp_degree: int,
     *,
-    layers: int,
     batch: int,
     seq: int,
-    profile: LayerCommProfile,
+    layers: int | None = None,
+    profile: LayerCommProfile | None = None,
+    model=None,
     dp: int = 1,
     pods: int = 1,
     bytes_per_elem: int = 2,
@@ -231,19 +278,51 @@ def plan_search(
         ``algo="rabenseifner"``, ``alpha_s=0`` == the seed Eq. 2
         ``search_strategy`` ranking, exactly.
 
+    Two workload forms:
+
+      - ``layers=`` + ``profile=``: one homogeneous per-layer profile (the
+        v1 API) — emits plans with no ``segments`` (global knobs only);
+      - ``model=`` (a ModelConfig): heterogeneous per-segment search — each
+        model segment's (chunks, seq_parallel) is optimized against its
+        per-kind comm profile (``cost_model.segment_workloads``) over the
+        shared mesh, segment costs are summed, and the emitted plans carry
+        one :class:`SegmentPlan` per segment.  For a single-dense-segment
+        model this selects the identical strategy as the v1 form with
+        ``profile=LayerCommProfile.dense(model)`` (the parity pin).
+
     ``calibration`` accepts a :class:`CalibrationTable` or a seed-style
-    ``{(d1,d2): (B1,B2)}`` dict; measured bandwidths override Eq. 3/4 for
-    the factorizations they cover and the winning plan carries the table.
+    ``{(d1,d2): (B1,B2)}`` dict; measured bandwidths (and measured per-step
+    latencies, when the table has them) override Eq. 3/4 for the
+    factorizations they cover and the winning plan carries the table.
     ``boundary_mode`` forces psum/ring; by default it follows the
     calibration's measured preference (falling back to "psum").
     """
     hm, preset = _resolve_matrix(matrix)
     calibration = CalibrationTable.coerce(calibration)
-    res = search_strategy_overlap(
-        hm, tp_degree, layers=layers, batch=batch, seq=seq, profile=profile,
-        bytes_per_elem=bytes_per_elem, chunks_options=chunks_options,
-        seq_parallel_options=seq_parallel_options, peak_tflops=peak_tflops,
-        algo=algo, alpha_s=alpha_s, calibration=calibration)
+    if model is None and (layers is None or profile is None):
+        raise TypeError("plan_search needs layers= + profile=, or model=")
+
+    if model is not None:
+        workloads = segment_workloads(model)
+        res = search_strategy_segments(
+            hm, tp_degree, workloads=workloads, batch=batch, seq=seq,
+            bytes_per_elem=bytes_per_elem, chunks_options=chunks_options,
+            seq_parallel_options=seq_parallel_options,
+            peak_tflops=peak_tflops, algo=algo, alpha_s=alpha_s,
+            calibration=calibration)
+        workload_tag = (f"model={model.name} "
+                        f"segments={'+'.join(f'{w.kind}x{w.layers}' for w in workloads)} "
+                        f"batch={batch} seq={seq} bytes={bytes_per_elem}")
+    else:
+        res = search_strategy_overlap(
+            hm, tp_degree, layers=layers, batch=batch, seq=seq,
+            profile=profile, bytes_per_elem=bytes_per_elem,
+            chunks_options=chunks_options,
+            seq_parallel_options=seq_parallel_options,
+            peak_tflops=peak_tflops, algo=algo, alpha_s=alpha_s,
+            calibration=calibration)
+        workload_tag = (f"layers={layers} batch={batch} seq={seq} "
+                        f"bytes={bytes_per_elem}")
 
     prov = (
         ("searcher", "plan_search"),
@@ -251,18 +330,29 @@ def plan_search(
         ("algo", algo),
         ("alpha_s", repr(alpha_s)),
         ("peak_tflops", repr(peak_tflops)),
-        ("workload", f"layers={layers} batch={batch} seq={seq} "
-                     f"bytes={bytes_per_elem}"),
+        ("workload", workload_tag),
         ("calibrated", "yes" if calibration is not None else "no"),
     )
 
-    def to_plan(c: OverlapStrategyCost) -> ParallelPlan:
+    def boundary_for(d1: int, d2: int) -> str:
         bm = boundary_mode
         if bm is None and calibration is not None:
-            bm = calibration.boundary_mode(c.d1, c.d2)
+            bm = calibration.boundary_mode(d1, d2)
+        return bm or "psum"
+
+    def to_plan(c) -> ParallelPlan:
+        """c: OverlapStrategyCost (v1) or SegmentedStrategyCost (model=);
+        both expose d1/d2/chunks/seq_parallel/t_* with the same meaning
+        (segmented summary knobs are the dominant segment's)."""
+        bm = boundary_for(c.d1, c.d2)
+        segs = ()
+        if model is not None:
+            segs = tuple(SegmentPlan(
+                kind=s.kind, chunks=s.chunks, boundary_mode=bm,
+                seq_parallel=s.seq_parallel) for s in c.segments)
         return ParallelPlan(
             d1=c.d1, d2=c.d2, dp=dp, pods=pods, chunks=c.chunks,
-            boundary_mode=bm or "psum", seq_parallel=c.seq_parallel,
+            boundary_mode=bm, seq_parallel=c.seq_parallel, segments=segs,
             topology=preset, calibration=calibration,
             predicted=PredictedCost(t_comm=c.t_comm, t_exposed=c.t_exposed,
                                     t_gemm=c.t_gemm),
@@ -280,6 +370,7 @@ def replan_elastic(
     batch: int | None = None,
     seq: int | None = None,
     profile: LayerCommProfile | None = None,
+    model=None,
 ) -> ParallelPlan:
     """Derive a plan for a surviving device pool (elastic restart).
 
@@ -287,10 +378,17 @@ def replan_elastic(
     TP degree is halved only when even dp=1 no longer fits.  dp never
     *grows* past the original plan's dp*pods — a re-plan may only shrink
     the job, not silently expand it onto devices the user never asked
-    for.  When the workload is known and the plan records its topology
-    preset, the surviving TP degree is re-searched from scratch;
-    otherwise the mesh is re-factorized arithmetically and every other
-    knob is kept.  The result records the resize in its provenance.
+    for.  When the workload is known (``layers``+``profile``, or
+    ``model``) and the plan records its topology preset, the surviving TP
+    degree is re-searched from scratch; otherwise the mesh is
+    re-factorized arithmetically and every other knob is kept.  The
+    result records the resize in its provenance.
+
+    The calibration table is *kept* across a TP-degree change — its
+    measurements may still cover surviving factorizations — but the plan
+    is tagged ``calibration: stale`` (visible in ``describe()`` and via
+    ``calibration_stale``), so a consumer knows the numbers predate the
+    resize and can re-run ``calibrate_mesh`` on the surviving mesh.
     """
     if n_devices < 1:
         raise ValueError("no surviving devices to re-plan onto")
@@ -299,14 +397,21 @@ def replan_elastic(
         tp //= 2
     dp = max(1, min(plan.dp * plan.pods, n_devices // tp))
     tag = ("elastic", f"replanned {plan.devices}->{n_devices} devices")
-    workload_known = None not in (layers, batch, seq, profile)
+    # a carried table goes (or stays) stale when the TP degree changed
+    now_stale = plan.calibration is not None and (
+        tp != plan.tp or plan.calibration_stale)
+    stale_tags = ((("calibration", "stale"),)
+                  if now_stale and not plan.calibration_stale else ())
+    workload_known = (model is not None and None not in (batch, seq)) or \
+        None not in (layers, batch, seq, profile)
     if workload_known and plan.topology is not None:
         res = plan_search(
             plan.topology, tp, layers=layers, batch=batch, seq=seq,
-            profile=profile, dp=dp,
-            calibration=plan.calibration if tp == plan.tp else None)
+            profile=profile, model=model, dp=dp,
+            calibration=plan.calibration)
         best = res.best
-        return best.with_(provenance=best.provenance + (tag,))
+        fresh_stale = ((("calibration", "stale"),) if now_stale else ())
+        return best.with_(provenance=best.provenance + (tag,) + fresh_stale)
     if tp == plan.tp:
         return plan.with_(dp=dp, pods=1,
                           provenance=plan.provenance + (tag,))
@@ -314,5 +419,4 @@ def replan_elastic(
 
     d1 = _math.gcd(plan.d1, tp)
     return plan.with_(d1=d1, d2=tp // d1, dp=dp, pods=1,
-                      calibration=None,
-                      provenance=plan.provenance + (tag,))
+                      provenance=plan.provenance + (tag,) + stale_tags)

@@ -10,10 +10,12 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.atp import SEQ_PARALLEL_KINDS
 from repro.core.calibrate import CalibrationTable
-from repro.core.comm_matrix import HierarchicalCommMatrix
 from repro.core.cost_model import (LayerCommProfile, OverlapStrategyCost,
-                                   StrategyCost, t_comm, t_comm_overlap)
+                                   SegmentWorkload, StrategyCost, t_comm,
+                                   t_comm_overlap)
+from repro.core.comm_matrix import HierarchicalCommMatrix
 from repro.core.mesh import factorizations
 
 
@@ -78,6 +80,26 @@ class OverlapSearchResult:
                 "seq_parallel": self.best.seq_parallel}
 
 
+def _calibration_lookups(calibration, alpha_s: float):
+    """(calib_for, alpha_for) shared by the v1 and v2 searches — measured
+    bandwidths / per-step latencies override the analytic defaults for the
+    factorizations the table covers.  One implementation: the v1/v2
+    parity pin depends on both searches pricing calibration identically."""
+
+    def calib_for(d1: int, d2: int):
+        return (calibration.bandwidths(d1, d2)
+                if calibration is not None else None)
+
+    def alpha_for(d1: int, d2: int) -> float:
+        if calibration is not None:
+            a = calibration.alpha(d1, d2)
+            if a is not None:
+                return a
+        return alpha_s
+
+    return calib_for, alpha_for
+
+
 def search_strategy_overlap(
     matrix: HierarchicalCommMatrix,
     tp_degree: int,
@@ -112,10 +134,7 @@ def search_strategy_overlap(
     """
 
     calibration = CalibrationTable.coerce(calibration)
-
-    def calib_for(d1: int, d2: int):
-        return (calibration.bandwidths(d1, d2)
-                if calibration is not None else None)
+    calib_for, alpha_for = _calibration_lookups(calibration, alpha_s)
 
     costs = []
     for d1, d2 in factorizations(tp_degree):
@@ -129,7 +148,8 @@ def search_strategy_overlap(
                     matrix, d1, d2, layers=layers, batch=batch, seq=seq,
                     profile=profile, bytes_per_elem=bytes_per_elem,
                     chunks=chunks, seq_parallel=sp,
-                    peak_tflops=peak_tflops, algo=algo, alpha_s=alpha_s,
+                    peak_tflops=peak_tflops, algo=algo,
+                    alpha_s=alpha_for(d1, d2),
                     calibrated=calib_for(d1, d2)))
     if not costs:
         raise ValueError(
@@ -137,6 +157,128 @@ def search_strategy_overlap(
     ranked = tuple(sorted(costs, key=lambda c: (c.t_exposed, c.chunks,
                                                 c.seq_parallel)))
     return OverlapSearchResult(ranked[0], ranked)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-segment search (plan format_version 2).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentChoice:
+    """One segment's chosen knobs under a shared (d1, d2) mesh."""
+
+    kind: str
+    layers: int
+    chunks: int
+    seq_parallel: bool
+    cost: OverlapStrategyCost
+
+    @property
+    def t_exposed(self) -> float:
+        return self.cost.t_exposed
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentedStrategyCost:
+    """Summed per-segment cost of one (d1, d2) factorization."""
+
+    d1: int
+    d2: int
+    t_comm: float
+    t_exposed: float
+    t_gemm: float
+    segments: tuple[SegmentChoice, ...]
+
+    @property
+    def chunks(self) -> int:
+        """Dominant (most-layers) segment's chunk count — the summary knob."""
+        return max(self.segments, key=lambda c: c.layers).chunks
+
+    @property
+    def seq_parallel(self) -> bool:
+        return max(self.segments, key=lambda c: c.layers).seq_parallel
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentedSearchResult:
+    best: SegmentedStrategyCost
+    ranked: tuple[SegmentedStrategyCost, ...]  # ascending summed t_exposed
+
+    def mesh(self) -> tuple[int, int]:
+        return (self.best.d1, self.best.d2)
+
+
+def search_strategy_segments(
+    matrix: HierarchicalCommMatrix,
+    tp_degree: int,
+    *,
+    workloads: tuple[SegmentWorkload, ...],
+    batch: int,
+    seq: int,
+    bytes_per_elem: int = 2,
+    chunks_options: tuple[int, ...] = (1, 2, 4, 8),
+    seq_parallel_options: tuple[bool, ...] = (False, True),
+    peak_tflops: float = 200.0,
+    algo: str = "ring",
+    alpha_s: float = 0.0,
+    calibration=None,
+) -> SegmentedSearchResult:
+    """Per-segment knob search over a shared (d1, d2) mesh.
+
+    The mesh is global (segment boundaries must agree on the activation
+    layout) but (chunks, seq_parallel) are optimized independently per
+    segment against that segment's per-kind comm profile, and the mesh
+    ranking sums the per-segment exposed times.  ``seq_parallel`` is only
+    explored for kinds in :data:`repro.core.atp.SEQ_PARALLEL_KINDS` —
+    the same gate execution applies (``ATPContext.for_segment``).
+
+    For a single-segment workload this selects exactly the strategy
+    ``search_strategy_overlap`` would (identical knobs and cost): per-mesh
+    knob minimization under the same (t_exposed, chunks, seq_parallel)
+    key, then the same mesh ranking — the v1/v2 parity pin.
+    """
+    if not workloads:
+        raise ValueError("search_strategy_segments needs >= 1 workload")
+    calibration = CalibrationTable.coerce(calibration)
+    calib_for, alpha_for = _calibration_lookups(calibration, alpha_s)
+
+    meshes = []
+    for d1, d2 in factorizations(tp_degree):
+        try:
+            matrix.axis_bandwidths(d1, d2)
+        except ValueError:
+            continue
+        choices = []
+        for w in workloads:
+            sp_opts = (seq_parallel_options if w.kind in SEQ_PARALLEL_KINDS
+                       else (False,))
+            cands = [t_comm_overlap(
+                matrix, d1, d2, layers=w.layers, batch=batch, seq=seq,
+                profile=w.profile, bytes_per_elem=bytes_per_elem,
+                chunks=chunks, seq_parallel=sp, peak_tflops=peak_tflops,
+                algo=algo, alpha_s=alpha_for(d1, d2),
+                calibrated=calib_for(d1, d2))
+                for chunks in chunks_options for sp in sp_opts]
+            best = min(cands, key=lambda c: (c.t_exposed, c.chunks,
+                                             c.seq_parallel))
+            choices.append(SegmentChoice(
+                kind=w.kind, layers=w.layers, chunks=best.chunks,
+                seq_parallel=best.seq_parallel, cost=best))
+        meshes.append(SegmentedStrategyCost(
+            d1=d1, d2=d2,
+            t_comm=sum(c.cost.t_comm for c in choices),
+            t_exposed=sum(c.cost.t_exposed for c in choices),
+            t_gemm=sum(c.cost.t_gemm for c in choices),
+            segments=tuple(choices)))
+    if not meshes:
+        raise ValueError(
+            f"no valid (d1,d2) for tp={tp_degree} on {matrix.name}")
+    ranked = tuple(sorted(
+        meshes, key=lambda m: (m.t_exposed,
+                               tuple((c.chunks, c.seq_parallel)
+                                     for c in m.segments))))
+    return SegmentedSearchResult(ranked[0], ranked)
 
 
 def recommend_chunks(matrix: HierarchicalCommMatrix, d1: int, d2: int) -> int:

@@ -69,6 +69,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
     }
     if plan is not None:
         rec["plan"] = plan.to_dict()
+        if plan.segments:
+            # compact per-segment knob summary next to the full v2 JSON
+            rec["segment_plans"] = [s.describe() for s in plan.segments]
     if not ok:
         rec["status"] = "skipped"
         rec["reason"] = why

@@ -86,12 +86,11 @@ def main():
         log.info("loaded plan %s: %s", args.plan, plan.describe())
     elif args.auto_atp:
         from repro.core.plan import plan_search
-        from repro.launch.train import comm_profile
 
         plan = plan_search(
-            args.topology, args.d1 * args.d2, layers=cfg.num_layers,
+            args.topology, args.d1 * args.d2, model=cfg,
             batch=args.slots, seq=args.prompt_len + args.max_new,
-            profile=comm_profile(cfg), dp=args.dp).best
+            dp=args.dp).best
         log.info("ATP plan search picked %s", plan.describe())
     topo = plan.topo() if plan is not None else atp_topo(args.dp, args.d1,
                                                          args.d2)

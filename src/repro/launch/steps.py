@@ -79,9 +79,10 @@ def resolve_ctx(topo: MeshTopo | None, plan, chunks: int = 1,
     Keeping this single funnel is what guarantees a searched/saved plan
     reaches train, prefill AND decode identically (no builder hand-rolls
     its own defaults and silently drops knobs).  ``decode`` masks
-    seq_parallel only: the sequence-parallel block I/O spec is defined
-    over a full sequence and does not apply to cached decode (the model
-    raises if asked); chunks and boundary_mode still apply.
+    seq_parallel only — globally AND in every per-segment entry: the
+    sequence-parallel block I/O spec is defined over a full sequence and
+    does not apply to cached decode (the model raises if asked); chunks
+    and boundary_mode still apply per segment.
     """
     if plan is not None:
         ctx = make_context(topo, plan=plan)
@@ -89,8 +90,11 @@ def resolve_ctx(topo: MeshTopo | None, plan, chunks: int = 1,
         raise TypeError("builder needs a MeshTopo or a ParallelPlan")
     else:
         ctx = make_context(topo, chunks=chunks)
-    if decode and ctx.seq_parallel:
-        ctx = dataclasses.replace(ctx, seq_parallel=False)
+    if decode and ctx.any_seq_parallel:
+        ctx = dataclasses.replace(
+            ctx, seq_parallel=False,
+            segment_plans=tuple(dataclasses.replace(s, seq_parallel=False)
+                                for s in ctx.segment_plans))
     return ctx
 
 
@@ -101,10 +105,11 @@ def _check_vma(ctx: ATPContext) -> bool:
     equivalence is pinned by the bitwise-parity tests instead.  The legacy
     (jax 0.4/0.5) checker additionally has no rep rules for the
     custom_vjp ops every whole-step program contains (gpipe_loss, the
-    overlap collectives), so it is skipped wholesale there."""
+    overlap collectives), so it is skipped wholesale there.  Ring in ANY
+    segment's plan disqualifies the whole step."""
     from repro.core.compat import LEGACY_REP_CHECKER
 
-    return not LEGACY_REP_CHECKER and ctx.boundary_mode != "ring"
+    return not LEGACY_REP_CHECKER and not ctx.any_ring
 
 
 def build_train_step(cfg: ModelConfig, topo: MeshTopo | None = None,

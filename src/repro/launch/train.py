@@ -38,20 +38,20 @@ log = logging.getLogger("repro.train")
 
 
 def comm_profile(cfg) -> LayerCommProfile:
-    """Generalized Eq.2 coefficients for this architecture's block."""
-    col = cfg.q_dim + 2 * cfg.kv_dim
-    ff_cols = 2 * cfg.d_ff if cfg.mlp_kind in ("swiglu", "geglu") else cfg.d_ff
-    col += ff_cols
-    row = 2 * cfg.d_model
-    return LayerCommProfile(float(col), float(row), hidden=float(cfg.d_model))
+    """Generalized Eq.2 coefficients for this architecture's dense block
+    (one source of truth: the per-kind constructor in the cost model)."""
+    return LayerCommProfile.dense(cfg)
 
 
 def pick_plan(cfg, tp: int, seq: int, batch: int, topology: str = "v5e",
               dp: int = 1, calibrate: bool = False, overlap: bool = True):
     """Search the plan space for this workload (optionally calibrated).
 
-    ``overlap=False`` restricts to the seed Eq. 2 space — the exact
-    degradation path the acceptance tests pin down.
+    The default path is the heterogeneous per-segment search
+    (``plan_search(model=cfg)``): each model segment gets its own
+    (chunks, seq_parallel) against its per-kind comm profile over the
+    shared mesh.  ``overlap=False`` restricts to the seed Eq. 2 space —
+    the exact degradation path the acceptance tests pin down.
     """
     calib = None
     if calibrate:
@@ -60,13 +60,14 @@ def pick_plan(cfg, tp: int, seq: int, batch: int, topology: str = "v5e",
         log.info("on-mesh calibration (%d factorizations): %s",
                  len(calib), {k: (round(e.b1, 2), round(e.b2, 2))
                               for k, e in calib.entries})
-    kw = {}
     if not overlap:
-        kw = dict(chunks_options=(1,), seq_parallel_options=(False,),
-                  algo="rabenseifner", alpha_s=0.0)
-    return plan_search(topology, tp, layers=cfg.num_layers, batch=batch,
-                       seq=seq, profile=comm_profile(cfg), dp=dp,
-                       calibration=calib, **kw)
+        return plan_search(topology, tp, layers=cfg.num_layers, batch=batch,
+                           seq=seq, profile=comm_profile(cfg), dp=dp,
+                           calibration=calib, chunks_options=(1,),
+                           seq_parallel_options=(False,),
+                           algo="rabenseifner", alpha_s=0.0)
+    return plan_search(topology, tp, model=cfg, batch=batch, seq=seq,
+                       dp=dp, calibration=calib)
 
 
 def main():
@@ -168,8 +169,8 @@ def main():
         if surviving >= live["plan"].devices:
             return live["step"]
         new_plan = replan_elastic(
-            live["plan"], surviving, layers=cfg.num_layers,
-            batch=args.batch, seq=args.seq, profile=comm_profile(cfg))
+            live["plan"], surviving, model=cfg,
+            batch=args.batch, seq=args.seq)
         log.info("elastic re-plan: %s -> %s",
                  live["plan"].describe(), new_plan.describe())
         new_step, new_info = build_train_step(cfg, opt_cfg=opt_cfg,

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import (ModelConfig, Segment,  # noqa: F401 (re-export)
+                                ShapeConfig, segments)
 from repro.core import compat
 from repro.core.atp import (ATPContext, atp_boundary, atp_linear,
                             atp_reduce_scatter, seq_gather, seq_scatter,
@@ -35,40 +36,9 @@ from repro.core.atp import (ATPContext, atp_boundary, atp_linear,
 from repro.models import layers as L
 from repro.models import mamba2, mla, moe, transformer, xlstm
 
-# ---------------------------------------------------------------------------
-# Segment plan.
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class Segment:
-    kind: str
-    count: int          # scan length
-    inner: int = 1      # blocks per scan step (zamba/xlstm super-blocks)
-
-
-def segments(cfg: ModelConfig) -> tuple[Segment, ...]:
-    if cfg.ssm is not None and cfg.ssm.slstm_every:          # xlstm
-        period = cfg.ssm.slstm_every
-        assert cfg.num_layers % period == 0
-        return (Segment("xlstm", cfg.num_layers // period, period),)
-    if cfg.ssm is not None and cfg.ssm.shared_attn_every:    # zamba2
-        per = cfg.ssm.shared_attn_every  # 1 shared attn + (per-1) mamba
-        n_super = cfg.num_layers // per
-        tail = cfg.num_layers - n_super * per
-        segs = [Segment("zamba", n_super, per)]
-        if tail:
-            segs.append(Segment("mamba", tail))
-        return tuple(segs)
-    if cfg.moe is not None:
-        segs = []
-        kind = "mla_moe" if cfg.mla is not None else "moe"
-        dense_kind = "mla_dense" if cfg.mla is not None else "dense"
-        if cfg.moe.first_dense_layers:
-            segs.append(Segment(dense_kind, cfg.moe.first_dense_layers))
-        segs.append(Segment(kind, cfg.num_layers - cfg.moe.first_dense_layers))
-        return tuple(segs)
-    return (Segment("dense", cfg.num_layers),)
+# The segment plan (Segment / segments) lives in repro.configs.base so the
+# strategy stack can derive per-segment workloads without importing model
+# code; re-exported here because this module is its execution consumer.
 
 
 # ---------------------------------------------------------------------------
@@ -181,10 +151,15 @@ def _apply_block(kind: str, ctx, cfg, p, x, positions, plan, window, cache,
         m, aux = moe.moe_block(ctx, cfg, p["moe"], h)
         return x + m, nc, aux
     if kind in ("mla_dense", "mla_moe"):
-        h = L.norm(ctx, cfg, x, p["ln_attn"])
+        # mla_dense supports the sequence-parallel spec: entry norms fold
+        # the seq all-gather, and the wo / mlp-down row boundaries
+        # psum_scatter back (mla_moe's ctx arrives with seq_parallel
+        # masked — MoE dispatch needs ax1-replicated full-sequence I/O)
+        sp = ctx.seq_parallel and cache is None
+        h = L.norm(ctx, cfg, x, p["ln_attn"], gather_seq=sp)
         a, nc = mla.mla_block(ctx, cfg, p["mla"], h, positions, cache=cache)
         x = x + a
-        h = L.norm(ctx, cfg, x, p["ln_mlp"])
+        h = L.norm(ctx, cfg, x, p["ln_mlp"], gather_seq=sp)
         if kind == "mla_dense":
             m = transformer.mlp_block(ctx, cfg, p["mlp"], h)
         else:
@@ -496,28 +471,37 @@ def forward(
     caches=None,            # decode: per-segment stacked cache trees
     remat: bool = False,
 ):
-    """Returns (hidden [b, s, h/d2], new_caches, aux_sum, x_emb0)."""
-    if ctx.seq_parallel:
-        unsupported = [s.kind for s in segments(cfg) if s.kind != "dense"]
-        if unsupported:
-            raise NotImplementedError(
-                f"seq_parallel block I/O only wired for dense segments, "
-                f"config has {sorted(set(unsupported))}")
-        if caches is not None:
-            raise NotImplementedError("seq_parallel does not apply to decode")
-        if cfg.mtp:
-            raise NotImplementedError("seq_parallel + MTP head unsupported")
+    """Returns (hidden [b, s, h/d2], new_caches, aux_sum, x_emb0).
+
+    Per-segment execution (plan format_version 2): each segment runs under
+    ``ctx.for_segment(kind)`` — its own (chunks, boundary_mode,
+    seq_parallel) view of the shared mesh.  Kinds outside
+    ``SEQ_PARALLEL_KINDS`` have seq_parallel masked by the view, so a
+    dense-prefix + MoE stack runs its dense segments sequence-parallel
+    while the MoE segment stays on replicated full-sequence block I/O;
+    the loop inserts the conjugate seq scatter/gather at every domain
+    transition.
+    """
+    segs = segments(cfg)
+    seg_ctxs = tuple(ctx.for_segment(s.kind) for s in segs)
+    entry_sp = bool(seg_ctxs) and seg_ctxs[0].seq_parallel
+    if caches is not None and any(c.seq_parallel for c in seg_ctxs):
+        raise NotImplementedError("seq_parallel does not apply to decode")
+    # entry always uses the FIRST segment's (masked) view — the global
+    # knobs may request seq_parallel that the first segment's kind masks,
+    # and the scatter must follow the masked decision
+    entry_ctx = seg_ctxs[0] if seg_ctxs else ctx
     if embeds is not None:
         x = embeds
         x_emb0 = x
         # externally-supplied embeds are ax1-replicated: free local slice
-        x = seq_scatter(ctx, x, dim=1)
+        x = seq_scatter(entry_ctx, x, dim=1)
     else:
         # seq-parallel entry fuses the vocab-parallel psum(ax1) with the
         # seq slice into one psum_scatter (x_emb0 is then seq-sharded,
-        # fine: its consumers — zamba/MTP — are guarded off under sp)
-        x = embed_tokens(ctx, cfg, params["embed"], tokens,
-                         scatter_seq=ctx.seq_parallel)
+        # fine: its consumers — zamba/MTP — never run seq-parallel)
+        x = embed_tokens(entry_ctx, cfg, params["embed"], tokens,
+                         scatter_seq=entry_sp)
         x_emb0 = x
     aux_total = jnp.zeros((), jnp.float32)
     if cfg.moe is not None and ctx.dp_axes:
@@ -530,17 +514,29 @@ def forward(
     plan = (L.make_attn_plan(ctx, cfg.num_heads, cfg.num_kv_heads)
             if cfg.family != "ssm" else None)
 
-    for i, seg in enumerate(segments(cfg)):
+    cur_sp = entry_sp
+    last_sp_ctx = seg_ctxs[0] if entry_sp else None
+    for i, seg in enumerate(segs):
+        sctx = seg_ctxs[i]
+        # domain transition: the residual stream must enter each segment in
+        # that segment's block I/O spec
+        if sctx.seq_parallel and not cur_sp:
+            x = seq_scatter(sctx, x, dim=1)      # free slice (replicated in)
+        elif cur_sp and not sctx.seq_parallel:
+            x = seq_gather(last_sp_ctx, x, dim=1)  # conjugate all-gather
+        cur_sp = sctx.seq_parallel
+        if cur_sp:
+            last_sp_ctx = sctx
         sp = params[f"seg{i}"]
         seg_cache = caches.get(f"seg{i}") if caches is not None else None
 
         if seg.kind in ("dense", "moe", "mla_dense", "mla_moe", "mamba"):
             windows = _gemma_window_array(cfg, seg.count)
 
-            def body(carry, xs, _kind=seg.kind):
+            def body(carry, xs, _kind=seg.kind, _ctx=sctx):
                 h, aux = carry
                 bp, win, c = xs
-                h, nc, a = _apply_block(_kind, ctx, cfg, bp, h, positions,
+                h, nc, a = _apply_block(_kind, _ctx, cfg, bp, h, positions,
                                         plan, win, c)
                 return (h, aux + a), nc
 
@@ -553,7 +549,7 @@ def forward(
         elif seg.kind == "zamba":
             shared = params["shared_attn"]
 
-            def zbody(carry, xs):
+            def zbody(carry, xs, _ctx=sctx):
                 h, aux = carry
                 bp, c = xs
                 # shared attention block on (h, emb0): two column-first
@@ -561,19 +557,19 @@ def forward(
                 u = atp_boundary(
                     jnp.einsum("...k,kn->...n", h, shared["w_in_h"])
                     + jnp.einsum("...k,kn->...n", x_emb0, shared["w_in_e"]),
-                    ctx.ax2)                      # [.., h/d1] ax1-sharded
-                u = _gather_ax1_invariant(ctx, u)  # back to block I/O spec
-                if ctx.ax2 is not None:
-                    u = shard_slice(u, ctx.index2(), ctx.d2, dim=-1)
+                    _ctx.ax2)                      # [.., h/d1] ax1-sharded
+                u = _gather_ax1_invariant(_ctx, u)  # back to block I/O spec
+                if _ctx.ax2 is not None:
+                    u = shard_slice(u, _ctx.index2(), _ctx.d2, dim=-1)
                 ac = c["attn"] if c is not None else None
-                h2, nac = transformer.dense_block(ctx, cfg, shared["block"], h + u,
+                h2, nac = transformer.dense_block(_ctx, cfg, shared["block"], h + u,
                                                   positions, plan, cache=ac)
                 h = h2
 
                 def mbody(hc, xs2):
                     hh = hc
                     mp, mc = xs2
-                    hh, nmc = mamba2.mamba_block(ctx, cfg, mp, hh, state=mc)
+                    hh, nmc = mamba2.mamba_block(_ctx, cfg, mp, hh, state=mc)
                     return hh, nmc
 
                 mc = c["mamba"] if c is not None else None
@@ -587,19 +583,19 @@ def forward(
                 new_caches[f"seg{i}"] = ncs
 
         elif seg.kind == "xlstm":
-            def xbody(carry, xs):
+            def xbody(carry, xs, _ctx=sctx):
                 h, aux = carry
                 bp, c = xs
 
                 def mb(hc, xs2):
                     mp, mc = xs2
-                    hh, ns = xlstm.mlstm_block(ctx, cfg, mp, hc, state=mc)
+                    hh, ns = xlstm.mlstm_block(_ctx, cfg, mp, hc, state=mc)
                     return hh, ns
 
                 mc = c["mlstm"] if c is not None else None
                 h, nms = lax.scan(mb, h, (bp["mlstm"], mc))
                 sc = c["slstm"] if c is not None else None
-                h, nss = xlstm.slstm_block(ctx, cfg, bp["slstm"], h, state=sc)
+                h, nss = xlstm.slstm_block(_ctx, cfg, bp["slstm"], h, state=sc)
                 ncs = {"mlstm": nms, "slstm": nss} if c is not None else 0.0
                 return (h, aux), ncs
 
@@ -612,7 +608,8 @@ def forward(
 
     x = L.norm(ctx, cfg, x, params["final_norm"])
     # leave the sequence-parallel domain: heads/loss see the full sequence
-    x = seq_gather(ctx, x, dim=1)
+    if cur_sp:
+        x = seq_gather(last_sp_ctx, x, dim=1)
     return x, new_caches, aux_total, x_emb0
 
 
@@ -639,21 +636,25 @@ def train_loss(ctx: ATPContext, cfg: ModelConfig, params, batch, remat=True):
     loss = total / count
 
     if cfg.mtp and tokens is not None:
-        # multi-token prediction: predict t+2 from (h_t, emb(t+1))
+        # multi-token prediction: predict t+2 from (h_t, emb(t+1)).  h left
+        # the sequence-parallel domain at forward()'s exit gather, so the
+        # MTP head always runs on replicated full-sequence block I/O — use
+        # an sp-free context view regardless of the plan's segment knobs.
+        mctx = dataclasses.replace(ctx, seq_parallel=False, segment_plans=())
         mp = params["mtp"]
-        emb_next = embed_tokens(ctx, cfg, params["embed"],
+        emb_next = embed_tokens(mctx, cfg, params["embed"],
                                 jnp.roll(tokens, -1, axis=1))
         u = atp_boundary(
             jnp.einsum("...k,kn->...n", h, mp["proj_h"])
-            + jnp.einsum("...k,kn->...n", emb_next, mp["proj_e"]), ctx.ax2)
-        if ctx.ax1 is not None:  # back to [.., h/d2] block I/O spec
-            u = lax.all_gather(u, ctx.ax1, axis=-1, tiled=True)
-        u = shard_slice(u, ctx.index2(), ctx.d2, dim=-1) if ctx.ax2 is not None else u
-        plan = L.make_attn_plan(ctx, cfg.num_heads, cfg.num_kv_heads)
+            + jnp.einsum("...k,kn->...n", emb_next, mp["proj_e"]), mctx.ax2)
+        if mctx.ax1 is not None:  # back to [.., h/d2] block I/O spec
+            u = lax.all_gather(u, mctx.ax1, axis=-1, tiled=True)
+        u = shard_slice(u, mctx.index2(), mctx.d2, dim=-1) if mctx.ax2 is not None else u
+        plan = L.make_attn_plan(mctx, cfg.num_heads, cfg.num_kv_heads)
         u, _, _ = _apply_block("mla_dense" if cfg.mla else "dense",
-                               ctx, cfg, mp["block"], u, positions, plan, 0, None)
-        u = L.norm(ctx, cfg, u, mp["norm"])
-        logits2 = lm_logits(ctx, cfg, params, u)
+                               mctx, cfg, mp["block"], u, positions, plan, 0, None)
+        u = L.norm(mctx, cfg, u, mp["norm"])
+        logits2 = lm_logits(mctx, cfg, params, u)
         mtp_labels = jnp.roll(batch["labels"], -1, axis=1)
         l2 = jnp.sum(vocab_parallel_ce(ctx, logits2, mtp_labels))
         if ctx.dp_axes:

@@ -198,16 +198,31 @@ def test_seq_parallel_logits_bitwise_match(devices8, mode_kwargs):
         f"{np.abs(np.asarray(base) - np.asarray(got)).max()})"
 
 
-def test_seq_parallel_guards(devices8):
+def test_seq_parallel_gated_per_segment(devices8):
+    """The whole-network 'seq_parallel is dense-only' error became
+    per-segment gating: unsupported kinds mask the knob in their
+    ``for_segment`` view instead of failing the whole forward."""
     from repro.configs.registry import get_config
     from repro.models import lm
 
-    cfg = get_config("dbrx-132b").reduced()  # moe segments: unsupported
+    cfg = get_config("dbrx-132b").reduced()  # moe segments: sp masked
     topo = MeshTopo((("tp1", 2), ("tp2", 2)))
     ctx = make_context(topo, seq_parallel=True)
-    with pytest.raises(NotImplementedError):
-        lm.forward(ctx, cfg, {}, jnp.zeros((1, 8), jnp.int32),
-                   jnp.zeros((1, 8), jnp.int32))
+    (seg,) = lm.segments(cfg)
+    assert seg.kind == "moe"
+    assert ctx.for_segment("moe").seq_parallel is False
+    assert ctx.for_segment("dense").seq_parallel is True
+    # and decode still refuses an (explicitly forced) seq-parallel segment
+    import dataclasses as dc
+
+    from repro.core.atp import SegmentPlan
+
+    forced = dc.replace(ctx, segment_plans=(
+        SegmentPlan("dense", seq_parallel=True),))
+    with pytest.raises(NotImplementedError, match="decode"):
+        lm.forward(forced, get_config("qwen1.5-0.5b").reduced(), {},
+                   jnp.zeros((1, 8), jnp.int32),
+                   jnp.zeros((1, 8), jnp.int32), caches={})
 
 
 # ---------------------------------------------------------------------------
