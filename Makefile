@@ -3,8 +3,10 @@ XLA_DEVICES ?= 8
 
 # Tier-1 verify: the whole suite on a simulated multi-device host mesh,
 # then the plan-lifecycle smoke gate (search -> calibrate -> save -> load
-# -> execute must agree bit-for-bit) and the heterogeneous-segment gate
-# (per-segment knobs reach execution on a mixed dense+MoE stack).
+# -> execute must agree bit-for-bit), the heterogeneous-segment gate
+# (per-segment knobs reach execution on a mixed dense+MoE stack) and the
+# elastic-restart gate (failure -> shrink -> recalibrate -> re-search ->
+# resharded restore -> loss continuity).
 .PHONY: test
 test:
 	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
@@ -12,6 +14,7 @@ test:
 	$(PYTHON) -m pytest -x -q
 	$(MAKE) plan-smoke
 	$(MAKE) segment-smoke
+	$(MAKE) elastic-smoke
 
 .PHONY: plan-smoke
 plan-smoke:
@@ -24,6 +27,12 @@ segment-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 	$(PYTHON) -m repro.launch.segment_smoke
+
+.PHONY: elastic-smoke
+elastic-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	$(PYTHON) -m repro.launch.elastic_smoke
 
 .PHONY: bench-overlap
 bench-overlap:

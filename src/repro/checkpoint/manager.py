@@ -22,27 +22,67 @@ from typing import Any
 import jax
 import numpy as np
 
+#: restore() sharding-leaf sentinel: keep this leaf as host numpy.
+HOST = "host"
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
 
 
+def _resolve_dtype(name: str) -> np.dtype:
+    """Dtype from its recorded name, including extension dtypes numpy
+    cannot resolve by string (bfloat16, float8_* live in ml_dtypes)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def sweep_orphan_tmps(ckpt_dir: str) -> int:
+    """Remove ``.tmp_*`` staging dirs left by a crashed/killed ``save``.
+
+    A hard kill between ``mkdtemp`` and ``os.replace`` (or a raise the
+    except clause never sees, e.g. SIGKILL) orphans the staging dir; it is
+    invisible to ``restore``/``latest_step`` but otherwise lives forever.
+    The layout is single-writer (one trainer owns a ckpt_dir), so any
+    ``.tmp_*`` present when a *new* save or prune runs is, by definition,
+    dead.  Returns the number of dirs removed.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return 0
+    n = 0
+    for name in os.listdir(ckpt_dir):
+        if name.startswith(".tmp_"):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+            n += 1
+    return n
+
+
 def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None) -> str:
     """Atomically save a pytree of (global) arrays."""
     os.makedirs(ckpt_dir, exist_ok=True)
+    sweep_orphan_tmps(ckpt_dir)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
     leaves, treedef = _flatten(tree)
     try:
+        dtypes, shapes = [], []
         for i, leaf in enumerate(leaves):
             arr = np.asarray(jax.device_get(leaf))
+            dtypes.append(str(arr.dtype))
+            shapes.append(list(arr.shape))
             np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
         meta = {
             "step": step,
             "treedef": str(treedef),
             "num_leaves": len(leaves),
-            "shapes": [list(np.shape(jax.device_get(l))) for l in leaves],
+            "shapes": shapes,
+            # np.save writes extension dtypes (bfloat16, fp8) as raw void
+            # bytes; the recorded names let restore reinterpret them
+            "dtypes": dtypes,
             "extra": extra or {},
         }
         with open(os.path.join(tmp, "meta.json"), "w") as f:
@@ -75,7 +115,11 @@ def restore(ckpt_dir: str, template: Any, step: int | None = None,
 
     `shardings`: optional tree of jax.sharding.Sharding — arrays are placed
     with jax.device_put under the *current* mesh, which may differ from the
-    mesh at save time (elastic re-shard)."""
+    mesh at save time (elastic re-shard).  Leaves may be None (default
+    jnp placement for that leaf; kept positionally, not dropped) or the
+    `HOST` sentinel (the raw numpy array is returned untouched — for
+    consumers that post-process on the host, e.g. re-banking zero1 state,
+    and should not pay a device round trip)."""
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
@@ -85,14 +129,37 @@ def restore(ckpt_dir: str, template: Any, step: int | None = None,
     t_leaves, treedef = _flatten(template)
     assert meta["num_leaves"] == len(t_leaves), \
         f"leaf count mismatch: ckpt {meta['num_leaves']} vs template {len(t_leaves)}"
-    s_leaves = (jax.tree.leaves(shardings) if shardings is not None
-                else [None] * len(t_leaves))
+    if shardings is not None:
+        # is_leaf keeps per-leaf Nones aligned (jax.tree.leaves drops them)
+        s_leaves = jax.tree.flatten(
+            shardings, is_leaf=lambda x: x is None)[0]
+        assert len(s_leaves) == len(t_leaves), \
+            f"shardings tree has {len(s_leaves)} leaves, template {len(t_leaves)}"
+    else:
+        s_leaves = [None] * len(t_leaves)
+    saved_dtypes = meta.get("dtypes")
     out = []
     for i, (tmpl, shd) in enumerate(zip(t_leaves, s_leaves)):
         arr = np.load(os.path.join(d, f"arr_{i}.npy"))
         assert tuple(arr.shape) == tuple(np.shape(tmpl)), \
             f"leaf {i}: shape {arr.shape} != template {np.shape(tmpl)}"
-        if shd is not None:
+        if arr.dtype.kind == "V":
+            # an extension dtype came back as raw bytes — reinterpret with
+            # the recorded dtype (same bits; older ckpts without the
+            # record fall back to the template's dtype)
+            dt = (_resolve_dtype(saved_dtypes[i]) if saved_dtypes
+                  else np.dtype(tmpl.dtype))
+            assert arr.dtype.itemsize == dt.itemsize, \
+                f"leaf {i}: cannot reinterpret {arr.dtype} as {dt}"
+            arr = arr.view(dt)
+        # cast BEFORE placement in both branches: the on-disk npy dtype
+        # must not leak through device_put (a bf16 template would silently
+        # come back at the saved dtype on the sharded path)
+        if arr.dtype != tmpl.dtype:
+            arr = arr.astype(tmpl.dtype)
+        if isinstance(shd, str) and shd == HOST:
+            out.append(arr)
+        elif shd is not None:
             out.append(jax.device_put(arr, shd))
         else:
             out.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
@@ -102,6 +169,7 @@ def restore(ckpt_dir: str, template: Any, step: int | None = None,
 def prune(ckpt_dir: str, keep: int = 3):
     if not os.path.isdir(ckpt_dir):
         return
+    sweep_orphan_tmps(ckpt_dir)
     steps = sorted(
         int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
         if n.startswith("step_")

@@ -5,9 +5,11 @@
 # The strategy stack's public surface (docs/strategy.md):
 #   plan.ParallelPlan / plan.plan_search — the one serializable strategy
 #   calibrate.calibrate_mesh            — measured (B1,B2) + boundary mode
+#   calibrate.recalibrate_surviving     — fresh table on the surviving mesh
 #   atp.make_context(plan=...)          — plan -> execution context
 
 from repro.core.atp import SegmentPlan  # noqa: F401
-from repro.core.calibrate import CalibrationTable, calibrate_mesh  # noqa: F401
+from repro.core.calibrate import (CalibrationTable, calibrate_mesh,  # noqa: F401
+                                  recalibrate_surviving)
 from repro.core.plan import (ParallelPlan, plan_search,  # noqa: F401
                              replan_elastic)

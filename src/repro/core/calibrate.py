@@ -108,6 +108,32 @@ class CalibrationTable:
         e = self.get(d1, d2)
         return e.alpha_s if e is not None else None
 
+    def covers_tp(self, tp_degree: int) -> bool:
+        """True if any entry measures a factorization of ``tp_degree``.
+
+        Necessary (not sufficient) evidence of a surviving-mesh
+        recalibration: ``replan_elastic`` requires it together with the
+        provenance tag ``recalibrate_surviving`` writes, since an
+        external table may key several degrees without any having been
+        measured on this mesh.
+        """
+        return any(d1 * d2 == tp_degree for (d1, d2), _ in self.entries)
+
+    def merged(self, other: "CalibrationTable") -> "CalibrationTable":
+        """This table with ``other``'s entries layered on top.
+
+        ``other`` wins on key collisions — it is the *fresher* measurement
+        (the elastic recalibration path merges surviving-mesh numbers into
+        the carried table this way, keeping still-valid old keys around
+        for audit).
+        """
+        d = dict(self.entries)
+        d.update(dict(other.entries))
+        source = (other.source if other.source == self.source
+                  else f"{self.source}+{other.source}")
+        return CalibrationTable(entries=tuple(sorted(d.items())),
+                                source=source)
+
     def __len__(self) -> int:
         return len(self.entries)
 
@@ -167,7 +193,7 @@ def _time_fn(fn, *args, repeats: int = 3,
 
 
 def _measure_factorization(d1: int, d2: int, payload_bytes: int,
-                           repeats: int) -> CalibEntry:
+                           repeats: int, devices=None) -> CalibEntry:
     """All-reduce timing over each TP mesh dim + psum-vs-ring boundary."""
     import jax
     import jax.numpy as jnp
@@ -179,7 +205,8 @@ def _measure_factorization(d1: int, d2: int, payload_bytes: int,
     from repro.core.mesh import tp_axis_names
 
     topo = atp_topo(1, d1, d2)
-    mesh = topo.build(jax.devices()[: topo.size])
+    devices = devices if devices is not None else jax.devices()
+    mesh = topo.build(devices[: topo.size])
     ax1, ax2 = tp_axis_names(topo)
     elems = max(1, payload_bytes // 4)
 
@@ -229,6 +256,7 @@ def calibrate_mesh(
     payload_kb: int = 256,
     repeats: int = 3,
     measure: Callable[[int, int], CalibEntry] | None = None,
+    devices=None,
 ) -> CalibrationTable:
     """Measure (B1, B2) + boundary latency for every runnable (d1, d2).
 
@@ -239,10 +267,13 @@ def calibrate_mesh(
     partial; the search falls back to the analytic model for missing
     keys).  ``measure`` overrides the on-mesh micro-benchmark with an
     arbitrary (d1, d2) -> CalibEntry function (tests, simulators).
+    ``devices`` restricts the benchmark to a device subset (the elastic
+    recovery path passes the surviving pool; default: all attached).
     """
     import jax
 
-    ndev = len(jax.devices())
+    devices = devices if devices is not None else jax.devices()
+    ndev = len(devices)
     entries = []
     for d1, d2 in factorizations(tp_degree):
         if matrix is not None:
@@ -253,6 +284,75 @@ def calibrate_mesh(
         if measure is None and d1 * d2 > ndev:
             continue
         fn = measure or (lambda a, b: _measure_factorization(
-            a, b, payload_kb * 1024, repeats))
+            a, b, payload_kb * 1024, repeats, devices))
         entries.append(((d1, d2), fn(d1, d2)))
     return CalibrationTable(entries=tuple(entries), source="measured")
+
+
+# ---------------------------------------------------------------------------
+# Elastic recovery: recalibrate on the surviving mesh.
+# ---------------------------------------------------------------------------
+
+
+def surviving_tp(tp_degree: int, n_devices: int) -> int:
+    """The TP degree an elastic shrink keeps on ``n_devices``.
+
+    Mirrors ``plan.replan_elastic``: data-parallel replicas absorb device
+    loss first, so TP only halves when even dp=1 no longer fits.
+    """
+    if n_devices < 1:
+        raise ValueError("no surviving devices")
+    tp = tp_degree
+    while tp > n_devices:
+        tp //= 2
+    return tp
+
+
+def recalibrate_surviving(
+    plan,
+    devices=None,
+    *,
+    payload_kb: int = 256,
+    repeats: int = 3,
+    measure: Callable[[int, int], CalibEntry] | None = None,
+):
+    """Re-measure a plan's calibration on the surviving mesh (paper §5.3).
+
+    After an elastic shrink the carried table is tagged
+    ``calibration: stale`` — its (B1, B2)/alpha_s/boundary numbers were
+    measured on a mesh the job no longer runs on, and §5.3 is exactly the
+    story of how badly a mis-priced table can mis-rank strategies.  This
+    re-runs the micro-benchmarks for every factorization of the
+    *surviving* TP degree (``surviving_tp`` of the surviving pool), merges
+    the fresh entries into the carried table (fresh keys win; old keys
+    stay for audit), clears the stale tag and records the recalibration in
+    provenance.  The returned plan is ready for ``replan_elastic``: the
+    re-search ranks the surviving factorizations with fresh measurements
+    and — because the provenance records this pass for the surviving
+    degree (and the merged table covers its factorizations) — the
+    re-planned artifact is not re-tagged stale.
+
+    ``plan`` is any ParallelPlan-shaped object (duck-typed to avoid a
+    module cycle: plan.py imports this module).  ``measure`` injects the
+    per-factorization benchmark (tests, simulators); ``devices`` is the
+    surviving pool (default: all attached).
+    """
+    import jax
+
+    from repro.core import comm_matrix
+
+    devs = list(devices) if devices is not None else jax.devices()
+    tp = surviving_tp(plan.tp, len(devs))
+    matrix = None
+    if plan.topology is not None:
+        preset = comm_matrix.PRESETS.get(plan.topology)
+        matrix = preset() if preset is not None else None
+    fresh = calibrate_mesh(tp, matrix, payload_kb=payload_kb,
+                           repeats=repeats, measure=measure, devices=devs)
+    merged = fresh if plan.calibration is None \
+        else plan.calibration.merged(fresh)
+    prov = tuple(p for p in plan.provenance
+                 if p != ("calibration", "stale"))
+    prov += (("calibration",
+              f"recalibrated tp={tp} on {len(devs)} devices"),)
+    return plan.with_(calibration=merged, provenance=prov)

@@ -27,7 +27,7 @@ from typing import Mapping
 
 from repro.core import comm_matrix
 from repro.core.atp import SegmentPlan
-from repro.core.calibrate import CalibrationTable
+from repro.core.calibrate import CalibrationTable, surviving_tp
 from repro.core.comm_matrix import HierarchicalCommMatrix
 from repro.core.cost_model import (LayerCommProfile, OverlapStrategyCost,
                                    segment_workloads)
@@ -388,17 +388,27 @@ def replan_elastic(
     measurements may still cover surviving factorizations — but the plan
     is tagged ``calibration: stale`` (visible in ``describe()`` and via
     ``calibration_stale``), so a consumer knows the numbers predate the
-    resize and can re-run ``calibrate_mesh`` on the surviving mesh.
+    resize and can re-run ``calibrate_mesh`` on the surviving mesh.  A
+    plan whose provenance records a ``calibrate.recalibrate_surviving``
+    pass for the surviving degree (and whose table ``covers_tp`` it) is
+    not tagged: the re-search below then ranks with fresh measurements.
+    Key coverage alone is deliberately not trusted — an external table
+    may legitimately key several TP degrees without any of them having
+    been measured on *this* surviving mesh.
     """
     if n_devices < 1:
         raise ValueError("no surviving devices to re-plan onto")
-    tp = plan.tp
-    while tp > n_devices:
-        tp //= 2
+    tp = surviving_tp(plan.tp, n_devices)
     dp = max(1, min(plan.dp * plan.pods, n_devices // tp))
     tag = ("elastic", f"replanned {plan.devices}->{n_devices} devices")
-    # a carried table goes (or stays) stale when the TP degree changed
-    now_stale = plan.calibration is not None and (
+    # a carried table goes (or stays) stale when the TP degree changed,
+    # unless it has been recalibrated for the surviving degree
+    recalibrated = (
+        plan.calibration is not None and plan.calibration.covers_tp(tp)
+        and any(k == "calibration"
+                and v.startswith(f"recalibrated tp={tp} ")
+                for k, v in plan.provenance))
+    now_stale = plan.calibration is not None and not recalibrated and (
         tp != plan.tp or plan.calibration_stale)
     stale_tags = ((("calibration", "stale"),)
                   if now_stale and not plan.calibration_stale else ())
@@ -411,7 +421,12 @@ def replan_elastic(
             calibration=plan.calibration)
         best = res.best
         fresh_stale = ((("calibration", "stale"),) if now_stale else ())
-        return best.with_(provenance=best.provenance + (tag,) + fresh_stale)
+        # re-searched provenance is fresh; keep the audit trail of any
+        # recalibration tags the incoming plan carried
+        carried = tuple(p for p in plan.provenance
+                        if p[0] == "calibration" and p[1] != "stale")
+        return best.with_(
+            provenance=best.provenance + (tag,) + carried + fresh_stale)
     if tp == plan.tp:
         return plan.with_(dp=dp, pods=1,
                           provenance=plan.provenance + (tag,))

@@ -21,11 +21,11 @@ import logging
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import get_config
 from repro.core import comm_matrix
-from repro.core.calibrate import calibrate_mesh
+from repro.core.calibrate import calibrate_mesh, recalibrate_surviving
 from repro.core.cost_model import LayerCommProfile
 from repro.core.plan import ParallelPlan, plan_search, replan_elastic
 from repro.data.pipeline import DataConfig, TokenSource
@@ -68,6 +68,138 @@ def pick_plan(cfg, tp: int, seq: int, batch: int, topology: str = "v5e",
                            algo="rabenseifner", alpha_s=0.0)
     return plan_search(topology, tp, model=cfg, batch=batch, seq=seq,
                        dp=dp, calibration=calib)
+
+
+def make_elastic_trainer(cfg, plan: ParallelPlan, opt_cfg, trainer_cfg,
+                         source, *, batch: int, seq: int,
+                         devices_fn=None, recalibrate: bool = True,
+                         measure=None):
+    """Wire plan -> builders -> fault-tolerant Trainer, elastic end to end.
+
+    The recovery loop on a shrunken device pool is *complete* (the PR-2/3
+    deferral): (1) ``recalibrate_surviving`` re-measures (B1,B2)/alpha_s/
+    boundary latency for factorizations of the surviving TP degree and
+    merges them into the carried table, (2) ``replan_elastic`` re-searches
+    the surviving mesh ranking with those fresh numbers (the re-planned
+    artifact carries no ``calibration: stale`` tag), (3) the rebuilt step's
+    shardings are returned to the Trainer so the checkpoint restore lands
+    params/opt_state sharded on the new (d1, d2) mesh instead of
+    replicated on the default device.
+
+    ``devices_fn`` injects the device pool (tests/smokes shrink it to
+    simulate failures; default ``jax.devices``).  ``recalibrate=False``
+    skips the on-mesh micro-benchmarks (the re-search then ranks with the
+    stale-tagged table, the pre-PR-4 behavior).  ``measure`` forwards to
+    ``recalibrate_surviving`` (injectable benchmark for tests).
+
+    Returns ``(trainer, live)`` — ``live`` is the mutable holder the
+    closures read, so callers can observe the post-recovery plan/step/info.
+    """
+    devices_fn = devices_fn or jax.devices
+    topo = plan.topo()
+    devs = devices_fn()
+    assert topo.size <= len(devs), \
+        f"need {topo.size} devices, have {len(devs)}"
+    mesh = topo.build(devs)
+    step_fn, info = build_train_step(cfg, topo, opt_cfg, mesh=mesh, plan=plan)
+
+    # live holder so the elastic re-plan path can swap plan/step/shardings
+    # under the closures the Trainer holds
+    live = {"plan": plan, "step": step_fn, "info": info, "ctx": info.ctx}
+
+    def init_state():
+        inf, c = live["info"], live["ctx"]
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw.init_opt_state(params, inf.pspecs, c, opt_cfg.mode)
+        params = jax.device_put(params, inf.sharding(inf.pspecs))
+        opt = jax.device_put(opt, inf.sharding(inf.ospecs))
+        return params, opt
+
+    def put_batch(host_batch):
+        inf = live["info"]
+        return jax.device_put(
+            {k: jnp.asarray(v) for k, v in host_batch.items()},
+            inf.sharding(inf.bspecs))
+
+    def encode_ckpt(params, opt_state):
+        """Checkpoint tree: params as-is + the opt state in its
+        plan-independent param-shaped layout (zero1 banks unbanked), so
+        any restart can re-bank onto whatever plan survives."""
+        inf = live["info"]
+        return (params, adamw.unbank_opt_state(
+            params, opt_state, inf.pspecs, live["ctx"], opt_cfg.mode))
+
+    def decode_ckpt(tree):
+        params, canonical = tree
+        inf = live["info"]
+        opt = adamw.rebank_opt_state(params, canonical, inf.pspecs,
+                                     live["ctx"], opt_cfg.mode)
+        return params, jax.device_put(opt, inf.sharding(inf.ospecs))
+
+    def ckpt_template():
+        """Abstract shape/dtype view of the checkpoint tree (params +
+        canonical opt) — restore needs no materialized throwaway state."""
+        inf = live["info"]
+        params = jax.eval_shape(
+            lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+        canon = adamw.init_opt_state(params, inf.pspecs, live["ctx"],
+                                     "plain", abstract=True)
+        return (params, canon)
+
+    def restore_shardings():
+        """The *current* plan's shardings for the CHECKPOINTED tree —
+        every restore (resume at start, recovery) places params directly
+        onto the mesh the live step expects.  The canonical opt state
+        stays host-side (``ckpt.HOST``): decode_ckpt re-banks it on the
+        host anyway, and device-placing the param-shaped fp32 moments
+        first would be a wasted full round trip."""
+        from repro.checkpoint import manager as ckpt
+
+        inf = live["info"]
+        canon_specs = adamw.opt_state_specs(inf.pspecs, live["ctx"], "plain")
+        canon_host = jax.tree.map(lambda _: ckpt.HOST, canon_specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+        return (inf.sharding(inf.pspecs), canon_host)
+
+    def replan_step():
+        """Elastic restart: re-plan only if the device pool actually
+        changed.  A transient step failure on an intact mesh must NOT
+        change the strategy — the executed plan stays the artifact the
+        user saved.  'Intact' is membership, not a head-count: enough
+        spare devices with a dead one still in the live mesh would
+        otherwise hand back a step bound to the dead device forever."""
+        surviving = devices_fn()
+        alive = {d.id for d in surviving}
+        mesh_alive = all(d.id in alive
+                         for d in live["info"].mesh.devices.flat)
+        if mesh_alive and len(surviving) >= live["plan"].devices:
+            return live["step"], restore_shardings()
+        old = live["plan"]
+        if recalibrate:
+            old = recalibrate_surviving(old, devices=surviving,
+                                        measure=measure)
+            log.info("recalibrated on surviving mesh: %d entries (%s)",
+                     len(old.calibration), old.calibration.source)
+        new_plan = replan_elastic(old, len(surviving), model=cfg,
+                                  batch=batch, seq=seq)
+        log.info("elastic re-plan: %s -> %s",
+                 live["plan"].describe(), new_plan.describe())
+        new_topo = new_plan.topo()
+        new_mesh = new_topo.build(surviving)
+        new_step, new_info = build_train_step(cfg, new_topo, opt_cfg=opt_cfg,
+                                              mesh=new_mesh, plan=new_plan)
+        live.update(plan=new_plan, step=new_step, info=new_info,
+                    ctx=new_info.ctx)
+        return new_step, restore_shardings()
+
+    trainer = Trainer(
+        trainer_cfg,
+        build_step=lambda: live["step"],
+        source=source, init_state=init_state, put_batch=put_batch,
+        replan=replan_step, restore_shardings=restore_shardings,
+        encode_ckpt=encode_ckpt, decode_ckpt=decode_ckpt,
+        ckpt_template=ckpt_template)
+    return trainer, live
 
 
 def main():
@@ -129,62 +261,15 @@ def main():
         plan.save(args.save_plan)
         log.info("saved plan -> %s", args.save_plan)
 
-    topo = plan.topo()
-    assert topo.size <= len(jax.devices()), \
-        f"need {topo.size} devices, have {len(jax.devices())}"
-    mesh = topo.build()
-    ctx = plan.context(topo)
-
     opt_cfg = adamw.AdamWConfig(lr=args.lr, mode=args.opt_mode,
                                 total_steps=args.steps)
-    step_fn, info = build_train_step(cfg, topo, opt_cfg, mesh=mesh, plan=plan)
-
     source = TokenSource(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch))
-
-    # live holder so the elastic re-plan path can swap plan/step/shardings
-    # under the closures the Trainer holds
-    live = {"plan": plan, "step": step_fn, "info": info, "ctx": ctx}
-
-    def init_state():
-        inf, c = live["info"], live["ctx"]
-        params = lm.init_params(cfg, jax.random.PRNGKey(0))
-        opt = adamw.init_opt_state(params, inf.pspecs, c, args.opt_mode)
-        params = jax.device_put(params, inf.sharding(inf.pspecs))
-        opt = jax.device_put(opt, inf.sharding(inf.ospecs))
-        return params, opt
-
-    def put_batch(host_batch):
-        inf = live["info"]
-        return jax.device_put(
-            {k: jnp.asarray(v) for k, v in host_batch.items()},
-            inf.sharding(inf.bspecs))
-
-    def replan_step():
-        """Elastic restart: re-plan only if the device pool actually shrank.
-
-        A transient step failure on an intact mesh must NOT change the
-        strategy — the executed plan stays the artifact the user saved."""
-        surviving = len(jax.devices())
-        if surviving >= live["plan"].devices:
-            return live["step"]
-        new_plan = replan_elastic(
-            live["plan"], surviving, model=cfg,
-            batch=args.batch, seq=args.seq)
-        log.info("elastic re-plan: %s -> %s",
-                 live["plan"].describe(), new_plan.describe())
-        new_step, new_info = build_train_step(cfg, opt_cfg=opt_cfg,
-                                              plan=new_plan)
-        live.update(plan=new_plan, step=new_step, info=new_info,
-                    ctx=new_info.ctx)
-        return new_step
-
-    trainer = Trainer(
+    trainer, live = make_elastic_trainer(
+        cfg, plan, opt_cfg,
         TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                       ckpt_every=args.ckpt_every),
-        build_step=lambda: live["step"],
-        source=source, init_state=init_state, put_batch=put_batch,
-        replan=replan_step)
+        source, batch=args.batch, seq=args.seq)
     params, _ = trainer.run()
     losses = [h["loss"] for h in trainer.history]
     log.info("done: first loss %.4f -> last loss %.4f (%d steps)",

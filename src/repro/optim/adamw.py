@@ -78,17 +78,30 @@ def _shard_factor(spec, ctx: ATPContext) -> int:
     return f
 
 
+def zero1_banked(mode: str, ctx: ATPContext) -> bool:
+    """True when the zero1 banked [DP, TPs, k] state layout is in effect.
+
+    Must agree with ``apply_adamw``'s dispatch: with no data-parallel axis
+    the zero1 step degenerates to full-state AdamW, so the state must
+    mirror the params there (banking it was a latent recovery-path bug —
+    an elastic shrink to dp=1 handed banked state to the full-state path).
+    """
+    return mode == "zero1" and bool(ctx.dp_axes)
+
+
 def init_opt_state(params, param_specs_tree, ctx: ATPContext,
                    mode: str = "zero1", abstract: bool = False):
     """fp32 m/v per leaf (GLOBAL arrays).
 
-    plain/compressed: m/v mirror the param shape and sharding.
+    plain/compressed (and zero1 at dp=1): m/v mirror the param shape and
+    sharding.
     zero1: banked [DP, TPs, k] with k = ceil(local_param_size / DP); each
     (dp, tp) rank owns one bank — 1/DP of the fp32 state per rank.  The
     bank's TP dim only spans axes the param is sharded over, so banks of
     TP-replicated leaves stay provably replicated (vma invariance).
     """
     dp = ctx.dp
+    banked = zero1_banked(mode, ctx)
 
     def mk(shape, dt):
         if abstract:
@@ -96,7 +109,7 @@ def init_opt_state(params, param_specs_tree, ctx: ATPContext,
         return jnp.zeros(shape, dt)
 
     def leaf_state(x, spec):
-        if mode != "zero1":
+        if not banked:
             return {"m": mk(x.shape, jnp.float32), "v": mk(x.shape, jnp.float32)}
         axes = _tp_axes_in_spec(spec, ctx)
         tpn = math.prod(ctx.topo.axis_size(a) for a in axes) if axes else 1
@@ -112,9 +125,10 @@ def init_opt_state(params, param_specs_tree, ctx: ATPContext,
 def opt_state_specs(param_specs_tree, ctx: ATPContext, mode: str = "zero1"):
     from jax.sharding import PartitionSpec as P
     dp_t = tuple(ctx.dp_axes) or None
+    banked = zero1_banked(mode, ctx)
 
     def leaf_spec(spec):
-        if mode != "zero1":
+        if not banked:
             return {"m": spec, "v": spec}
         axes = _tp_axes_in_spec(spec, ctx)
         s = P(dp_t, axes if axes else None, None)
@@ -123,6 +137,135 @@ def opt_state_specs(param_specs_tree, ctx: ATPContext, mode: str = "zero1"):
     return {"step": P(),
             "leaves": jax.tree.map(leaf_spec, param_specs_tree,
                                    is_leaf=lambda x: isinstance(x, P))}
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint layout: the banked zero1 state is a *plan-dependent* runtime
+# layout ([DP, TPs, k] depends on (d1, d2, dp)), so a checkpoint written in
+# it cannot be restored under a different mesh.  unbank/rebank convert to
+# and from the plan-independent param-shaped ("plain") layout on the host;
+# the trainer checkpoints canonically and re-banks onto whatever plan is
+# live at restore time (elastic reshard across a (d1, d2, dp) change).
+# ---------------------------------------------------------------------------
+
+
+def _tp_coord_of(j: int, axes, sizes) -> dict:
+    """Bank index -> mesh coordinate.  The bank's TP dim is sharded
+    P(..., axes, ...) with ``axes`` in (ax1, ax2) order, so j is row-major
+    over them (first axis most significant)."""
+    coord = {}
+    for a, s in zip(reversed(axes), reversed(sizes)):
+        coord[a] = j % s
+        j //= s
+    return coord
+
+
+def _tp_block_slices(shape, spec, ctx: ATPContext, coord: dict):
+    """The slices of the GLOBAL leaf owned by mesh coordinate ``coord``.
+
+    A dim sharded over an axis tuple splits row-major in the tuple's own
+    order (jax semantics), which need not match the bank's (ax1, ax2)
+    order — hence the per-dim relinearization."""
+    slices = []
+    for d, size in enumerate(shape):
+        entry = spec[d] if d < len(spec) else None
+        names = entry if isinstance(entry, tuple) else \
+            ((entry,) if entry is not None else ())
+        names = [nm for nm in names if nm in coord]
+        n, b = 1, 0
+        for nm in names:
+            s = ctx.topo.axis_size(nm)
+            n *= s
+            b = b * s + coord[nm]
+        loc = size // n
+        slices.append(slice(b * loc, (b + 1) * loc))
+    return tuple(slices)
+
+
+def unbank_opt_state(params, opt_state, param_specs_tree, ctx: ATPContext,
+                     mode: str = "zero1"):
+    """GLOBAL banked zero1 state -> param-shaped fp32 m/v (host numpy).
+
+    Identity for layouts that already mirror the params (plain,
+    compressed, zero1 at dp=1).  Bank [i, j, :] holds dp-rank i's slice of
+    TP-shard j's padded flat moments; the pad region is provably zero
+    (zero grads never move it), so unbank -> rebank round-trips exactly.
+    """
+    import numpy as np
+
+    if not zero1_banked(mode, ctx):
+        return opt_state
+
+    def unbank_leaf(p, spec, st):
+        axes = _tp_axes_in_spec(spec, ctx)
+        sizes = [ctx.topo.axis_size(a) for a in axes]
+        shape = tuple(np.shape(p))
+
+        def one(banked):
+            banked = np.asarray(jax.device_get(banked))
+            dpn, tpn, k = banked.shape
+            out = np.zeros(shape, np.float32)
+            for j in range(tpn):
+                sl = _tp_block_slices(shape, spec, ctx,
+                                      _tp_coord_of(j, axes, sizes))
+                block = out[sl]
+                flat = banked[:, j, :].reshape(dpn * k)[: block.size]
+                out[sl] = flat.reshape(block.shape)
+            return out
+
+        return {"m": one(st["m"]), "v": one(st["v"])}
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_spec = tdef.flatten_up_to(param_specs_tree)
+    flat_st = tdef.flatten_up_to(opt_state["leaves"])
+    leaves = [unbank_leaf(p, s, st)
+              for p, s, st in zip(flat_p, flat_spec, flat_st)]
+    return {"step": opt_state["step"],
+            "leaves": jax.tree.unflatten(tdef, leaves)}
+
+
+def rebank_opt_state(params, canonical, param_specs_tree, ctx: ATPContext,
+                     mode: str = "zero1"):
+    """Param-shaped fp32 m/v -> the banked layout ``ctx``/``mode`` run
+    under (host numpy; inverse of ``unbank_opt_state`` for the same plan,
+    and the reshard path onto a *different* plan after an elastic resize).
+    Identity when the runtime layout already mirrors the params."""
+    import numpy as np
+
+    if not zero1_banked(mode, ctx):
+        return canonical
+    dp = ctx.dp
+
+    def rebank_leaf(p, spec, st):
+        axes = _tp_axes_in_spec(spec, ctx)
+        sizes = [ctx.topo.axis_size(a) for a in axes]
+        tpn = math.prod(sizes) if sizes else 1
+        shape = tuple(np.shape(p))
+        local = int(np.prod(shape, dtype=np.int64)) // \
+            (math.prod(sizes) if sizes else 1)
+        k = math.ceil(local / dp)
+
+        def one(canon):
+            canon = np.asarray(jax.device_get(canon), np.float32)
+            banked = np.zeros((dp, tpn, k), np.float32)
+            for j in range(tpn):
+                sl = _tp_block_slices(shape, spec, ctx,
+                                      _tp_coord_of(j, axes, sizes))
+                flat = canon[sl].reshape(-1)
+                padded = np.zeros(dp * k, np.float32)
+                padded[: flat.size] = flat
+                banked[:, j, :] = padded.reshape(dp, k)
+            return banked
+
+        return {"m": one(st["m"]), "v": one(st["v"])}
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_spec = tdef.flatten_up_to(param_specs_tree)
+    flat_st = tdef.flatten_up_to(canonical["leaves"])
+    leaves = [rebank_leaf(p, s, st)
+              for p, s, st in zip(flat_p, flat_spec, flat_st)]
+    return {"step": canonical["step"],
+            "leaves": jax.tree.unflatten(tdef, leaves)}
 
 
 def replication_factors(param_specs_tree, ctx: ATPContext):

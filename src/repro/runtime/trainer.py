@@ -60,6 +60,16 @@ class StragglerWatchdog:
             self.ema = self.beta * self.ema + (1 - self.beta) * dt
         return flagged
 
+    def reset(self):
+        """Forget the EMA (keep the event log).
+
+        Must be called when the per-step cost legitimately changes — e.g.
+        an elastic re-plan onto a smaller/slower surviving mesh — or every
+        first step on the new mesh is falsely flagged against the old
+        mesh's EMA (and, flagged or not, the old EMA skews forever).
+        """
+        self.ema = None
+
 
 class Trainer:
     def __init__(
@@ -71,7 +81,11 @@ class Trainer:
         put_batch: Callable[[dict], Any],    # host batch -> device arrays
         mitigation_hook: Callable[[int], None] | None = None,
         time_fn: Callable[[], float] = time.monotonic,
-        replan: Callable[[], Callable] | None = None,
+        replan: Callable[[], Any] | None = None,
+        restore_shardings: Callable[[], Any] | None = None,
+        encode_ckpt: Callable[[Any, Any], Any] | None = None,
+        decode_ckpt: Callable[[Any], tuple[Any, Any]] | None = None,
+        ckpt_template: Callable[[], Any] | None = None,
     ):
         self.cfg = cfg
         self.build_step = build_step
@@ -84,20 +98,49 @@ class Trainer:
         # elastic recovery: re-derive the ParallelPlan on the surviving mesh
         # and return a fresh step built from it (launch.train wires
         # plan.replan_elastic here); None keeps the rebuild-same-plan path.
+        # The hook may return either a step, or (step, restore_shardings):
+        # the sharding tree places the restored checkpoint directly onto
+        # the re-planned mesh instead of replicated on the default device.
         self.replan = replan
-        self.failures = 0
+        # current-plan sharding provider for every checkpoint restore
+        # (resume-at-start included) — a zero-arg callable returning the
+        # sharding tree of the CHECKPOINTED (encoded) state, or None for
+        # host placement.
+        self.restore_shardings = restore_shardings
+        # state <-> checkpoint-tree codec.  encode maps (params, opt) to
+        # the tree written to disk; decode inverts it after restore.
+        # launch.train uses these to checkpoint the zero1 optimizer state
+        # in its plan-independent param-shaped layout, so a restart can
+        # re-bank it onto ANY surviving (d1, d2, dp) — without a codec the
+        # raw (plan-dependent) state is written as-is.
+        self.encode_ckpt = encode_ckpt or (lambda params, opt: (params, opt))
+        self.decode_ckpt = decode_ckpt or (lambda tree: tree)
+        # optional abstract (shape/dtype-only) view of the encoded tree:
+        # restore only reads shapes and dtypes from its template, so this
+        # avoids materializing (and device-placing) throwaway state on
+        # every restore.  Fallback: encode a real init_state().
+        self.ckpt_template = ckpt_template
+        self.failures = 0        # consecutive: decays once recovery sticks
+        self.total_failures = 0  # lifetime count (reporting only)
         self.replans: list[int] = []  # steps at which a re-plan happened
         self.history: list[dict] = []
+        self._recovering = False
 
-    def _restore_or_init(self):
+    def _restore_or_init(self, shardings=None):
         step = ckpt.latest_step(self.cfg.ckpt_dir)
-        params, opt_state = self.init_state()
-        if step is not None:
-            (params, opt_state), meta = ckpt.restore(
-                self.cfg.ckpt_dir, (params, opt_state))
-            log.info("restored checkpoint at step %d", meta["step"])
-            return params, opt_state, meta["step"]
-        return params, opt_state, 0
+        if step is None:
+            params, opt_state = self.init_state()
+            return params, opt_state, 0
+        template = (self.ckpt_template() if self.ckpt_template is not None
+                    else self.encode_ckpt(*self.init_state()))
+        if shardings is None and self.restore_shardings is not None:
+            shardings = self.restore_shardings()
+        tree, meta = ckpt.restore(self.cfg.ckpt_dir, template,
+                                  shardings=shardings)
+        params, opt_state = self.decode_ckpt(tree)
+        log.info("restored checkpoint at step %d%s", meta["step"],
+                 " (resharded)" if shardings is not None else "")
+        return params, opt_state, meta["step"]
 
     def run(self, fail_injector: Callable[[int], None] | None = None):
         train_step = self.build_step()
@@ -117,25 +160,49 @@ class Trainer:
                                 step, dt, self.watchdog.ema)
                     self.mitigation_hook(step)
                 self.history.append({"step": step, "loss": loss, "dt": dt})
+                if self._recovering:
+                    # a post-recovery step committed: the fault was
+                    # transient, so the consecutive-failure budget resets
+                    # (a long run with sporadic recovered faults must not
+                    # eventually trip max_failures)
+                    self._recovering = False
+                    self.failures = 0
                 if step % self.cfg.log_every == 0:
                     log.info("step %d loss %.4f (%.3fs)", step, loss, dt)
                 step += 1
                 if step % self.cfg.ckpt_every == 0 or step == self.cfg.total_steps:
-                    ckpt.save(self.cfg.ckpt_dir, step, (params, opt_state))
+                    ckpt.save(self.cfg.ckpt_dir, step,
+                              self.encode_ckpt(params, opt_state))
                     ckpt.prune(self.cfg.ckpt_dir, self.cfg.keep_ckpts)
             except (RuntimeError, jax.errors.JaxRuntimeError) as e:
                 self.failures += 1
+                self.total_failures += 1
                 log.error("step %d failed (%s); recovering (%d/%d)",
                           step, e, self.failures, self.cfg.max_failures)
                 if self.failures > self.cfg.max_failures:
                     raise
                 # full recovery path: rebuild step (fresh executables /
-                # possibly a new mesh) + restore last committed state
+                # possibly a new mesh) + restore last committed state,
+                # resharded onto whatever mesh the step now targets
+                shardings = None
                 if self.replan is not None:
-                    train_step = self.replan()
-                    self.replans.append(step)
-                    log.info("elastic re-plan applied at step %d", step)
+                    out = self.replan()
+                    new_step, shardings = (
+                        out if isinstance(out, tuple) else (out, None))
+                    if new_step is not train_step:
+                        # an actual re-plan (the hook returns the live step
+                        # unchanged for a transient fault on an intact
+                        # mesh — that must not count as one)
+                        self.replans.append(step)
+                        # the surviving mesh's step cost is a new
+                        # distribution; judging it against the old mesh's
+                        # EMA would flag every first step (and skew the
+                        # EMA permanently)
+                        self.watchdog.reset()
+                        log.info("elastic re-plan applied at step %d", step)
+                    train_step = new_step
                 else:
                     train_step = self.build_step()
-                params, opt_state, step = self._restore_or_init()
+                self._recovering = True
+                params, opt_state, step = self._restore_or_init(shardings)
         return params, opt_state
