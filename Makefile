@@ -4,9 +4,10 @@ XLA_DEVICES ?= 8
 # Tier-1 verify: the whole suite on a simulated multi-device host mesh,
 # then the plan-lifecycle smoke gate (search -> calibrate -> save -> load
 # -> execute must agree bit-for-bit), the heterogeneous-segment gate
-# (per-segment knobs reach execution on a mixed dense+MoE stack) and the
+# (per-segment knobs reach execution on a mixed dense+MoE stack), the
 # elastic-restart gate (failure -> shrink -> recalibrate -> re-search ->
-# resharded restore -> loss continuity).
+# resharded restore -> loss continuity) and the serving gate (decode-
+# searched plan -> paged continuous batching -> wave-loop token parity).
 .PHONY: test
 test:
 	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
@@ -15,6 +16,7 @@ test:
 	$(MAKE) plan-smoke
 	$(MAKE) segment-smoke
 	$(MAKE) elastic-smoke
+	$(MAKE) serve-smoke
 
 .PHONY: plan-smoke
 plan-smoke:
@@ -33,6 +35,18 @@ elastic-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 	$(PYTHON) -m repro.launch.elastic_smoke
+
+.PHONY: serve-smoke
+serve-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	$(PYTHON) -m repro.launch.serve_smoke
+
+.PHONY: bench-serve
+bench-serve:
+	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	$(PYTHON) -m benchmarks.serve_bench
 
 .PHONY: bench-overlap
 bench-overlap:

@@ -1,0 +1,284 @@
+"""Serving fast-path benchmark: paged continuous batching vs the seed
+wave loop on a mixed-prompt-length workload.  Writes BENCH_serve.json.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench
+
+Measured side (CPU host mesh — numbers validate the scheduling win, not
+accelerator speedups):
+  - the seed-style wave loop: equal-length waves, every prompt padded to
+    the longest, one whole-prompt prefill per admission, lockstep decode
+    over dense ``[B, s_max]`` caches;
+  - the paged continuous server: chunk-rounded prefill interleaved with
+    per-slot decode over block-paged caches.
+Both must emit IDENTICAL greedy tokens per request; tokens/sec, per-tick
+wall times and cache-memory footprints are recorded.
+
+Modeled side (the latency-aware decode objective): per-(d1, d2) decode
+step latency rankings on the pinned interconnect presets, asserting that
+the decode objective picks a different factorization than the train
+objective on at least one preset (ic4 — the acceptance pin).
+"""
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+SLOTS = 4
+MAX_NEW = 8
+MAX_SEQ = 64
+CHUNK = 8
+PAGE = 8
+#: mixed prompt lengths — short prompts dominate, exactly the workload
+#: the seed wave loop pads to the longest prompt
+PROMPT_LENS = [6, 22, 9, 48, 12, 7, 30, 10, 5, 17]
+
+
+def _setup():
+    import jax
+    import numpy as np
+
+    from repro.configs.registry import get_config
+    from repro.models import lm
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in PROMPT_LENS]
+    return cfg, params, prompts
+
+
+def run_wave(cfg, params, prompts) -> dict:
+    """Seed wave loop: pad everything to the longest prompt, serve in
+    equal-length waves of SLOTS, decode in lockstep to MAX_NEW."""
+    import numpy as np
+
+    from repro.core.mesh import atp_topo
+    from repro.launch.serve import serve
+
+    topo = atp_topo(1, 1, 1)
+    pad_to = max(len(p) for p in prompts)
+    padded = []
+    for p in prompts:
+        buf = np.zeros((pad_to,), np.int32)
+        buf[: len(p)] = p
+        padded.append(buf)
+
+    # warm-up wave compiles prefill + decode
+    serve(cfg, topo, params, padded[:SLOTS], MAX_NEW, MAX_SEQ)
+    t0 = time.perf_counter()
+    outs = []
+    pending = list(padded)
+    waves = 0
+    while pending:
+        batch = pending[:SLOTS]
+        pending = pending[SLOTS:]
+        n_real = len(batch)
+        while len(batch) < SLOTS:
+            batch.append(np.zeros(pad_to, np.int32))
+        res = serve(cfg, topo, params, batch, MAX_NEW, MAX_SEQ)
+        outs.extend(res[i].tolist() for i in range(n_real))
+        waves += 1
+    wall = time.perf_counter() - t0
+    # NOTE: wave parity caveat — prompts shorter than pad_to see padding
+    # zeros inside their sequence, so per-request token parity uses the
+    # per-request wave reference below, not these padded outputs.
+    new_tokens = MAX_NEW * len(prompts)
+    return {
+        "mode": "wave",
+        "waves": waves,
+        "pad_to": pad_to,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(new_tokens / wall, 2),
+        "cache_bytes": _dense_cache_bytes(cfg, SLOTS, MAX_SEQ),
+        "outs": outs,
+    }
+
+
+def run_reference(cfg, params, prompts) -> list[list[int]]:
+    """Per-request B=1 wave runs: the unpadded greedy ground truth."""
+    from repro.core.mesh import atp_topo
+    from repro.launch.serve import serve
+
+    topo = atp_topo(1, 1, 1)
+    return [serve(cfg, topo, params, [p], MAX_NEW, MAX_SEQ)[0].tolist()
+            for p in prompts]
+
+
+def run_paged(cfg, params, prompts) -> dict:
+    import numpy as np
+
+    from repro.core.mesh import atp_topo
+    from repro.launch.serve import make_paged_server
+    from repro.models.paging import PagedConfig
+    from repro.runtime.server import Request, ServerConfig
+
+    # pool sized to the worst-case LIVE tokens: the SLOTS largest requests
+    # resident simultaneously (admission backpressure covers transients).
+    # This is the paged win: the dense cache pays slots x s_max regardless.
+    per_req = sorted((-(-(len(p) + MAX_NEW) // PAGE) for p in prompts),
+                     reverse=True)
+    pool = 1 + sum(per_req[:SLOTS])
+    pcfg = PagedConfig(page_size=PAGE, num_pages=pool,
+                       pages_per_slot=-(-MAX_SEQ // PAGE))
+    scfg = ServerConfig(batch_slots=SLOTS, prefill_chunk=CHUNK, paged=pcfg)
+    topo = atp_topo(1, 1, 1)
+
+    def fresh():
+        server, _ = make_paged_server(cfg, scfg, params, topo=topo)
+        for rid, p in enumerate(prompts):
+            server.submit(Request(rid=rid, prompt=p, max_new=MAX_NEW))
+        return server
+
+    # warm-up run compiles the two step shapes
+    fresh().run_until_drained()
+
+    server = fresh()
+    tick_times = []
+    t0 = time.perf_counter()
+    while server.busy:
+        ts = time.perf_counter()
+        server.step()
+        tick_times.append(time.perf_counter() - ts)
+    wall = time.perf_counter() - t0
+    outs = [r.out for r in sorted(server.completed, key=lambda r: r.rid)]
+    new_tokens = MAX_NEW * len(prompts)
+    tick_ms = sorted(t * 1e3 for t in tick_times)
+    return {
+        "mode": "paged-continuous",
+        "ticks": len(tick_times),
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(new_tokens / wall, 2),
+        "tick_ms": {
+            "mean": round(sum(tick_ms) / len(tick_ms), 3),
+            "p50": round(tick_ms[len(tick_ms) // 2], 3),
+            "max": round(tick_ms[-1], 3),
+        },
+        "cache_bytes": _paged_cache_bytes(cfg, pcfg),
+        "page_pool": {"pages": pool, "page_size": PAGE,
+                      "capacity_tokens": pcfg.capacity_tokens},
+        "outs": outs,
+    }
+
+
+def _dense_cache_bytes(cfg, B, s_max) -> int:
+    import jax
+
+    from repro.core.atp import make_context
+    from repro.core.mesh import MeshTopo
+    from repro.models import lm
+
+    ctx = make_context(MeshTopo((("data", 1),)))
+    caches, _ = lm.init_decode_caches(cfg, ctx, B, s_max, abstract=True)
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches)))
+
+
+def _paged_cache_bytes(cfg, pcfg) -> int:
+    import jax
+
+    from repro.core.atp import make_context
+    from repro.core.mesh import MeshTopo
+    from repro.models import lm
+
+    ctx = make_context(MeshTopo((("data", 1),)))
+    caches, _ = lm.init_paged_caches(cfg, ctx, pcfg, abstract=True)
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches)))
+
+
+def modeled_decode_rankings() -> dict:
+    """Decode-vs-train objective rankings per preset (pure cost model)."""
+    from repro.core import comm_matrix as cm
+    from repro.core.cost_model import LayerCommProfile, SegmentWorkload
+    from repro.core.search import (search_strategy_decode,
+                                   search_strategy_segments)
+
+    workloads = (SegmentWorkload("dense", 24, LayerCommProfile.gpt(4096)),)
+    out = {}
+    for preset in ("ic1", "ic2", "ic3", "ic4", "ic6"):
+        m = cm.PRESETS[preset]()
+        tp = min(16, m.num_devices)
+        dec = search_strategy_decode(m, tp, workloads=workloads, batch=SLOTS)
+        tr = search_strategy_segments(m, tp, workloads=workloads,
+                                      batch=256, seq=4096)
+        out[preset] = {
+            "tp": tp,
+            "train_mesh": list(tr.mesh()),
+            "decode_mesh": list(dec.mesh()),
+            "decode_boundary_mode": dec.best.boundary_mode,
+            "decode_differs": list(tr.mesh()) != list(dec.mesh()),
+            "decode_ranking": [
+                {"d1": c.d1, "d2": c.d2, "t_step_us": round(c.t_step * 1e6, 2),
+                 "t_launch_us": round(c.t_launch * 1e6, 2),
+                 "t_alpha_us": round(c.t_alpha * 1e6, 2),
+                 "t_bytes_us": round(c.t_bytes * 1e6, 2)}
+                for c in dec.ranked],
+        }
+    return out
+
+
+def main() -> None:
+    cfg, params, prompts = _setup()
+
+    wave = run_wave(cfg, params, prompts)
+    paged = run_paged(cfg, params, prompts)
+    ref = run_reference(cfg, params, prompts)
+
+    # greedy-token parity: the paged continuous server must reproduce the
+    # per-request unpadded reference exactly
+    assert paged["outs"] == ref, (
+        f"paged tokens diverge from reference:\n{paged['outs']}\nvs\n{ref}")
+    full = [i for i, p in enumerate(prompts)
+            if len(p) == wave["pad_to"]]
+    assert all(wave["outs"][i] == ref[i] for i in full), \
+        "wave loop diverges from reference on unpadded prompts"
+
+    speedup = wave["wall_s"] / paged["wall_s"]
+    rankings = modeled_decode_rankings()
+    differs = [p for p, r in rankings.items() if r["decode_differs"]]
+
+    summary = {
+        "workload": {"requests": len(prompts), "prompt_lens": PROMPT_LENS,
+                     "max_new": MAX_NEW, "slots": SLOTS,
+                     "prefill_chunk": CHUNK},
+        "wave_tokens_per_s": wave["tokens_per_s"],
+        "paged_tokens_per_s": paged["tokens_per_s"],
+        "paged_speedup_x": round(speedup, 3),
+        "token_parity": True,
+        "dense_cache_bytes": wave["cache_bytes"],
+        "paged_cache_bytes": paged["cache_bytes"],
+        "cache_bytes_ratio": round(wave["cache_bytes"]
+                                   / paged["cache_bytes"], 3),
+        "decode_objective_differs_on": differs,
+    }
+    assert speedup > 1.0, (
+        f"paged continuous batching must beat the wave loop: {speedup:.3f}x")
+    assert summary["cache_bytes_ratio"] > 1.0, (
+        "live-token page pool must undercut the dense slots x s_max cache")
+    assert "ic4" in differs, (
+        "decode objective must differ from train on the pinned ic4 preset")
+
+    for r in (wave, paged):
+        r.pop("outs")  # tokens verified above; keep the artifact small
+    payload = {
+        "bench": "serve",
+        "arch": "qwen1.5-0.5b (reduced)",
+        "wave": wave,
+        "paged": paged,
+        "modeled_decode": rankings,
+        "summary": summary,
+    }
+    with open(OUT_PATH, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"summary: {json.dumps(summary)}")
+    print(f"wrote {os.path.abspath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

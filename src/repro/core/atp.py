@@ -121,6 +121,67 @@ class SegmentPlan:
                            seq_parallel=bool(d.get("seq_parallel", False)))
 
 
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    """Decode-time (serving) knobs of a ParallelPlan (format_version 3).
+
+    Decode boundary all-reduces move ``[B, 1, h]`` activations — latency-
+    bound, not bandwidth-bound — so the serve objective
+    (``core.search.search_strategy_decode``) may pick a *different*
+    (d1, d2) factorization and boundary implementation than the
+    train/prefill search did.  ``chunks`` is pinned to 1: there is no
+    per-boundary payload worth splitting at seq=1, and the chunk engine's
+    per-chunk alpha would be pure overhead.  ``seq_parallel`` is
+    structurally absent (a one-token step has no sequence to shard).
+
+    Executing a decode factorization that differs from the plan's mesh
+    requires building the serving stack on the decode mesh up front
+    (``ParallelPlan.decode_view``); ``resolve_ctx(decode=True)`` applies
+    the mesh-layout-neutral knobs (boundary_mode, chunks) either way.
+    """
+
+    d1: int
+    d2: int
+    boundary_mode: str = "psum"
+    chunks: int = 1
+    #: modelled seconds per generated token behind the choice (provenance)
+    predicted_t_step: float | None = None
+
+    def __post_init__(self):
+        if self.d1 < 1 or self.d2 < 1:
+            raise ValueError(f"decode plan degrees must be >= 1: {self}")
+        if self.chunks != 1:
+            raise ValueError(
+                f"decode plans are chunks=1 by construction (got "
+                f"{self.chunks}): one-token boundaries have nothing to "
+                f"pipeline and pay alpha per chunk")
+        if self.boundary_mode not in ("psum", "ring"):
+            raise ValueError(
+                f"decode boundary_mode must be 'psum' or 'ring', got "
+                f"{self.boundary_mode!r}")
+
+    @property
+    def tp(self) -> int:
+        return self.d1 * self.d2
+
+    def describe(self) -> str:
+        return f"decode[({self.d1},{self.d2}) {self.boundary_mode}]"
+
+    def to_dict(self) -> dict:
+        return {"d1": self.d1, "d2": self.d2,
+                "boundary_mode": self.boundary_mode, "chunks": self.chunks,
+                "predicted_t_step": self.predicted_t_step}
+
+    @staticmethod
+    def from_dict(d) -> "DecodePlan":
+        ts = d.get("predicted_t_step")
+        return DecodePlan(d1=int(d["d1"]), d2=int(d["d2"]),
+                          boundary_mode=d.get("boundary_mode", "psum"),
+                          chunks=int(d.get("chunks", 1)),
+                          predicted_t_step=(None if ts is None
+                                            else float(ts)))
+
+
 _USE_REDUCE_SCATTER_REMOVED = _Removed()
 _USE_REDUCE_SCATTER_MSG = (
     "ATPContext.use_reduce_scatter was retired: the fused psum+slice "

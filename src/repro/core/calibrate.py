@@ -44,6 +44,15 @@ class CalibEntry:
     ``t_comm_overlap``'s ring-vs-Rabenseifner and chunk-count choices —
     chunking amortizes bandwidth but pays alpha per chunk, so a measured
     alpha is what keeps the search from over-chunking on real fabrics.
+
+    chunk_eff holds the chunked-overlap *effective bandwidth* micro-
+    benchmark (ROADMAP open item): tuples ``(chunks, eff1, eff2)`` where
+    eff_i is the measured bandwidth-efficiency of splitting one boundary
+    all-reduce on mesh dim i into ``chunks`` back-to-back collectives of
+    payload/chunks each (t_whole / t_chunked; 1.0 = free splitting).
+    ``t_comm_overlap(chunk_eff=...)`` prices the chunked boundary pieces
+    at ``raw_bw * eff`` instead of trusting the analytic exposure model —
+    a slow measured chunk path steers the search back to chunks=1.
     """
 
     b1: float
@@ -51,6 +60,7 @@ class CalibEntry:
     t_psum: float | None = None
     t_ring: float | None = None
     alpha_s: float | None = None
+    chunk_eff: tuple[tuple[int, float, float], ...] | None = None
 
     @property
     def boundary_mode(self) -> str | None:
@@ -58,16 +68,29 @@ class CalibEntry:
             return None
         return "ring" if self.t_ring < self.t_psum else "psum"
 
+    def chunk_efficiency(self) -> dict[int, tuple[float, float]] | None:
+        """{chunks: (eff1, eff2)} view for ``t_comm_overlap`` (None when
+        the chunked micro-benchmark was not run)."""
+        if self.chunk_eff is None:
+            return None
+        return {int(c): (e1, e2) for c, e1, e2 in self.chunk_eff}
+
     def to_dict(self) -> dict:
         return {"b1": _enc_inf(self.b1), "b2": _enc_inf(self.b2),
                 "t_psum": self.t_psum, "t_ring": self.t_ring,
-                "alpha_s": self.alpha_s}
+                "alpha_s": self.alpha_s,
+                "chunk_eff": (None if self.chunk_eff is None
+                              else [list(t) for t in self.chunk_eff])}
 
     @staticmethod
     def from_dict(d: Mapping) -> "CalibEntry":
+        ce = d.get("chunk_eff")
         return CalibEntry(b1=_dec_inf(d["b1"]), b2=_dec_inf(d["b2"]),
                           t_psum=d.get("t_psum"), t_ring=d.get("t_ring"),
-                          alpha_s=d.get("alpha_s"))
+                          alpha_s=d.get("alpha_s"),
+                          chunk_eff=(None if ce is None else tuple(
+                              (int(c), float(e1), float(e2))
+                              for c, e1, e2 in ce)))
 
 
 def _enc_inf(v: float):
@@ -107,6 +130,12 @@ class CalibrationTable:
         """Measured per-step collective latency (None when unmeasured)."""
         e = self.get(d1, d2)
         return e.alpha_s if e is not None else None
+
+    def chunk_efficiency(self, d1: int, d2: int) \
+            -> dict[int, tuple[float, float]] | None:
+        """Measured chunked-collective bandwidth efficiencies (or None)."""
+        e = self.get(d1, d2)
+        return e.chunk_efficiency() if e is not None else None
 
     def covers_tp(self, tp_degree: int) -> bool:
         """True if any entry measures a factorization of ``tp_degree``.
@@ -225,15 +254,42 @@ def _measure_factorization(d1: int, d2: int, payload_bytes: int,
         item — previously analytic-only)."""
         return max(0.0, time_allreduce(axis, d, n_elems=64)) / (2 * (d - 1))
 
+    def time_chunked(axis: str, d: int, c: int) -> float:
+        """One boundary payload split into c back-to-back collectives of
+        payload/c each — the wire pattern the chunk-overlap engine issues
+        per boundary (repro.core.atp._chunked_boundary_matmul)."""
+        per = max(1, elems // c)
+        x = jnp.ones((d, c, per), jnp.float32)
+
+        def red(v):
+            return jnp.stack([lax.psum(v[:, i], axis) for i in range(c)],
+                             axis=1)
+
+        f = jax.jit(shard_map(red, mesh=mesh, in_specs=P(axis),
+                              out_specs=P(axis), check_vma=True))
+        return _time_fn(f, x, repeats=repeats)
+
+    def chunk_eff_axis(axis: str | None, d: int, whole: float,
+                       c: int) -> float:
+        """Measured bandwidth efficiency of splitting into c chunks on one
+        axis (1.0 for singleton dims: nothing to split)."""
+        if axis is None or whole is None or whole <= 0.0:
+            return 1.0
+        tc = time_chunked(axis, d, c)
+        return min(1.0, whole / tc) if tc > 0.0 else 1.0
+
     b1 = b2 = math.inf
     t_psum = t_ring = alpha_s = None
+    t1_whole = t2_whole = None
     if ax1 is not None:
         t_psum = time_allreduce(ax1, d1)
         t_ring = time_allreduce(ax1, d1, ring=True)
         b1 = payload_bytes / t_psum / 1e9
         alpha_s = alpha_from_tiny(ax1, d1)
+        t1_whole = t_psum
         if ax2 is not None:
-            b2 = payload_bytes / time_allreduce(ax2, d2) / 1e9
+            t2_whole = time_allreduce(ax2, d2)
+            b2 = payload_bytes / t2_whole / 1e9
             # one alpha serves every collective of this factorization —
             # keep the slower axis's latency (conservative: the cost model
             # must not over-chunk the slow axis on a two-level fabric)
@@ -245,8 +301,14 @@ def _measure_factorization(d1: int, d2: int, payload_bytes: int,
         t_ring = time_allreduce(ax2, d2, ring=True)
         b2 = payload_bytes / t_psum / 1e9
         alpha_s = alpha_from_tiny(ax2, d2)
+        t2_whole = t_psum
+    chunk_eff = tuple(
+        (c,
+         chunk_eff_axis(ax1, d1, t1_whole, c),
+         chunk_eff_axis(ax2, d2, t2_whole, c))
+        for c in (2, 4))
     return CalibEntry(b1=b1, b2=b2, t_psum=t_psum, t_ring=t_ring,
-                      alpha_s=alpha_s)
+                      alpha_s=alpha_s, chunk_eff=chunk_eff)
 
 
 def calibrate_mesh(

@@ -27,6 +27,11 @@ class CommLayer:
     ranks: int        # R_i sub-groups at this level
     p2p_bw: float     # GB/s between two ranks at this level
     group_bw: float   # GB/s one rank-group <-> everything else
+    #: relative per-collective-step latency of a hop crossing this layer,
+    #: as a multiple of the fabric's base alpha_s (NVLink-class hop = 1).
+    #: Only the latency-bound decode objective reads this — the training
+    #: cost model (Eq. 2-4) is bandwidth-bound and ignores it.
+    alpha_factor: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +113,24 @@ class HierarchicalCommMatrix:
         b2 = dim_bw(spans2, spans1)
         return b1, b2
 
+    def axis_alpha_factors(self, d1: int, d2: int) -> tuple[float, float]:
+        """Per-mesh-dim step-latency multipliers (decode objective).
+
+        Every collective step on a dim pays the latency of the *slowest*
+        layer the dim spans (a ring/butterfly step crossing a socket or IB
+        hop cannot be faster than that hop), so each dim's factor is the
+        max ``alpha_factor`` over its spanned layers; a singleton dim has
+        no collectives and reports 1.0.
+        """
+        spans1, spans2 = self.dim_layer_spans(d1, d2)
+
+        def dim_alpha(spans: list[tuple[int, int]]) -> float:
+            if not spans:
+                return 1.0
+            return max(self.layers[j].alpha_factor for j, _ in spans)
+
+        return dim_alpha(spans1), dim_alpha(spans2)
+
 
 # ---------------------------------------------------------------------------
 # Presets.  GPU presets reproduce the paper's IC1..IC6 analytically;
@@ -119,9 +142,9 @@ def ic1_pcie_8gpu() -> HierarchicalCommMatrix:
     return HierarchicalCommMatrix(
         "IC1-PCIe",
         (
-            CommLayer("socket", 2, 16.0, 16.0),     # QPI/GMI bridge
-            CommLayer("pcie-switch", 2, 32.0, 32.0),
-            CommLayer("gpu", 2, 32.0, 32.0),
+            CommLayer("socket", 2, 16.0, 16.0, alpha_factor=8.0),  # QPI/GMI bridge
+            CommLayer("pcie-switch", 2, 32.0, 32.0, alpha_factor=3.0),
+            CommLayer("gpu", 2, 32.0, 32.0, alpha_factor=2.0),
         ),
     )
 
@@ -131,8 +154,8 @@ def ic2_dual_nvlink_8gpu() -> HierarchicalCommMatrix:
     return HierarchicalCommMatrix(
         "IC2-dualNVLink",
         (
-            CommLayer("pcie", 4, 32.0, 32.0),
-            CommLayer("nvlink-pair", 2, 200.0, 200.0),
+            CommLayer("pcie", 4, 32.0, 32.0, alpha_factor=3.0),
+            CommLayer("nvlink-pair", 2, 200.0, 200.0),  # alpha_factor 1 (NVLink hop)
         ),
     )
 
@@ -149,7 +172,7 @@ def ic4_ib_cluster_16gpu() -> HierarchicalCommMatrix:
     """Cluster C: 16 GPUs, flat 200 Gbps InfiniBand (single layer)."""
     return HierarchicalCommMatrix(
         "IC4-IB",
-        (CommLayer("ib", 16, 25.0, 25.0),),
+        (CommLayer("ib", 16, 25.0, 25.0, alpha_factor=12.0),),
     )
 
 
@@ -166,7 +189,8 @@ def ic6_torus_2d(side: int = 4, link_gbps: float = 25.0) -> HierarchicalCommMatr
     return HierarchicalCommMatrix(
         "IC6-2DTorus",
         (
-            CommLayer("ring-of-rings", side, link_gbps * side, 2 * link_gbps * side),
+            CommLayer("ring-of-rings", side, link_gbps * side,
+                      2 * link_gbps * side, alpha_factor=2.0),
             CommLayer("ring", side, link_gbps, 2 * link_gbps),
         ),
     )
@@ -181,7 +205,8 @@ def tpu_v5e_pod(rows: int = 16, cols: int = 16, link_bw: float = 50.0) -> Hierar
     return HierarchicalCommMatrix(
         "TPUv5e-pod",
         (
-            CommLayer("torus-rows", rows, link_bw * cols, 2 * link_bw * cols),
+            CommLayer("torus-rows", rows, link_bw * cols, 2 * link_bw * cols,
+                      alpha_factor=2.0),
             CommLayer("torus-cols", cols, link_bw, 2 * link_bw),
         ),
     )
@@ -192,7 +217,8 @@ def tpu_multipod(pods: int = 2, dcn_bw: float = 100.0, **kw) -> HierarchicalComm
     pod = tpu_v5e_pod(**kw)
     return HierarchicalCommMatrix(
         "TPUv5e-multipod",
-        (CommLayer("dcn", pods, dcn_bw, dcn_bw),) + pod.layers,
+        (CommLayer("dcn", pods, dcn_bw, dcn_bw, alpha_factor=40.0),)
+        + pod.layers,
     )
 
 

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Mapping
 
 from repro.core.comm_matrix import HierarchicalCommMatrix
 
@@ -360,6 +361,7 @@ def t_comm_overlap(
     algo: str = "ring",
     alpha_s: float = 0.0,
     calibrated: tuple[float, float] | None = None,
+    chunk_eff: "Mapping[int, tuple[float, float]] | None" = None,
 ) -> OverlapStrategyCost:
     """Generalised Eq. 2 with explicit-overlap accounting.
 
@@ -377,6 +379,15 @@ def t_comm_overlap(
     payload/B).  Internally the raw link bandwidth is recovered by
     inverting Eq. 4, so a calibrated all-reduce costs exactly payload/B
     regardless of ``algo`` — matching the seed Eq. 2 path bit-for-bit.
+
+    ``chunk_eff`` optionally maps a chunk count to measured per-axis
+    bandwidth-efficiency multipliers (ax1, ax2) from the chunked
+    micro-benchmark (``calibrate``): splitting a collective into c pieces
+    on a real fabric loses efficiency to per-piece overheads the analytic
+    exposure model cannot see, so the *chunked* boundary collectives run
+    at ``raw_bw * eff`` while the unchunked totals keep the full-payload
+    bandwidth.  Absent (or for a chunk count with no entry) the analytic
+    exposure model is used unchanged.
     """
     if profile.hidden is None:
         raise ValueError(
@@ -446,12 +457,21 @@ def t_comm_overlap(
         row_boundary_op, row_chunks = "reduce_scatter", 1
     else:
         row_boundary_op, row_chunks = "all_reduce", chunks
+    def chunked_bw(raw: float, axis: int, c: int) -> float:
+        """Measured per-chunk bandwidth efficiency (1.0 when unmeasured)."""
+        if chunk_eff is None or c <= 1:
+            return raw
+        eff = chunk_eff.get(c)
+        if eff is None or eff[axis] is None:
+            return raw
+        return raw * eff[axis]
+
     t_comm = steps * (t_col + t_row + t_gather + t_flat)
     t_exposed = steps * (
-        _exposed(vol_col, d2, b2_raw, "all_reduce", algo, alpha_s,
-                 chunks, tg_col)
-        + _exposed(vol_row, d1, b1_raw, row_boundary_op, algo, alpha_s,
-                   row_chunks, tg_row)
+        _exposed(vol_col, d2, chunked_bw(b2_raw, 1, chunks), "all_reduce",
+                 algo, alpha_s, chunks, tg_col)
+        + _exposed(vol_row, d1, chunked_bw(b1_raw, 0, row_chunks),
+                   row_boundary_op, algo, alpha_s, row_chunks, tg_row)
         + t_gather   # entry gathers overlap the norm only
         + t_flat)    # dispatch is on the routing critical path
     t_gemm = steps * (tg_col + tg_row)
@@ -459,8 +479,10 @@ def t_comm_overlap(
     # does every chunk-credited boundary hide its per-chunk collective
     # (with its own per-step latency) inside the per-chunk GEMM?
     chunked_boundaries = [
-        (vol_col, d2, b2_raw, "all_reduce", chunks, tg_col),
-        (vol_row, d1, b1_raw, row_boundary_op, row_chunks, tg_row),
+        (vol_col, d2, chunked_bw(b2_raw, 1, chunks), "all_reduce", chunks,
+         tg_col),
+        (vol_row, d1, chunked_bw(b1_raw, 0, row_chunks), row_boundary_op,
+         row_chunks, tg_row),
     ]
     active = [(v, d, bw, op, c, tg) for v, d, bw, op, c, tg
               in chunked_boundaries if d > 1 and c > 1 and v > 0]
@@ -486,3 +508,132 @@ def t_comm_overlap(
         ax1_boundary_bytes=ax1_boundary, ax1_total_bytes=ax1_total,
         ax2_boundary_bytes=ax2_boundary, fully_overlapped=fully_overlapped,
         flat_dispatch_bytes=flat_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Decode-time (serving) cost: latency-bound per-token boundary collectives.
+# ---------------------------------------------------------------------------
+
+#: analytic defaults for the decode objective when no calibration covers
+#: the factorization: base per-collective-step latency (an NVLink-class
+#: hop; each mesh dim scales it by the comm matrix's ``alpha_factor``) and
+#: the fixed software launch/sync cost every collective pays regardless of
+#: payload.  Training-side searches keep alpha_s=0 defaults untouched.
+DECODE_ALPHA_S = 1.5e-6
+DECODE_LAUNCH_S = 6.0e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeStrategyCost:
+    """Modelled per-decode-step (one token, whole model) cost of (d1, d2).
+
+    Decode boundary all-reduces run on ``[B, 1, h]`` activations, so the
+    Eq. 2 bandwidth term nearly vanishes and the cost splits into
+    ``t_launch`` (fixed per-collective software overhead — minimized by
+    factorizations that *eliminate* whole boundary families: d1=1 kills
+    every row boundary, d2=1 every col boundary), ``t_alpha``
+    (per-step wire latency: steps(d) x the dim's hop latency) and
+    ``t_bytes`` (the residual small-message bandwidth term, which keeps
+    the paper's Eq. 2 ranking as the tie-break).  ``boundary_mode`` is
+    the cheaper of monolithic psum (Rabenseifner O(log d) steps) and the
+    explicit ring (O(d) steps) under this latency model — decode
+    virtually always answers "psum", the opposite pressure from the
+    bandwidth-bound training objective.
+    """
+
+    d1: int
+    d2: int
+    boundary_mode: str
+    t_step: float        # seconds per generated token (comm only)
+    t_launch: float
+    t_alpha: float
+    t_bytes: float
+    collectives: float   # collective launches per decode step
+
+
+def t_comm_decode(
+    matrix: HierarchicalCommMatrix,
+    d1: int,
+    d2: int,
+    *,
+    workloads: "tuple[SegmentWorkload, ...]",
+    batch: int,
+    bytes_per_elem: int = 2,
+    alpha_s: float = DECODE_ALPHA_S,
+    launch_s: float = DECODE_LAUNCH_S,
+    calibrated: tuple[float, float] | None = None,
+    boundary_mode: str | None = None,
+) -> DecodeStrategyCost:
+    """Per-token decode communication time of one (d1, d2) factorization.
+
+    Forward-only (no backward factor 2), seq=1, summed over the model's
+    segment workloads.  Per layer the same two boundary pools as
+    ``t_comm_overlap`` apply, but each *active* pool now costs
+
+        launch_s + steps(d) * alpha_s * alpha_factor(dim) + payload/BW
+
+    and the ranking is dominated by the first two terms (ATP Eq. 4's
+    latency split).  ``calibrated`` overrides the algorithm bandwidths as
+    everywhere else; a calibrated ``alpha_s`` should be passed by the
+    caller (the search threads the table's measured per-step latency).
+    ``boundary_mode`` forces psum/ring; default picks the cheaper.
+    """
+    b1_raw, b2_raw = matrix.axis_bandwidths(d1, d2)
+    if calibrated is not None:
+        cb1, cb2 = calibrated
+        if d1 > 1 and cb1 is not None and not math.isinf(cb1):
+            b1_raw = cb1 * 2.0 * (d1 - 1) / d1
+        if d2 > 1 and cb2 is not None and not math.isinf(cb2):
+            b2_raw = cb2 * 2.0 * (d2 - 1) / d2
+    a1, a2 = matrix.axis_alpha_factors(d1, d2)
+    n_flat = d1 * d2
+
+    def mode_cost(algo: str) -> tuple[float, float, float, float]:
+        launch = alpha = byte = coll = 0.0
+        for w in workloads:
+            p = w.profile
+            vol_col = batch * (p.col_first_out / max(1, d1)
+                               + p.col_full_out) * bytes_per_elem
+            vol_row = batch * (p.row_first_out / max(1, d2)
+                               + p.row_full_out) * bytes_per_elem
+            for vol, d, bw, af in ((vol_col, d2, b2_raw, a2),
+                                   (vol_row, d1, b1_raw, a1)):
+                if d <= 1 or vol <= 0.0:
+                    continue
+                transfer, ring_steps, raben_steps = \
+                    _COLLECTIVE_SHAPE["all_reduce"]
+                steps = (ring_steps(d) if algo == "ring"
+                         else raben_steps(d))
+                launch += w.layers * launch_s
+                alpha += w.layers * steps * alpha_s * af
+                byte += w.layers * vol * transfer(d) / (bw * 1e9)
+                coll += w.layers
+            if p.flat_dispatch_out > 0.0 and n_flat > 1:
+                # MoE dispatch+combine: two flat all-to-alls per layer
+                vol_flat = (batch * p.flat_dispatch_out / n_flat
+                            * bytes_per_elem)
+                bw_flat = min(b for b, d in ((b1_raw, d1), (b2_raw, d2))
+                              if d > 1)
+                af_flat = max(a for a, d in ((a1, d1), (a2, d2)) if d > 1)
+                fsteps = ((n_flat - 1) if algo == "ring"
+                          else math.ceil(math.log2(n_flat)))
+                launch += w.layers * 2 * launch_s
+                alpha += w.layers * 2 * fsteps * alpha_s * af_flat
+                byte += (w.layers * vol_flat * (n_flat - 1) / n_flat
+                         / (bw_flat * 1e9))
+                coll += 2 * w.layers
+        return launch, alpha, byte, coll
+
+    modes = ([boundary_mode] if boundary_mode is not None
+             else ["psum", "ring"])
+    best = None
+    for bm in modes:
+        algo = "ring" if bm == "ring" else "rabenseifner"
+        launch, alpha, byte, coll = mode_cost(algo)
+        cand = DecodeStrategyCost(
+            d1=d1, d2=d2, boundary_mode=bm,
+            t_step=launch + alpha + byte,
+            t_launch=launch, t_alpha=alpha, t_bytes=byte, collectives=coll)
+        if best is None or cand.t_step < best.t_step:
+            best = cand
+    return best

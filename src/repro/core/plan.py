@@ -26,19 +26,24 @@ import json
 from typing import Mapping
 
 from repro.core import comm_matrix
-from repro.core.atp import SegmentPlan
+from repro.core.atp import DecodePlan, SegmentPlan
 from repro.core.calibrate import CalibrationTable, surviving_tp
 from repro.core.comm_matrix import HierarchicalCommMatrix
-from repro.core.cost_model import (LayerCommProfile, OverlapStrategyCost,
-                                   segment_workloads)
+from repro.core.cost_model import (DECODE_ALPHA_S, DECODE_LAUNCH_S,
+                                   LayerCommProfile, OverlapStrategyCost,
+                                   SegmentWorkload, segment_workloads)
 from repro.core.mesh import MeshTopo, atp_topo
-from repro.core.search import (search_strategy_overlap,
+from repro.core.search import (search_strategy_decode,
+                               search_strategy_overlap,
                                search_strategy_segments)
 
-#: v2 adds per-segment ``SegmentPlan`` tuples (heterogeneous per-segment
-#: overlap strategies).  v1 files — one global knob set — load by
-#: broadcasting those knobs to every segment (``segment_plan``).
-PLAN_FORMAT_VERSION = 2
+#: v2 added per-segment ``SegmentPlan`` tuples (heterogeneous per-segment
+#: overlap strategies); v3 adds the optional ``decode`` sub-plan (the
+#: latency-aware serve objective's factorization + boundary_mode).  v1/v2
+#: files load unchanged — v1 global knobs broadcast to every segment
+#: (``segment_plan``), and a missing ``decode`` means "serve with the
+#: train knobs" (the pre-v3 behavior).  Newer versions still fail loudly.
+PLAN_FORMAT_VERSION = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +89,9 @@ class ParallelPlan:
     boundary_mode: str = "psum"
     seq_parallel: bool = False
     segments: tuple[SegmentPlan, ...] = ()
+    #: decode-time sub-plan (format_version 3): the serve objective's
+    #: factorization/boundary choice; None = serve with the train knobs
+    decode: DecodePlan | None = None
     topology: str | None = None  # comm-matrix preset name (if any)
     calibration: CalibrationTable | None = None
     predicted: PredictedCost | None = None
@@ -137,6 +145,32 @@ class ParallelPlan:
                            boundary_mode=self.boundary_mode,
                            seq_parallel=self.seq_parallel)
 
+    def decode_view(self) -> "ParallelPlan":
+        """The plan a decode-dominated serving deployment executes.
+
+        With no ``decode`` sub-plan this is the plan itself (pre-v3
+        behavior: serve with the train knobs).  Otherwise the decode
+        factorization replaces (d1, d2) — the serving stack builds its
+        mesh from this view up front, since prefill and decode share one
+        set of sharded params/caches — and every knob collapses to the
+        decode choice: chunks=1, the decode boundary_mode, seq_parallel
+        off globally and per segment.  The sub-plan and the carried
+        calibration/provenance stay attached for audit.
+        """
+        if self.decode is None:
+            return self
+        dec = self.decode
+        segs = tuple(SegmentPlan(kind=s.kind, chunks=dec.chunks,
+                                 boundary_mode=dec.boundary_mode,
+                                 seq_parallel=False)
+                     for s in self.segments)
+        return self.with_(
+            d1=dec.d1, d2=dec.d2, chunks=dec.chunks,
+            boundary_mode=dec.boundary_mode, seq_parallel=False,
+            segments=segs,
+            provenance=self.provenance + (
+                ("decode_view", f"serving on DeviceMesh({dec.d1},{dec.d2})"),))
+
     @property
     def calibration_stale(self) -> bool:
         """True when the carried calibration table predates an elastic
@@ -150,6 +184,8 @@ class ParallelPlan:
         if self.segments:
             out += (" segments["
                     + " ".join(s.describe() for s in self.segments) + "]")
+        if self.decode is not None:
+            out += " " + self.decode.describe()
         if self.calibration_stale:
             out += " [calibration:stale]"
         return out
@@ -167,6 +203,8 @@ class ParallelPlan:
             "chunks": self.chunks, "boundary_mode": self.boundary_mode,
             "seq_parallel": self.seq_parallel,
             "segments": [s.to_dict() for s in self.segments],
+            "decode": (self.decode.to_dict()
+                       if self.decode is not None else None),
             "topology": self.topology,
             "calibration": (self.calibration.to_dict()
                             if self.calibration is not None else None),
@@ -198,6 +236,10 @@ class ParallelPlan:
             # segment through ``segment_plan`` / ``ATPContext.for_segment``
             segments=tuple(SegmentPlan.from_dict(s)
                            for s in d.get("segments", ())),
+            # absent in v1/v2 files: no decode sub-plan — serving runs the
+            # train knobs, exactly the pre-v3 behavior
+            decode=(DecodePlan.from_dict(d["decode"])
+                    if d.get("decode") is not None else None),
             topology=d.get("topology"),
             calibration=(CalibrationTable.from_dict(calib)
                          if calib is not None else None),
@@ -267,6 +309,9 @@ def plan_search(
     alpha_s: float = 0.0,
     calibration: CalibrationTable | Mapping | None = None,
     boundary_mode: str | None = None,
+    decode_batch: int | None = None,
+    decode_alpha_s: float = DECODE_ALPHA_S,
+    decode_launch_s: float = DECODE_LAUNCH_S,
 ) -> PlanSearchResult:
     """Rank the full strategy space and emit ParallelPlans.
 
@@ -296,6 +341,14 @@ def plan_search(
     factorizations they cover and the winning plan carries the table.
     ``boundary_mode`` forces psum/ring; by default it follows the
     calibration's measured preference (falling back to "psum").
+
+    ``decode_batch`` (the serving slot count) additionally runs the
+    latency-aware decode objective (``search_strategy_decode``) over the
+    same strategy space and attaches its winner as a :class:`DecodePlan`
+    to every emitted plan — decode boundary all-reduces on ``[B, 1, h]``
+    activations are latency-bound, so the serve factorization may differ
+    from the train/prefill one; ``ParallelPlan.decode_view`` is the
+    execution side of that split.
     """
     hm, preset = _resolve_matrix(matrix)
     calibration = CalibrationTable.coerce(calibration)
@@ -324,6 +377,21 @@ def plan_search(
         workload_tag = (f"layers={layers} batch={batch} seq={seq} "
                         f"bytes={bytes_per_elem}")
 
+    decode_plan = None
+    if decode_batch is not None:
+        dworkloads = (segment_workloads(model) if model is not None else
+                      (SegmentWorkload(kind="dense", layers=layers,
+                                       profile=profile),))
+        dres = search_strategy_decode(
+            hm, tp_degree, workloads=dworkloads, batch=decode_batch,
+            bytes_per_elem=bytes_per_elem, alpha_s=decode_alpha_s,
+            launch_s=decode_launch_s, calibration=calibration,
+            boundary_mode=boundary_mode)
+        decode_plan = DecodePlan(
+            d1=dres.best.d1, d2=dres.best.d2,
+            boundary_mode=dres.best.boundary_mode,
+            predicted_t_step=dres.best.t_step)
+
     prov = (
         ("searcher", "plan_search"),
         ("matrix", hm.name),
@@ -333,6 +401,11 @@ def plan_search(
         ("workload", workload_tag),
         ("calibrated", "yes" if calibration is not None else "no"),
     )
+    if decode_plan is not None:
+        prov += (("decode",
+                  f"objective=serve batch={decode_batch} -> "
+                  f"DeviceMesh({decode_plan.d1},{decode_plan.d2}) "
+                  f"{decode_plan.boundary_mode}"),)
 
     def boundary_for(d1: int, d2: int) -> str:
         bm = boundary_mode
@@ -353,7 +426,7 @@ def plan_search(
         return ParallelPlan(
             d1=c.d1, d2=c.d2, dp=dp, pods=pods, chunks=c.chunks,
             boundary_mode=bm, seq_parallel=c.seq_parallel, segments=segs,
-            topology=preset, calibration=calibration,
+            decode=decode_plan, topology=preset, calibration=calibration,
             predicted=PredictedCost(t_comm=c.t_comm, t_exposed=c.t_exposed,
                                     t_gemm=c.t_gemm),
             provenance=prov)

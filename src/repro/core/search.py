@@ -12,8 +12,10 @@ import dataclasses
 
 from repro.core.atp import SEQ_PARALLEL_KINDS
 from repro.core.calibrate import CalibrationTable
-from repro.core.cost_model import (LayerCommProfile, OverlapStrategyCost,
-                                   SegmentWorkload, StrategyCost, t_comm,
+from repro.core.cost_model import (DECODE_ALPHA_S, DECODE_LAUNCH_S,
+                                   DecodeStrategyCost, LayerCommProfile,
+                                   OverlapStrategyCost, SegmentWorkload,
+                                   StrategyCost, t_comm, t_comm_decode,
                                    t_comm_overlap)
 from repro.core.comm_matrix import HierarchicalCommMatrix
 from repro.core.mesh import factorizations
@@ -81,10 +83,11 @@ class OverlapSearchResult:
 
 
 def _calibration_lookups(calibration, alpha_s: float):
-    """(calib_for, alpha_for) shared by the v1 and v2 searches — measured
-    bandwidths / per-step latencies override the analytic defaults for the
-    factorizations the table covers.  One implementation: the v1/v2
-    parity pin depends on both searches pricing calibration identically."""
+    """(calib_for, alpha_for, chunk_eff_for) shared by every search —
+    measured bandwidths / per-step latencies / chunked-collective
+    efficiencies override the analytic defaults for the factorizations the
+    table covers.  One implementation: the v1/v2 parity pin depends on all
+    searches pricing calibration identically."""
 
     def calib_for(d1: int, d2: int):
         return (calibration.bandwidths(d1, d2)
@@ -97,7 +100,12 @@ def _calibration_lookups(calibration, alpha_s: float):
                 return a
         return alpha_s
 
-    return calib_for, alpha_for
+    def chunk_eff_for(d1: int, d2: int):
+        if calibration is not None:
+            return calibration.chunk_efficiency(d1, d2)
+        return None
+
+    return calib_for, alpha_for, chunk_eff_for
 
 
 def search_strategy_overlap(
@@ -134,7 +142,8 @@ def search_strategy_overlap(
     """
 
     calibration = CalibrationTable.coerce(calibration)
-    calib_for, alpha_for = _calibration_lookups(calibration, alpha_s)
+    calib_for, alpha_for, chunk_eff_for = _calibration_lookups(
+        calibration, alpha_s)
 
     costs = []
     for d1, d2 in factorizations(tp_degree):
@@ -150,7 +159,8 @@ def search_strategy_overlap(
                     chunks=chunks, seq_parallel=sp,
                     peak_tflops=peak_tflops, algo=algo,
                     alpha_s=alpha_for(d1, d2),
-                    calibrated=calib_for(d1, d2)))
+                    calibrated=calib_for(d1, d2),
+                    chunk_eff=chunk_eff_for(d1, d2)))
     if not costs:
         raise ValueError(
             f"no valid (d1,d2) for tp={tp_degree} on {matrix.name}")
@@ -241,7 +251,8 @@ def search_strategy_segments(
     if not workloads:
         raise ValueError("search_strategy_segments needs >= 1 workload")
     calibration = CalibrationTable.coerce(calibration)
-    calib_for, alpha_for = _calibration_lookups(calibration, alpha_s)
+    calib_for, alpha_for, chunk_eff_for = _calibration_lookups(
+        calibration, alpha_s)
 
     meshes = []
     for d1, d2 in factorizations(tp_degree):
@@ -258,7 +269,8 @@ def search_strategy_segments(
                 profile=w.profile, bytes_per_elem=bytes_per_elem,
                 chunks=chunks, seq_parallel=sp, peak_tflops=peak_tflops,
                 algo=algo, alpha_s=alpha_for(d1, d2),
-                calibrated=calib_for(d1, d2))
+                calibrated=calib_for(d1, d2),
+                chunk_eff=chunk_eff_for(d1, d2))
                 for chunks in chunks_options for sp in sp_opts]
             best = min(cands, key=lambda c: (c.t_exposed, c.chunks,
                                              c.seq_parallel))
@@ -279,6 +291,73 @@ def search_strategy_segments(
                                tuple((c.chunks, c.seq_parallel)
                                      for c in m.segments))))
     return SegmentedSearchResult(ranked[0], ranked)
+
+
+# ---------------------------------------------------------------------------
+# Latency-aware decode (serving) search.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeSearchResult:
+    best: DecodeStrategyCost
+    ranked: tuple[DecodeStrategyCost, ...]  # ascending t_step
+
+    def mesh(self) -> tuple[int, int]:
+        return (self.best.d1, self.best.d2)
+
+
+def search_strategy_decode(
+    matrix: HierarchicalCommMatrix,
+    tp_degree: int,
+    *,
+    workloads: tuple[SegmentWorkload, ...],
+    batch: int,
+    bytes_per_elem: int = 2,
+    alpha_s: float = DECODE_ALPHA_S,
+    launch_s: float = DECODE_LAUNCH_S,
+    calibration=None,
+    boundary_mode: str | None = None,
+) -> DecodeSearchResult:
+    """Rank (d1, d2) by modelled per-token decode latency (serve objective).
+
+    Decode boundary all-reduces move ``[B, 1, h]`` activations — per ATP's
+    Eq. 4 split the alpha*steps latency term dominates, not the bandwidth
+    term the training search (Eq. 2) optimizes — so the winning
+    factorization is generally NOT the training winner: eliminating a
+    whole boundary family (d1=1 or d2=1) or keeping the TP degree on
+    low-hop-latency fabric layers beats balancing payload bytes.  The
+    per-factorization ``boundary_mode`` is chosen by the same model (psum
+    O(log d) steps vs ring O(d) steps; a calibrated boundary preference
+    from the table wins when measured).
+
+    ``calibration`` threads measured (B1, B2) and per-step alpha exactly
+    like the training searches; ``batch`` is the decode slot count.
+    """
+    if not workloads:
+        raise ValueError("search_strategy_decode needs >= 1 workload")
+    calibration = CalibrationTable.coerce(calibration)
+    calib_for, alpha_for, _ = _calibration_lookups(calibration, alpha_s)
+
+    costs = []
+    for d1, d2 in factorizations(tp_degree):
+        try:
+            matrix.axis_bandwidths(d1, d2)
+        except ValueError:
+            continue
+        bm = boundary_mode
+        if bm is None and calibration is not None:
+            bm = calibration.boundary_mode(d1, d2)
+        costs.append(t_comm_decode(
+            matrix, d1, d2, workloads=workloads, batch=batch,
+            bytes_per_elem=bytes_per_elem, alpha_s=alpha_for(d1, d2),
+            launch_s=launch_s, calibrated=calib_for(d1, d2),
+            boundary_mode=bm))
+    if not costs:
+        raise ValueError(
+            f"no valid (d1,d2) for tp={tp_degree} on {matrix.name}")
+    ranked = tuple(sorted(costs, key=lambda c: (c.t_step, c.d1)))
+    return DecodeSearchResult(ranked[0], ranked)
 
 
 def recommend_chunks(matrix: HierarchicalCommMatrix, d1: int, d2: int) -> int:

@@ -1,11 +1,21 @@
-"""Serving launcher: wave-batched prefill + decode over an ATP mesh.
+"""Serving launcher: paged continuous batching (fast path) or the wave loop.
 
-Admits up to `--slots` requests per wave, prefills the whole wave with one
-multi-token cache-write step, then decodes all streams in lockstep with
-greedy sampling.  The distribution strategy comes from a ParallelPlan —
-searched in-process (``--auto-atp``) or loaded from a saved artifact
-(``--plan plan.json``), the same file ``train --save-plan`` writes — so a
-searched strategy reaches inference unchanged.
+Two modes:
+
+  - ``--mode paged`` (default): chunked prefill + continuous batching
+    over block-paged KV caches (``runtime.server.Server``).  Mixed-length
+    requests share one compiled paged step (prefill chunks at b=1, decode
+    ticks at b=slots) — no per-length recompiles, no wave barriers.
+  - ``--mode wave``: the seed-era wave loop (kept as a baseline).
+
+The distribution strategy comes from a ParallelPlan — searched in-process
+(``--auto-atp``, which also runs the latency-aware DECODE objective and
+attaches its sub-plan) or loaded from a saved artifact (``--plan``).
+Serving is decode-dominated, so when the plan carries a decode sub-plan
+whose factorization differs from the train mesh, the whole serving stack
+is built on ``plan.decode_view()`` — the ATP thesis applied to inference:
+the objective (here: per-token latency, not per-step bandwidth) picks the
+mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --reduced --requests 6 --max-new 8 [--plan plan.json | --auto-atp]
@@ -22,15 +32,18 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.core.mesh import atp_topo
 from repro.core.plan import ParallelPlan
-from repro.launch.steps import resolve_ctx, build_decode_step
+from repro.launch.steps import (build_decode_step, build_paged_step,
+                                resolve_ctx)
 from repro.models import lm
+from repro.models.paging import PagedConfig
+from repro.runtime.server import Request, Server, ServerConfig
 
 log = logging.getLogger("repro.serve")
 
 
 def serve(cfg, topo, params, prompts, max_new: int, max_seq: int,
           plan: ParallelPlan | None = None):
-    """prompts: list of equal-length int arrays (one wave)."""
+    """Wave baseline.  prompts: list of equal-length int arrays (one wave)."""
     topo = topo if topo is not None else plan.topo()
     mesh = topo.build()
     ctx = resolve_ctx(topo, plan, decode=True)
@@ -56,10 +69,46 @@ def serve(cfg, topo, params, prompts, max_new: int, max_seq: int,
     return np.stack(outs, axis=1)  # [B, max_new]
 
 
+def make_paged_server(cfg, scfg: ServerConfig, params,
+                      plan: ParallelPlan | None = None, topo=None):
+    """Build the paged continuous-batching server on the serving mesh.
+
+    With a plan whose decode sub-plan prescribes a different (d1, d2)
+    than the train mesh, the stack is built from ``plan.decode_view()``
+    — serving is decode-dominated, and prefill/decode share one set of
+    sharded params and caches, so the decode mesh wins.
+    """
+    if plan is not None:
+        view = plan.decode_view()
+        if (view.d1, view.d2) != (plan.d1, plan.d2):
+            log.info("decode sub-plan re-meshes serving: %s -> "
+                     "DeviceMesh(%d,%d)", plan.describe(), view.d1, view.d2)
+        plan = view
+        topo = plan.topo()
+    elif topo is None:
+        raise TypeError("make_paged_server needs a plan or a topo")
+    mesh = topo.build()
+    step, info = build_paged_step(cfg, topo, paged_cfg=scfg.paged,
+                                  mesh=mesh, plan=plan)
+    params = jax.device_put(params, info.sharding(info.pspecs))
+
+    def init_caches():
+        caches, cache_specs = lm.init_paged_caches(cfg, info.ctx, scfg.paged)
+        return jax.device_put(caches, info.sharding(cache_specs))
+
+    def step_fn(tokens, start, table, caches):
+        toks, caches = step(params, jnp.asarray(tokens),
+                            jnp.asarray(start), jnp.asarray(table), caches)
+        return np.asarray(toks), caches
+
+    return Server(scfg, step_fn, init_caches), info
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mode", choices=("paged", "wave"), default="paged")
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--d1", type=int, default=1)
     ap.add_argument("--d2", type=int, default=1)
@@ -68,10 +117,15 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool size (0 = sized to the workload)")
     ap.add_argument("--plan", default=None,
                     help="load a saved ParallelPlan JSON (train --save-plan)")
     ap.add_argument("--auto-atp", action="store_true",
-                    help="search a plan for this arch/shape (paper §3.5)")
+                    help="search a plan for this arch/shape (paper §3.5), "
+                         "including the latency-aware decode objective")
     ap.add_argument("--topology", default="v5e",
                     help="comm-matrix preset for --auto-atp")
     args = ap.parse_args()
@@ -90,21 +144,55 @@ def main():
         plan = plan_search(
             args.topology, args.d1 * args.d2, model=cfg,
             batch=args.slots, seq=args.prompt_len + args.max_new,
-            dp=args.dp).best
+            dp=args.dp, decode_batch=args.slots).best
         log.info("ATP plan search picked %s", plan.describe())
     topo = plan.topo() if plan is not None else atp_topo(args.dp, args.d1,
                                                          args.d2)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
 
     rng = np.random.default_rng(0)
-    pending = [rng.integers(0, cfg.vocab_size, size=args.prompt_len,
-                            dtype=np.int32) for _ in range(args.requests)]
+    if args.mode == "paged":
+        # mixed prompt lengths: the workload the paged path is built for
+        lens = [max(1, int(rng.integers(args.prompt_len // 2,
+                                        args.prompt_len + 1)))
+                for _ in range(args.requests)]
+    else:
+        # the wave loop decodes in lockstep from one shared position and
+        # would condition shorter prompts on their padding — keep its
+        # workload equal-length (mixed lengths are the paged mode's job)
+        lens = [args.prompt_len] * args.requests
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in lens]
+
+    if args.mode == "paged":
+        mp = -(-(args.max_seq) // args.page_size)
+        num_pages = args.num_pages or (
+            1 + sum(-(-(n + args.max_new) // args.page_size)
+                    for n in lens))
+        scfg = ServerConfig(
+            batch_slots=args.slots, prefill_chunk=args.prefill_chunk,
+            paged=PagedConfig(page_size=args.page_size,
+                              num_pages=num_pages, pages_per_slot=mp))
+        server, _ = make_paged_server(cfg, scfg, params, plan=plan,
+                                      topo=topo)
+        for rid, p in enumerate(prompts):
+            server.submit(Request(rid=rid, prompt=p, max_new=args.max_new))
+        ticks = server.run_until_drained()
+        for req in sorted(server.completed, key=lambda r: r.rid):
+            log.info("request %d (%d prompt tokens) -> %s",
+                     req.rid, len(req.prompt), req.out)
+        log.info("served %d requests in %d ticks (continuous)",
+                 len(server.completed), ticks)
+        return
+
+    # wave baseline: equal-length waves
     done = 0
     wave = 0
+    pending = list(prompts)
     while pending:
         batch = pending[: args.slots]
         pending = pending[args.slots:]
-        while len(batch) < args.slots:   # pad the last wave
+        while len(batch) < args.slots:   # pad the last wave with dummies
             batch.append(np.zeros(args.prompt_len, np.int32))
         outs = serve(cfg, topo, params, batch, args.max_new, args.max_seq,
                      plan=plan)

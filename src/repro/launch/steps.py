@@ -78,11 +78,19 @@ def resolve_ctx(topo: MeshTopo | None, plan, chunks: int = 1,
 
     Keeping this single funnel is what guarantees a searched/saved plan
     reaches train, prefill AND decode identically (no builder hand-rolls
-    its own defaults and silently drops knobs).  ``decode`` masks
-    seq_parallel only — globally AND in every per-segment entry: the
-    sequence-parallel block I/O spec is defined over a full sequence and
-    does not apply to cached decode (the model raises if asked); chunks
-    and boundary_mode still apply per segment.
+    its own defaults and silently drops knobs).  ``decode`` does two
+    things:
+
+      - masks seq_parallel — globally AND in every per-segment entry: the
+        sequence-parallel block I/O spec is defined over a full sequence
+        and does not apply to cached decode (the model raises if asked);
+      - applies the plan's :class:`~repro.core.atp.DecodePlan` sub-plan
+        (format_version 3) for the mesh-layout-NEUTRAL knobs: decode
+        boundary_mode and chunks=1 replace the train knobs in every
+        segment view.  The decode factorization (d1, d2) is NOT applied
+        here — a builder cannot re-mesh mid-serving under shared params;
+        a deployment that wants the decode mesh builds everything from
+        ``plan.decode_view()`` up front (``launch/serve.py`` does).
     """
     if plan is not None:
         ctx = make_context(topo, plan=plan)
@@ -90,6 +98,15 @@ def resolve_ctx(topo: MeshTopo | None, plan, chunks: int = 1,
         raise TypeError("builder needs a MeshTopo or a ParallelPlan")
     else:
         ctx = make_context(topo, chunks=chunks)
+    if decode and plan is not None \
+            and getattr(plan, "decode", None) is not None:
+        dec = plan.decode
+        ctx = dataclasses.replace(
+            ctx, chunks=dec.chunks, boundary_mode=dec.boundary_mode,
+            segment_plans=tuple(
+                dataclasses.replace(s, chunks=dec.chunks,
+                                    boundary_mode=dec.boundary_mode)
+                for s in ctx.segment_plans))
     if decode and ctx.any_seq_parallel:
         ctx = dataclasses.replace(
             ctx, seq_parallel=False,
@@ -185,6 +202,57 @@ def _greedy_pick(ctx: ATPContext, cfg: ModelConfig, logits):
     gmax = lax.pmax(local_max, ctx.ax1)
     cand = jnp.where(local_max >= gmax, local_arg, jnp.int32(2**30))
     return lax.pmin(cand, ctx.ax1)
+
+
+def build_paged_step(cfg: ModelConfig, topo: MeshTopo | None = None,
+                     paged_cfg=None,
+                     mesh: jax.sharding.Mesh | None = None,
+                     plan=None):
+    """The compiled paged cache-write step (decode tick AND prefill chunk).
+
+    Signature: (params, tokens [b, s], start [b], table [b, mp],
+    caches) -> (greedy tokens [b, s], new caches).
+
+    The serving fast path runs this one jitted function at exactly two
+    shapes — prefill chunk (b=1, s=chunk) and decode tick (b=slots, s=1)
+    — and reuses them across every request length: lengths/positions are
+    runtime data (per-slot ``start`` + page-table rows), not shapes, so
+    mixed-length continuous batching never recompiles.  Greedy picks for
+    every input position come back so the scheduler can read the last
+    *valid* position of a padded final chunk on the host.
+
+    ``decode=True`` context resolution applies the plan's decode
+    sub-plan knobs (boundary_mode, chunks=1) and masks seq_parallel.
+    """
+    from repro.models.paging import PagedConfig
+
+    pcfg = paged_cfg if paged_cfg is not None else PagedConfig()
+    ctx = resolve_ctx(topo, plan, decode=True)
+    topo = ctx.topo
+    mesh = mesh if mesh is not None else topo.build()
+    pspecs = lm.param_specs(cfg, ctx)
+    _, cache_specs = lm.init_paged_caches(cfg, ctx, pcfg, abstract=True)
+    tspec = P(None, None)
+
+    def local(params, tokens, start, table, caches):
+        logits, new_caches = lm.paged_step(ctx, cfg, params, tokens, start,
+                                           table, caches)
+        return _greedy_pick(ctx, cfg, logits), new_caches
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(pspecs, tspec, P(None), tspec, cache_specs),
+                   out_specs=(tspec, cache_specs), check_vma=_check_vma(ctx))
+    info = StepInfo(mesh, ctx, pspecs, tspec, cache_specs=cache_specs)
+    jit_fn = jax.jit(
+        fn,
+        in_shardings=(info.sharding(pspecs), NamedSharding(mesh, tspec),
+                      NamedSharding(mesh, P(None)),
+                      NamedSharding(mesh, tspec),
+                      info.sharding(cache_specs)),
+        out_shardings=(NamedSharding(mesh, tspec),
+                       info.sharding(cache_specs)),
+        donate_argnums=(4,))
+    return jit_fn, info
 
 
 def build_decode_step(cfg: ModelConfig, topo: MeshTopo | None = None,

@@ -280,8 +280,9 @@ def core_output_gather(ctx: ATPContext, cfg: ModelConfig, o, plan: AttnPlan, seq
 def attention_core(
     cfg: ModelConfig,
     q, k, v,                      # q: [b, sq, hq, hd]; k/v: [b, skv, hkv, hd]
-    q_offset,                     # scalar: absolute position of q[0]
-    kv_len=None,                  # for decode: valid cache length
+    q_offset,                     # absolute position of q[0]: scalar, or
+                                  # [b] per-slot (paged continuous batching)
+    kv_len=None,                  # decode: valid cache length (scalar or [b])
     window: int = 0,              # sliding window (0 = global)
 ):
     b, sq, hq, hd = q.shape
@@ -294,15 +295,26 @@ def attention_core(
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
     if cfg.attn_softcap:
         scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
-    qpos = q_offset + jnp.arange(sq)[:, None]
-    kpos = jnp.arange(skv)[None, :]
+    # per-slot offsets/lengths (paged serving) build a [b, 1, sq, skv]
+    # mask; the scalar path keeps its original [1, 1, sq, skv] shape
+    q_off = jnp.asarray(q_offset)
+    per_slot = q_off.ndim > 0
+    if per_slot:
+        qpos = q_off[:, None, None] + jnp.arange(sq)[None, :, None]
+        kpos = jnp.arange(skv)[None, None, :]
+    else:
+        qpos = q_off + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(skv)[None, :]
     mask = kpos <= qpos
     # window may be a traced per-layer scalar (scanned); 0 means global
     win = jnp.asarray(window, jnp.int32)
     win_eff = jnp.where(win > 0, win, jnp.int32(2**30))
     mask &= kpos > qpos - win_eff
     if kv_len is not None:
-        mask &= kpos < kv_len
-    scores = jnp.where(mask[None, None], scores, -1e30)
+        kl = jnp.asarray(kv_len)
+        mask = mask & (kpos < (kl[:, None, None] if kl.ndim else kl))
+    # [b, sq, skv] -> [b, 1, sq, skv]; scalar path [sq, skv] -> [1, 1, ...]
+    mask = mask[:, None] if mask.ndim == 3 else mask[None, None]
+    scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)

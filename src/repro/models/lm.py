@@ -34,7 +34,7 @@ from repro.core.atp import (ATPContext, atp_boundary, atp_linear,
                             atp_reduce_scatter, seq_gather, seq_scatter,
                             shard_slice)
 from repro.models import layers as L
-from repro.models import mamba2, mla, moe, transformer, xlstm
+from repro.models import mamba2, mla, moe, paging, transformer, xlstm
 
 # The segment plan (Segment / segments) lives in repro.configs.base so the
 # strategy stack can derive per-segment workloads without importing model
@@ -135,17 +135,19 @@ def _stack_specs(specs):
 
 
 def _apply_block(kind: str, ctx, cfg, p, x, positions, plan, window, cache,
-                 emb0=None, shared=None):
+                 emb0=None, shared=None, paged=None):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "dense":
         x, nc = transformer.dense_block(ctx, cfg, p, x, positions, plan,
-                                        layer_window=window, cache=cache)
+                                        layer_window=window, cache=cache,
+                                        paged=paged)
         return x, nc, aux
     if kind == "moe":
         h = L.norm(ctx, cfg, x, p["ln_attn"])
         a, nc = transformer.attn_block(ctx, cfg, p["attn"], h, positions, plan,
-                                       layer_window=window, cache=cache)
+                                       layer_window=window, cache=cache,
+                                       paged=paged)
         x = x + a
         h = L.norm(ctx, cfg, x, p["ln_mlp"])
         m, aux = moe.moe_block(ctx, cfg, p["moe"], h)
@@ -157,7 +159,8 @@ def _apply_block(kind: str, ctx, cfg, p, x, positions, plan, window, cache,
         # masked — MoE dispatch needs ax1-replicated full-sequence I/O)
         sp = ctx.seq_parallel and cache is None
         h = L.norm(ctx, cfg, x, p["ln_attn"], gather_seq=sp)
-        a, nc = mla.mla_block(ctx, cfg, p["mla"], h, positions, cache=cache)
+        a, nc = mla.mla_block(ctx, cfg, p["mla"], h, positions, cache=cache,
+                              paged=paged)
         x = x + a
         h = L.norm(ctx, cfg, x, p["ln_mlp"], gather_seq=sp)
         if kind == "mla_dense":
@@ -371,6 +374,75 @@ def init_decode_caches(cfg: ModelConfig, ctx: ATPContext, B: int, s_max: int,
     return caches, specs
 
 
+#: segment kinds whose O(s) caches can live in a block-paged pool; the
+#: recurrent kinds (mamba / zamba / xlstm) hold O(1)-per-slot state that
+#: stays dense and has no per-slot view inside a b=1 prefill chunk, so
+#: they keep the dense wave-serving path.
+PAGED_CACHE_KINDS = frozenset({"dense", "moe", "mla_dense", "mla_moe"})
+
+
+def init_paged_caches(cfg: ModelConfig, ctx: ATPContext,
+                      pcfg: "paging.PagedConfig",
+                      dtype=jnp.bfloat16, abstract: bool = False):
+    """Block-paged decode caches: (caches, specs) page pools per segment.
+
+    Unlike :func:`init_decode_caches` there is no per-slot ``s_max`` axis
+    and no ``len`` leaf: every O(s) cache tensor stores
+    ``num_pages x page_size`` token positions shared by all serving
+    slots, and per-slot position state (page table rows + lengths) is
+    passed into each step by the scheduler (``runtime.server``).  Memory
+    scales with *live tokens*, not ``slots x s_max``.
+
+    Per segment kind:
+      attn (dense/moe)   k/v pools ``[count, np, pg, banks, hd]``, the
+                         bank dim sharded over the flat TP axes exactly
+                         like the dense cache;
+      mla (mla_dense/moe) latent pools ``[count, np, pg, rank]`` +
+                         ``[count, np, pg, rope_dim]``, TP-replicated
+                         (caching the latent is MLA's whole point);
+      mamba/zamba/xlstm  O(1)-per-slot recurrent state — not paged; these
+                         kinds raise (serve them with the wave loop).
+    """
+    n = ctx.tp
+    del n  # banks formula lives in _attn_cache_shape
+    flat = _flat_axes(ctx)
+    np_, pg = pcfg.num_pages, pcfg.page_size
+
+    def arr(shape, dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    def attn_pool(count):
+        banks = _attn_cache_shape(cfg, ctx, 1, 1)[2]
+        shape = (count, np_, pg, banks, cfg.hd)
+        c = {"k": arr(shape, dtype), "v": arr(shape, dtype)}
+        sp = {"k": P(None, None, None, flat, None),
+              "v": P(None, None, None, flat, None)}
+        return c, sp
+
+    def mla_pool(count):
+        m = cfg.mla
+        c = {"ckv": arr((count, np_, pg, m.kv_lora_rank), dtype),
+             "krope": arr((count, np_, pg, m.qk_rope_head_dim), dtype)}
+        sp = {"ckv": P(None, None, None, None),
+              "krope": P(None, None, None, None)}
+        return c, sp
+
+    caches, specs = {}, {}
+    for i, seg in enumerate(segments(cfg)):
+        if seg.kind not in PAGED_CACHE_KINDS:
+            raise NotImplementedError(
+                f"segment kind {seg.kind!r} holds O(1)-per-slot recurrent "
+                f"state with no paged representation; serve this arch "
+                f"with the dense wave loop (init_decode_caches)")
+        if seg.kind in ("dense", "moe"):
+            caches[f"seg{i}"], specs[f"seg{i}"] = attn_pool(seg.count)
+        else:
+            caches[f"seg{i}"], specs[f"seg{i}"] = mla_pool(seg.count)
+    return caches, specs
+
+
 # ---------------------------------------------------------------------------
 # Embedding / head / loss (vocab-parallel over ax1, feature over ax2).
 # ---------------------------------------------------------------------------
@@ -470,6 +542,7 @@ def forward(
     embeds=None,            # [b, s, h/d2] (vision frontend stub)
     caches=None,            # decode: per-segment stacked cache trees
     remat: bool = False,
+    paged=None,             # paged serving: dict(table=[b,mp], start=[b])
 ):
     """Returns (hidden [b, s, h/d2], new_caches, aux_sum, x_emb0).
 
@@ -537,7 +610,7 @@ def forward(
                 h, aux = carry
                 bp, win, c = xs
                 h, nc, a = _apply_block(_kind, _ctx, cfg, bp, h, positions,
-                                        plan, win, c)
+                                        plan, win, c, paged=paged)
                 return (h, aux + a), nc
 
             fn = jax.checkpoint(body) if remat else body
@@ -698,3 +771,29 @@ def decode_step(ctx: ATPContext, cfg: ModelConfig, params, tokens, pos, caches):
                                   caches=caches)
     logits = lm_logits(ctx, cfg, params, h[:, -1:])
     return logits[:, 0], new_caches
+
+
+def paged_step(ctx: ATPContext, cfg: ModelConfig, params, tokens, start,
+               table, caches):
+    """One paged cache-write step — decode tick AND prefill chunk.
+
+    tokens [b, s] (decode: b=slots, s=1; prefill chunk: b=1, s=chunk);
+    start [b] per-slot absolute position of tokens[:, 0]; table [b, mp]
+    page-table rows; caches from :func:`init_paged_caches`.
+
+    Returns (logits [b, s, V/d1] for EVERY input position, new caches).
+    Returning all positions keeps one compiled step reusable across
+    prompt lengths: the scheduler picks the logits of the last *valid*
+    token of a padded final chunk on the host, instead of forcing a
+    recompile per length.
+    """
+    b, s = tokens.shape
+    prange = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(prange[None], (3, b, s))
+    else:
+        positions = prange
+    h, new_caches, _, _ = forward(ctx, cfg, params, tokens, positions,
+                                  caches=caches,
+                                  paged={"table": table, "start": start})
+    return lm_logits(ctx, cfg, params, h), new_caches

@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.core.atp import ATPContext, atp_boundary, atp_linear, shard_slice
 from repro.models import layers as L
+from repro.models import paging
 
 
 def _init(key, shape, scale, dtype):
@@ -78,6 +79,8 @@ def mla_block(
     x,                  # [b, s, h/d2]
     positions,          # [b, s]
     cache=None,         # decode: dict(ckv=[b,S,rank], krope=[b,S,rd], len=..)
+                        # or paged pools dict(ckv=[np,pg,rank], krope=...)
+    paged=None,         # paged serving: dict(table=[b,mp], start=[b])
 ):
     """Returns ([b, s, h/d2], new_cache)."""
     m = cfg.mla
@@ -115,14 +118,25 @@ def mla_block(
         o = L.attention_core(cfg, qq, k, v, q_offset=0)           # [b,s,h_loc,dv]
     else:
         # ---- decode (absorbed): score against the latent directly
-        klen = cache["len"]
         sq = x.shape[1]
         k_pe_new = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
-        cckv = lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), klen, axis=1)
-        ckr = lax.dynamic_update_slice_in_dim(
-            cache["krope"], k_pe_new.astype(cache["krope"].dtype), klen, axis=1)
-        new_cache = {"ckv": cckv, "krope": ckr, "len": klen + sq}
+        if paged is not None:
+            # paged serving: the latent pools are position-paged exactly
+            # like K/V; scatter this run, gather the slot's mapped pages
+            table, start = paged["table"], paged["start"]
+            pckv = paging.append_tokens(cache["ckv"], table, start, ckv)
+            pkr = paging.append_tokens(cache["krope"], table, start, k_pe_new)
+            new_cache = {"ckv": pckv, "krope": pkr}
+            cckv = paging.gather_pages(pckv, table)     # [b, S_alloc, rank]
+            ckr = paging.gather_pages(pkr, table)
+            klen = start                                 # [b] per-slot
+        else:
+            klen = cache["len"]
+            cckv = lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), klen, axis=1)
+            ckr = lax.dynamic_update_slice_in_dim(
+                cache["krope"], k_pe_new.astype(cache["krope"].dtype), klen, axis=1)
+            new_cache = {"ckv": cckv, "krope": ckr, "len": klen + sq}
         # absorb W_ukv(k-part) into q:  q_abs = q_nope @ W_uk^T  [b,1,hl,rank]
         w_ukv = p["w_ukv"].reshape(m.kv_lora_rank, cfg.num_heads // ctx.d1, qk_nope + dv)
         w_ukv = shard_slice(w_ukv, i2, ctx.d2, dim=1)   # [rank, h_loc, qk+dv]
@@ -135,7 +149,10 @@ def mla_block(
                          ckr.astype(jnp.float32))
         ) / math.sqrt(qk_nope + qk_rope)
         kpos = jnp.arange(cckv.shape[1])[None, None, None, :]
-        qpos = klen + jnp.arange(sq)[None, None, :, None]
+        if paged is not None:
+            qpos = klen[:, None, None, None] + jnp.arange(sq)[None, None, :, None]
+        else:
+            qpos = klen + jnp.arange(sq)[None, None, :, None]
         scores = jnp.where(kpos <= qpos, scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1)
         o_lat = jnp.einsum("bhqk,bkr->bqhr", probs, cckv.astype(jnp.float32))

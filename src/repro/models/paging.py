@@ -1,0 +1,182 @@
+"""Block-paged KV-cache storage: fixed-size pages + per-slot page tables.
+
+The dense decode caches (``lm.init_decode_caches``) pay ``B * s_max``
+tokens of memory per layer no matter how long each slot's sequence
+actually is.  Paged storage replaces the per-slot ``s_max`` axis with a
+shared *page pool*: every attention-cache tensor stores
+``num_pages * page_size`` token positions, and each serving slot maps its
+logical positions onto physical pages through a small int32 page table.
+Short sequences hold few pages, long ones hold many, and the pool is
+sized to the expected *total* live tokens across slots — not to
+``slots x s_max``.
+
+Three parties cooperate:
+
+  - :class:`PagedConfig` fixes the geometry (page size, pool size, table
+    width) shared by host and device;
+  - :class:`PageAllocator` is the HOST-side bookkeeper: a free list plus
+    per-slot page lists; the continuous-batching scheduler
+    (``runtime.server``) allocates on admission/growth, frees on slot
+    recycle, and ships the resulting ``[B, pages_per_slot]`` tables to
+    the device as plain arrays;
+  - :func:`gather_pages` / :func:`append_tokens` are the DEVICE-side
+    accessors (pure jax, run inside shard_map): attention reads only the
+    pages a slot has mapped, and cache writes scatter tokens through the
+    table.
+
+Physical page 0 is reserved as the *garbage page*: unmapped table entries
+point at it, so inactive slots and padded chunk tails scatter there
+harmlessly (every read is masked by the slot's length before softmax).
+
+Only O(s) caches are paged — attention K/V and MLA's compressed-KV
+latents.  Mamba/xLSTM recurrent state is O(1) per slot and stays dense
+(see ``lm.init_paged_caches``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+#: physical page reserved for unmapped table entries / padded writes
+GARBAGE_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedConfig:
+    """Page-pool geometry shared by the scheduler and the compiled steps.
+
+    ``num_pages`` INCLUDES the reserved garbage page 0, so the pool holds
+    ``(num_pages - 1) * page_size`` usable token positions.
+    ``pages_per_slot`` is the page-table width — the per-slot sequence
+    ceiling is ``pages_per_slot * page_size`` (the paged analogue of
+    ``s_max``, but it bounds only the *table*, not the memory: unmapped
+    entries cost nothing).
+    """
+
+    page_size: int = 8
+    num_pages: int = 64
+    pages_per_slot: int = 8
+
+    def __post_init__(self):
+        if self.page_size < 1 or self.num_pages < 2 or self.pages_per_slot < 1:
+            raise ValueError(f"degenerate page geometry: {self}")
+
+    @property
+    def max_seq(self) -> int:
+        """Per-slot sequence ceiling (page-table width x page size)."""
+        return self.pages_per_slot * self.page_size
+
+    @property
+    def capacity_tokens(self) -> int:
+        """Usable pool capacity (excludes the garbage page)."""
+        return (self.num_pages - 1) * self.page_size
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` positions."""
+        return -(-n_tokens // self.page_size)
+
+
+class PageAllocator:
+    """Host-side page bookkeeping for one pool (numpy only, no jax).
+
+    Not thread-safe; the scheduler owns it.  ``None`` returns mean the
+    pool is exhausted — the caller defers (backpressure) rather than
+    raising, because a continuous-batching scheduler can simply keep
+    decoding its live slots until pages free up.
+    """
+
+    def __init__(self, cfg: PagedConfig, slots: int):
+        self.cfg = cfg
+        self.slots = slots
+        self._free = list(range(cfg.num_pages - 1, GARBAGE_PAGE, -1))
+        self._owned: list[list[int]] = [[] for _ in range(slots)]
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def slot_pages(self, slot: int) -> tuple[int, ...]:
+        return tuple(self._owned[slot])
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s mapping to cover ``n_tokens`` positions.
+
+        Returns False (allocating nothing) when the pool cannot satisfy
+        the request — transient backpressure the caller retries.  A
+        request exceeding the page-table WIDTH raises instead: no amount
+        of waiting can map more than ``pages_per_slot`` pages, so the
+        scheduler must reject it at submit time (``Server.submit``).
+        """
+        need = self.cfg.pages_for(n_tokens)
+        if need > self.cfg.pages_per_slot:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens need {need} pages > "
+                f"pages_per_slot={self.cfg.pages_per_slot}")
+        grow = need - len(self._owned[slot])
+        if grow <= 0:
+            return True
+        if grow > len(self._free):
+            return False
+        self._owned[slot].extend(self._free.pop() for _ in range(grow))
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return all of ``slot``'s pages to the free list (slot recycle)."""
+        pages = self._owned[slot]
+        self._free.extend(reversed(pages))
+        self._owned[slot] = []
+
+    def table(self) -> np.ndarray:
+        """The ``[slots, pages_per_slot]`` int32 device table; unmapped
+        entries point at the garbage page."""
+        t = np.full((self.slots, self.cfg.pages_per_slot), GARBAGE_PAGE,
+                    np.int32)
+        for s, pages in enumerate(self._owned):
+            t[s, : len(pages)] = pages
+        return t
+
+
+# ---------------------------------------------------------------------------
+# Device-side accessors (pure jax; run inside shard_map on local shards).
+# ---------------------------------------------------------------------------
+
+
+def gather_pages(pages, table):
+    """Materialize each slot's mapped positions from the pool.
+
+    pages [num_pages, page, ...feat]; table [B, mp] ->
+    [B, mp * page, ...feat].  Unmapped entries read the garbage page;
+    callers mask those positions by the slot's length (exactly like the
+    dense cache masks positions beyond ``len``), so the values never
+    reach a softmax unmasked.
+    """
+    g = jnp.take(pages, table, axis=0)            # [B, mp, page, ...]
+    return g.reshape((table.shape[0], table.shape[1] * pages.shape[1])
+                     + pages.shape[2:])
+
+
+def append_tokens(pages, table, start, values):
+    """Scatter per-slot token runs into the pool through the page table.
+
+    pages [num_pages, page, ...feat]; table [B, mp]; start [B] (each
+    slot's first logical position for this run); values [B, s, ...feat].
+    Position p of slot b lands in physical page ``table[b, p // page]``
+    at offset ``p % page``.  Writes beyond a slot's valid length (padded
+    chunk tails, inactive decode slots whose table rows are unmapped)
+    land on pages that are either overwritten by the very next tokens of
+    the same slot or are the garbage page — never read unmasked.
+    """
+    B, s = values.shape[:2]
+    page = pages.shape[1]
+    pos = start[:, None] + jnp.arange(s, dtype=start.dtype)[None, :]  # [B,s]
+    logical = pos // page
+    # clamp: positions past the table width scatter to the garbage page
+    # (cannot happen for well-formed schedules; defensive for padding)
+    ok = logical < table.shape[1]
+    phys = jnp.where(
+        ok, jnp.take_along_axis(table, jnp.minimum(
+            logical, table.shape[1] - 1), axis=1), GARBAGE_PAGE)
+    off = pos % page
+    return pages.at[phys, off].set(values.astype(pages.dtype))

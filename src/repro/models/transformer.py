@@ -19,6 +19,7 @@ from jax import lax
 from repro.configs.base import ModelConfig
 from repro.core.atp import ATPContext, atp_boundary, atp_linear, shard_slice
 from repro.models import layers as L
+from repro.models import paging
 
 
 def _init(key, shape, scale, dtype):
@@ -108,6 +109,8 @@ def attn_block(
     plan: L.AttnPlan,
     layer_window: int = 0,  # sliding window for this layer (0 = global)
     cache=None,             # decode: dict(k=[b,S,kvb,hd], v=..., len=scalar)
+                            # or paged pools dict(k=[np,pg,kvb,hd], v=...)
+    paged=None,             # paged serving: dict(table=[b,mp], start=[b])
 ):
     """Returns (attn output [b, s, h/d2], new_cache)."""
     # f1: column-first q/k/v projections, one fused boundary psum(ax2)
@@ -148,7 +151,19 @@ def attn_block(
             k = L.apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if decode:
+    if decode and paged is not None:
+        # paged serving: scatter this run's k/v through the slot page
+        # tables, then attend over each slot's MAPPED pages only (per-slot
+        # positions; garbage-page reads are masked by start + s)
+        table, start = paged["table"], paged["start"]
+        ck = paging.append_tokens(cache["k"], table, start, k)
+        cv = paging.append_tokens(cache["v"], table, start, v)
+        new_cache = {"k": ck, "v": cv}
+        kk = paging.gather_pages(ck, table)
+        vv = paging.gather_pages(cv, table)
+        o = L.attention_core(cfg, q, kk, vv, q_offset=start,
+                             kv_len=start + q.shape[1], window=layer_window)
+    elif decode:
         # append this step's k/v at cache['len'] (s >= 1: also serves as
         # prefill-into-cache for the serving loop)
         klen = cache["len"]
@@ -200,7 +215,7 @@ def dense_block_specs(ctx: ATPContext, cfg: ModelConfig):
 
 def dense_block(
     ctx: ATPContext, cfg: ModelConfig, p, x, positions, plan,
-    layer_window: int = 0, cache=None,
+    layer_window: int = 0, cache=None, paged=None,
 ):
     """With ``ctx.seq_parallel`` the residual stream x is seq-sharded over
     ax1: the entry norms fold the all-gather to full sequence, and the
@@ -209,7 +224,8 @@ def dense_block(
     sp = ctx.seq_parallel and cache is None
     h = L.norm(ctx, cfg, x, p["ln_attn"], gather_seq=sp)
     a, new_cache = attn_block(ctx, cfg, p["attn"], h, positions, plan,
-                              layer_window=layer_window, cache=cache)
+                              layer_window=layer_window, cache=cache,
+                              paged=paged)
     if cfg.post_block_norms:
         a = L.norm(ctx, cfg, a, p["ln_post_attn"])
     x = x + a

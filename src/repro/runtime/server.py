@@ -1,10 +1,34 @@
-"""Batched inference server loop: continuous prefill + decode scheduling.
+"""Serving scheduler: paged continuous batching with chunked prefill.
 
-Single-host reference implementation of the serving pattern the dry-run
-shapes exercise (prefill_32k / decode_32k): a request queue, a fixed
-decode batch with slot recycling, greedy sampling.  Prefill currently
-processes one request per admission at its natural length (padded to the
-slot seq budget); decode advances all active slots one token per step.
+:class:`Server` is the serving fast path — a real scheduler over the
+block-paged KV caches (``models.paging`` / ``lm.init_paged_caches``):
+
+  - **admission** pops queued requests into free slots and allocates
+    pages for the *chunk-rounded natural* prompt length (never the
+    padded slot budget — a 9-token prompt with chunk=8 pays 16 tokens of
+    prefill compute, not ``max_seq``);
+  - **chunked prefill** feeds each admitted prompt through a fixed-size
+    compiled ``prefill chunk`` step (b=1), interleaved with decode ticks
+    so long prompts cannot stall live streams (at most
+    ``prefill_chunks_per_tick`` chunks between decode ticks);
+  - **continuous decode** advances every decode-ready slot one token per
+    tick with per-slot positions — slots carry independent lengths and
+    recycle the moment a request finishes, returning their pages to the
+    pool (no wave barriers);
+  - **backpressure**: when the page pool cannot cover an admission or a
+    decode append, the request waits (admission) while live slots keep
+    decoding into their already-mapped pages.
+
+Both compiled callables come from one ``launch.steps.build_paged_step``
+function used at two shapes, so mixed prompt lengths never trigger a
+per-length recompile.
+
+The seed's wave-batched loop (one whole-prompt prefill per admission,
+lockstep decode over dense ``s_max`` caches) lives on as the measured
+baseline in ``launch.serve.serve`` / ``benchmarks/serve_bench.py``; this
+scheduler replaces it as the serving fast path, fixing the seed
+admission bug along the way (prompts are admitted at the chunk-rounded
+natural length, never the padded slot budget).
 """
 from __future__ import annotations
 
@@ -12,6 +36,8 @@ import dataclasses
 from typing import Any, Callable
 
 import numpy as np
+
+from repro.models.paging import GARBAGE_PAGE, PageAllocator, PagedConfig
 
 
 @dataclasses.dataclass
@@ -26,62 +52,173 @@ class Request:
 @dataclasses.dataclass
 class ServerConfig:
     batch_slots: int = 4
-    max_seq: int = 128
+    prefill_chunk: int = 8
+    paged: PagedConfig = dataclasses.field(default_factory=PagedConfig)
+    #: prefill chunks fed between consecutive decode ticks (keeps prompt
+    #: ingestion from starving live decode streams)
+    prefill_chunks_per_tick: int = 1
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    fed: int = 0          # prompt tokens already prefilled (chunk-rounded)
+    length: int = 0       # valid cache length (excludes padded chunk tail)
+    decoding: bool = False
 
 
 class Server:
-    """Drives (prefill_fn, decode_fn) over a request stream.
+    """Drives one compiled paged step over a request stream.
 
-    prefill_fn(tokens [1, s]) -> (next_token [1], caches-delta for slot)
-    decode_fn(tokens [B, 1], pos, caches) -> (next [B], caches)
+    paged_step_fn(tokens [b, s], start [b], table [b, mp], caches)
+        -> (greedy tokens [b, s], caches)
 
-    The cache plumbing is intentionally slot-batched: caches hold
-    `batch_slots` sequences; prefill writes one slot, decode advances all.
+    called at two shapes: (1, prefill_chunk) while prefilling and
+    (batch_slots, 1) for decode ticks.  The scheduler owns the page
+    allocator; the compiled step sees positions/tables as runtime data.
     """
 
-    def __init__(self, cfg: ServerConfig, prefill_fn: Callable,
-                 decode_fn: Callable, init_caches: Callable[[], Any]):
+    def __init__(self, cfg: ServerConfig, paged_step_fn: Callable,
+                 init_caches: Callable[[], Any]):
         self.cfg = cfg
-        self.prefill_fn = prefill_fn
-        self.decode_fn = decode_fn
+        self.step_fn = paged_step_fn
         self.caches = init_caches()
-        self.slots: list[Request | None] = [None] * cfg.batch_slots
+        self.alloc = PageAllocator(cfg.paged, cfg.batch_slots)
+        self.slots: list[_Slot | None] = [None] * cfg.batch_slots
         self.queue: list[Request] = []
         self.completed: list[Request] = []
+        self.ticks = 0
+
+    # -- bookkeeping -------------------------------------------------------
 
     def submit(self, req: Request):
+        # the slot's page table must cover BOTH the chunk-rounded prefill
+        # (admission reserves/writes whole chunks incl. the padded tail)
+        # and decode growth: each decode tick writes its input token's KV
+        # at `length`, touching natural + (max_new - 1) positions
+        need = max(self._chunk_rounded(len(req.prompt)),
+                   len(req.prompt) + max(0, req.max_new - 1))
+        if need > self.cfg.paged.max_seq:
+            raise ValueError(
+                f"request {req.rid}: {len(req.prompt)} prompt + "
+                f"{req.max_new} new tokens need {need} positions, over "
+                f"the page-table ceiling {self.cfg.paged.max_seq}")
         self.queue.append(req)
 
-    def _admit(self):
-        for i, s in enumerate(self.slots):
-            if s is None and self.queue:
-                req = self.queue.pop(0)
-                first, self.caches = self.prefill_fn(req.prompt, i, self.caches)
-                req.out.append(int(first))
-                self.slots[i] = req
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
 
-    def step(self):
-        """One scheduler tick: admit then advance decode one token."""
-        self._admit()
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+    def _chunk_rounded(self, n: int) -> int:
+        c = self.cfg.prefill_chunk
+        return -(-n // c) * c
+
+    # -- scheduling --------------------------------------------------------
+
+    def _admit(self):
+        """Fill free slots from the queue — reserving pages for the
+        chunk-rounded natural length only (the satellite fix: short
+        prompts stop paying the padded slot budget)."""
+        for i, s in enumerate(self.slots):
+            if s is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            rounded = self._chunk_rounded(len(req.prompt))
+            # reserve the prompt's pages up front so a half-prefilled
+            # prompt can never deadlock the pool mid-flight
+            if not self.alloc.ensure(i, rounded):
+                break  # backpressure: keep decoding, retry next tick
+            self.queue.pop(0)
+            self.slots[i] = _Slot(req=req)
+
+    def _prefill_some(self):
+        """Feed up to ``prefill_chunks_per_tick`` chunks (FCFS over
+        slots), each one a b=1 compiled step at the fixed chunk size."""
+        fed = 0
+        C = self.cfg.prefill_chunk
+        for i, s in enumerate(self.slots):
+            if fed >= self.cfg.prefill_chunks_per_tick:
+                break
+            if s is None or s.decoding:
+                continue
+            prompt = s.req.prompt
+            while s.fed < len(prompt) and fed < self.cfg.prefill_chunks_per_tick:
+                chunk = np.zeros((1, C), np.int32)
+                n_valid = min(C, len(prompt) - s.fed)
+                chunk[0, :n_valid] = prompt[s.fed: s.fed + n_valid]
+                table = self.alloc.table()[i: i + 1]
+                start = np.array([s.fed], np.int32)
+                toks, self.caches = self.step_fn(chunk, start, table,
+                                                 self.caches)
+                s.fed += C  # padded tail included; masked by `length`
+                s.length = min(s.fed, len(prompt))
+                fed += 1
+                if s.length == len(prompt):
+                    # first generated token = greedy pick at the last
+                    # VALID position of this (possibly padded) chunk
+                    first = int(np.asarray(toks)[0, n_valid - 1])
+                    s.req.out.append(first)
+                    if len(s.req.out) >= s.req.max_new:
+                        # max_new=1: done at prefill — no decode tick
+                        s.req.done = True
+                        self.completed.append(s.req)
+                        self.alloc.release(i)
+                        self.slots[i] = None
+                    else:
+                        s.decoding = True
+                    break
+
+    def _decode_tick(self) -> bool:
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and s.decoding]
         if not active:
             return False
-        tokens = np.zeros((self.cfg.batch_slots, 1), np.int32)
+        B = self.cfg.batch_slots
+        tokens = np.zeros((B, 1), np.int32)
+        start = np.zeros((B,), np.int32)
+        writing = []
         for i in active:
-            tokens[i, 0] = self.slots[i].out[-1]
-        nxt, self.caches = self.decode_fn(tokens, self.caches)
-        for i in active:
-            req = self.slots[i]
-            req.out.append(int(nxt[i]))
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self.completed.append(req)
+            s = self.slots[i]
+            # the appended token needs its page mapped; reserved prompt
+            # pages usually cover it, growth is page-at-a-time
+            if not self.alloc.ensure(i, s.length + 1):
+                continue  # pool exhausted: this slot skips a beat
+            tokens[i, 0] = s.req.out[-1]
+            start[i] = s.length
+            writing.append(i)
+        if not writing:
+            return True  # every live stream is back-pressured this tick
+        # slots NOT advancing this tick (free, mid-prefill, back-pressured)
+        # must not see their mapped pages: the batched scatter would land
+        # their dummy token at position `start` of a live sequence.  Route
+        # their rows to the garbage page instead.
+        table = self.alloc.table()
+        mask = np.ones((B,), bool)
+        mask[writing] = False
+        table[mask] = GARBAGE_PAGE
+        nxt, self.caches = self.step_fn(tokens, start, table, self.caches)
+        nxt = np.asarray(nxt)[:, 0]
+        for i in writing:
+            s = self.slots[i]
+            s.length += 1
+            s.req.out.append(int(nxt[i]))
+            if len(s.req.out) >= s.req.max_new:
+                s.req.done = True
+                self.completed.append(s.req)
+                self.alloc.release(i)   # pages return to the pool
                 self.slots[i] = None
         return True
 
-    def run_until_drained(self, max_ticks: int = 1000):
-        ticks = 0
-        while (self.queue or any(self.slots)) and ticks < max_ticks:
+    def step(self):
+        """One scheduler tick: admit, feed prefill chunks, decode tick."""
+        self._admit()
+        self._prefill_some()
+        decoded = self._decode_tick()
+        self.ticks += 1
+        return decoded or any(s is not None for s in self.slots)
+
+    def run_until_drained(self, max_ticks: int = 10000) -> int:
+        t0 = self.ticks
+        while self.busy and self.ticks - t0 < max_ticks:
             self.step()
-            ticks += 1
-        return ticks
+        return self.ticks - t0

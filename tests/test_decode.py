@@ -68,6 +68,172 @@ def test_decode_matches_forward(arch):
                                rtol=5e-3, atol=5e-3)
 
 
+# ---------------------------------------------------------------------------
+# Paged KV caches: block-paged decode must reproduce the dense path.
+# ---------------------------------------------------------------------------
+
+PAGED_ARCHS = ["llama3-8b", "deepseek-v3-671b"]  # attn-cache + MLA-latent
+
+
+def _paged_step_fn(cfg, ctx, mesh):
+    def step(p, tok, start, table, caches):
+        return lm.paged_step(ctx, cfg, p, tok, start, table, caches)
+
+    return jax.jit(shard_map(step, mesh=mesh,
+                             in_specs=(P(), P(), P(), P(), P()),
+                             out_specs=(P(), P()), check_vma=True))
+
+
+def _paged_cfg():
+    from repro.models.paging import PagedConfig
+
+    return PagedConfig(page_size=4, num_pages=16, pages_per_slot=4)
+
+
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_paged_decode_matches_dense_mixed_lengths(arch):
+    """Per-slot lengths differ; every valid position's logits must match
+    the dense token-by-token decode."""
+    from repro.models.paging import PageAllocator
+
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    mesh = TOPO1.build(jax.devices()[:1])
+    ctx = make_context(TOPO1)
+    B, S = 2, 12
+    S1 = S - 5  # slot 1 stops early: independent lengths
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    ref = _decode_logits_seq(cfg, params, tokens, s_max=S + 4)
+
+    pcfg = _paged_cfg()
+    alloc = PageAllocator(pcfg, slots=B)
+    caches, _ = lm.init_paged_caches(cfg, ctx, pcfg, dtype=jnp.float32)
+    g = _paged_step_fn(cfg, ctx, mesh)
+    outs = []
+    for t in range(S):
+        live1 = t < S1
+        alloc.ensure(0, t + 1)
+        if live1:
+            alloc.ensure(1, t + 1)
+        tok = np.zeros((B, 1), np.int32)
+        tok[0, 0] = int(tokens[0, t])
+        tok[1, 0] = int(tokens[1, t]) if live1 else 0
+        start = np.array([t, t if live1 else 0], np.int32)
+        table = alloc.table()
+        if not live1:   # inactive slot writes route to the garbage page
+            table[1, :] = 0
+        logits, caches = g(params, jnp.asarray(tok), jnp.asarray(start),
+                           jnp.asarray(table), caches)
+        outs.append(logits[:, 0])
+    outs = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(ref[0]),
+                               rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(outs[1, :S1]),
+                               np.asarray(ref[1, :S1]),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_paged_prefill_chunks_match_full_forward(arch):
+    """b=1 chunked prefill through the page pool == full-sequence logits
+    (one compiled step reused across chunk starts)."""
+    from repro.models.paging import PageAllocator
+
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    mesh = TOPO1.build(jax.devices()[:1])
+    ctx = make_context(TOPO1)
+    S, C = 12, 4
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0,
+                                cfg.vocab_size)
+    full = _forward_logits_all(cfg, params, tokens)
+
+    pcfg = _paged_cfg()
+    alloc = PageAllocator(pcfg, slots=1)
+    alloc.ensure(0, S)
+    caches, _ = lm.init_paged_caches(cfg, ctx, pcfg, dtype=jnp.float32)
+    g = _paged_step_fn(cfg, ctx, mesh)
+    got = []
+    for c0 in range(0, S, C):
+        logits, caches = g(params, tokens[:, c0: c0 + C],
+                           jnp.asarray(np.array([c0], np.int32)),
+                           jnp.asarray(alloc.table()), caches)
+        got.append(logits)
+    got = jnp.concatenate(got, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_page_table_reuse_after_slot_recycle():
+    """Pages released by a finished request and re-mapped to a new one
+    must serve the new sequence exactly (stale contents fully masked)."""
+    from repro.models.paging import PageAllocator
+
+    cfg = get_config("llama3-8b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    mesh = TOPO1.build(jax.devices()[:1])
+    ctx = make_context(TOPO1)
+    S = 8
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab_size)
+    t2 = jax.random.randint(jax.random.PRNGKey(2), (1, S), 0, cfg.vocab_size)
+    ref2 = _forward_logits_all(cfg, params, t2)
+
+    pcfg = _paged_cfg()
+    alloc = PageAllocator(pcfg, slots=1)
+    caches, _ = lm.init_paged_caches(cfg, ctx, pcfg, dtype=jnp.float32)
+    g = _paged_step_fn(cfg, ctx, mesh)
+    # request 1 occupies pages, then recycles
+    alloc.ensure(0, S)
+    pages_first = alloc.slot_pages(0)
+    _, caches = g(params, t1, jnp.asarray(np.zeros(1, np.int32)),
+                  jnp.asarray(alloc.table()), caches)
+    alloc.release(0)
+    # request 2 receives the SAME physical pages (LIFO free list)
+    alloc.ensure(0, S)
+    assert set(alloc.slot_pages(0)) == set(pages_first)
+    logits, caches = g(params, t2, jnp.asarray(np.zeros(1, np.int32)),
+                       jnp.asarray(alloc.table()), caches)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref2),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_decode_plan_knobs_thread_resolve_ctx():
+    """The decode sub-plan's mesh-neutral knobs reach the decode context
+    (and ONLY the decode context) through the resolve_ctx funnel."""
+    from repro.core.atp import DecodePlan, SegmentPlan
+    from repro.core.plan import ParallelPlan
+    from repro.launch.steps import resolve_ctx
+
+    plan = ParallelPlan(
+        d1=2, d2=2, chunks=4, boundary_mode="ring", seq_parallel=True,
+        segments=(SegmentPlan("dense", chunks=4, boundary_mode="ring",
+                              seq_parallel=True),),
+        decode=DecodePlan(d1=4, d2=1, boundary_mode="psum"))
+    train_ctx = resolve_ctx(None, plan)
+    assert (train_ctx.chunks, train_ctx.boundary_mode) == (4, "ring")
+    assert train_ctx.for_segment("dense").seq_parallel is True
+    dec_ctx = resolve_ctx(None, plan, decode=True)
+    # decode sub-plan knobs replace the train knobs in every view...
+    assert (dec_ctx.chunks, dec_ctx.boundary_mode) == (1, "psum")
+    seg = dec_ctx.for_segment("dense")
+    assert (seg.chunks, seg.boundary_mode, seg.seq_parallel) == \
+        (1, "psum", False)
+    # ...but the mesh stays the plan's: re-meshing is decode_view's job
+    assert (dec_ctx.d1, dec_ctx.d2) == (2, 2)
+    view = plan.decode_view()
+    assert (view.d1, view.d2) == (4, 1)
+    vctx = resolve_ctx(None, view, decode=True)
+    assert (vctx.d1, vctx.d2) == (4, 1)
+    assert vctx.boundary_mode == "psum" and vctx.chunks == 1
+
+
 def test_prefill_into_cache_matches_stepwise():
     """Multi-token decode_step (serving prefill) == token-by-token."""
     cfg = get_config("llama3-8b").reduced()

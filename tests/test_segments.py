@@ -81,11 +81,12 @@ def test_v1_fixture_loads_and_broadcasts_global_knobs():
     assert ctx.for_segment("moe").chunks == 4
 
 
-def test_v1_fixture_roundtrips_as_v2():
+def test_v1_fixture_roundtrips_as_current():
     plan = ParallelPlan.load(V1_FIXTURE)
     d = plan.to_dict()
-    assert d["format_version"] == PLAN_FORMAT_VERSION == 2
+    assert d["format_version"] == PLAN_FORMAT_VERSION == 3
     assert d["segments"] == []
+    assert d["decode"] is None       # v1 files carry no decode sub-plan
     assert ParallelPlan.from_dict(d) == plan
 
 

@@ -1,0 +1,391 @@
+"""Serving fast path: page allocator, continuous-batching scheduler,
+latency-aware decode search, DecodePlan schema (format_version 3), and
+the chunked-overlap calibration feed."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import comm_matrix
+from repro.core.atp import DecodePlan, SegmentPlan
+from repro.core.calibrate import CalibEntry, CalibrationTable
+from repro.core.cost_model import (LayerCommProfile, SegmentWorkload,
+                                   t_comm_decode)
+from repro.core.plan import PLAN_FORMAT_VERSION, ParallelPlan, plan_search
+from repro.core.search import (search_strategy_decode,
+                               search_strategy_overlap,
+                               search_strategy_segments)
+from repro.models.paging import GARBAGE_PAGE, PageAllocator, PagedConfig
+from repro.runtime.server import Request, Server, ServerConfig
+
+GPT = LayerCommProfile.gpt(4096)
+WORKLOADS = (SegmentWorkload("dense", 24, GPT),)
+
+
+# ---------------------------------------------------------------------------
+# Page allocator (host-side bookkeeping).
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_ensure_release_cycle():
+    cfg = PagedConfig(page_size=4, num_pages=9, pages_per_slot=4)
+    a = PageAllocator(cfg, slots=2)
+    assert a.free_pages == 8            # page 0 is reserved
+    assert a.ensure(0, 9)               # 3 pages
+    assert len(a.slot_pages(0)) == 3
+    assert a.ensure(0, 9)               # idempotent
+    assert len(a.slot_pages(0)) == 3
+    assert a.ensure(1, 16)              # 4 pages
+    assert a.free_pages == 1
+    assert a.ensure(0, 13)              # 3 -> 4 pages: takes the last one
+    assert a.free_pages == 0
+    a.release(0)
+    assert a.free_pages == 4
+    t = a.table()
+    assert (t[0] == GARBAGE_PAGE).all()
+    assert (t[1] != GARBAGE_PAGE).all()
+
+
+def test_allocator_table_width_guard():
+    cfg = PagedConfig(page_size=4, num_pages=32, pages_per_slot=2)
+    a = PageAllocator(cfg, slots=1)
+    with pytest.raises(ValueError, match="pages_per_slot"):
+        a.ensure(0, 9)
+
+
+def test_paged_config_geometry():
+    cfg = PagedConfig(page_size=8, num_pages=16, pages_per_slot=4)
+    assert cfg.max_seq == 32
+    assert cfg.capacity_tokens == 120
+    assert cfg.pages_for(1) == 1 and cfg.pages_for(8) == 1
+    assert cfg.pages_for(9) == 2
+    with pytest.raises(ValueError):
+        PagedConfig(page_size=0)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching scheduler (fake compiled step: no jax needed).
+# ---------------------------------------------------------------------------
+
+
+class _FakeStep:
+    """Greedy model stub: next token = (last input token + 1) % 1000.
+    Records every call so tests can assert the schedule."""
+
+    def __init__(self):
+        self.calls = []
+
+    def __call__(self, tokens, start, table, caches):
+        self.calls.append((tokens.shape, tuple(int(s) for s in start)))
+        return (tokens + 1) % 1000, caches
+
+
+def _server(slots=2, chunk=4, pages=64, page=4, per_slot=8, **kw):
+    scfg = ServerConfig(
+        batch_slots=slots, prefill_chunk=chunk,
+        paged=PagedConfig(page_size=page, num_pages=pages,
+                          pages_per_slot=per_slot), **kw)
+    fake = _FakeStep()
+    return Server(scfg, fake, lambda: None), fake
+
+
+def test_scheduler_chunked_admission_and_completion():
+    server, fake = _server()
+    server.submit(Request(rid=0, prompt=np.arange(10, dtype=np.int32),
+                          max_new=3))
+    ticks = server.run_until_drained()
+    assert ticks > 0 and len(server.completed) == 1
+    out = server.completed[0].out
+    # stub: first token = last prompt token (9) + 1; decode feeds back
+    assert out == [10, 11, 12]
+    # 10-token prompt at chunk 4 = 3 prefill chunks (b=1) + 2 decode ticks
+    prefills = [c for c in fake.calls if c[0] == (1, 4)]
+    decodes = [c for c in fake.calls if c[0] == (2, 1)]
+    assert len(prefills) == 3 and len(decodes) == 2
+    # chunk starts are chunk-rounded natural positions, not slot budgets
+    assert [c[1][0] for c in prefills] == [0, 4, 8]
+    # pages: chunk-rounded 10 -> 12 tokens -> 3 pages, all released
+    assert server.alloc.free_pages == 63
+
+
+def test_scheduler_interleaves_prefill_with_decode():
+    """A long admission must not stall a live decode stream: at most
+    prefill_chunks_per_tick chunks run between decode ticks."""
+    server, fake = _server(slots=2, chunk=4)
+    server.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                          max_new=4))
+    server.step()   # r0 prefills (1 chunk) and starts decoding
+    server.submit(Request(rid=1, prompt=np.arange(16, dtype=np.int32),
+                          max_new=2))
+    server.run_until_drained()
+    assert [r.rid for r in server.completed] == [0, 1]
+    # liveness: while request 0 is decoding, every one of request 1's
+    # prefill chunks is followed by a decode tick before the next chunk
+    # (prefill_chunks_per_tick=1).  r0 contributes 3 decode ticks (max_new
+    # 4, first token from prefill); back-to-back chunks may only appear
+    # after those are done.
+    kinds = "".join("P" if c[0] == (1, 4) else "D" for c in fake.calls)
+    first_pp = kinds.find("PP")
+    assert first_pp == -1 or kinds[:first_pp + 1].count("D") >= 3, kinds
+
+
+def test_scheduler_backpressure_defers_admission():
+    """With a pool that only fits one request, the second waits but the
+    server still drains (no deadlock, no corruption)."""
+    server, _ = _server(slots=2, chunk=4, pages=3, page=4)  # 2 usable pages
+    server.submit(Request(rid=0, prompt=np.arange(6, dtype=np.int32),
+                          max_new=2))
+    server.submit(Request(rid=1, prompt=np.arange(6, dtype=np.int32),
+                          max_new=2))
+    server.run_until_drained()
+    assert sorted(r.rid for r in server.completed) == [0, 1]
+    assert server.alloc.free_pages == 2
+
+
+def test_scheduler_rejects_oversized_request():
+    server, _ = _server(per_slot=2, page=4)   # ceiling: 8 positions
+    with pytest.raises(ValueError, match="ceiling"):
+        server.submit(Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                              max_new=4))
+
+
+def test_scheduler_rejects_chunk_rounded_overflow():
+    """Admission writes whole chunks: a prompt whose CHUNK-ROUNDED length
+    exceeds the table ceiling must be rejected at submit, not crash the
+    scheduler mid-tick."""
+    server, _ = _server(chunk=8, page=4, per_slot=3)   # ceiling: 12
+    with pytest.raises(ValueError, match="ceiling"):
+        server.submit(Request(rid=0, prompt=np.arange(9, dtype=np.int32),
+                              max_new=2))              # rounds to 16 > 12
+
+
+def test_scheduler_max_new_one_completes_at_prefill():
+    """max_new=1 finishes at the prefill pick: exactly one token, no
+    decode tick, and a ceiling-length prompt stays in bounds."""
+    server, fake = _server(chunk=4, page=4, per_slot=3)  # ceiling: 12
+    server.submit(Request(rid=0, prompt=np.arange(12, dtype=np.int32),
+                          max_new=1))
+    server.run_until_drained()
+    assert [r.out for r in server.completed] == [[12]]
+    assert all(c[0] == (1, 4) for c in fake.calls)   # prefill chunks only
+    assert server.alloc.free_pages == 63
+
+
+def test_scheduler_mixed_lengths_independent_positions():
+    server, fake = _server(slots=3, chunk=4)
+    for rid, n in enumerate((3, 9, 5)):
+        server.submit(Request(rid=rid, prompt=np.arange(n, dtype=np.int32),
+                              max_new=3))
+    server.run_until_drained()
+    outs = {r.rid: r.out for r in server.completed}
+    assert outs[0] == [3, 4, 5]      # last prompt token 2 -> 3...
+    assert outs[1] == [9, 10, 11]
+    assert outs[2] == [5, 6, 7]
+    # decode ticks carried per-slot starts (not one lockstep position)
+    starts = {c[1] for c in fake.calls if c[0] == (3, 1)}
+    assert any(len(set(s)) > 1 for s in starts), starts
+
+
+# ---------------------------------------------------------------------------
+# Latency-aware decode cost model + search.
+# ---------------------------------------------------------------------------
+
+
+def test_decode_cost_degenerate_dims_drop_collectives():
+    m = comm_matrix.ic4_ib_cluster_16gpu()
+    row_only = t_comm_decode(m, 16, 1, workloads=WORKLOADS, batch=8)
+    col_only = t_comm_decode(m, 1, 16, workloads=WORKLOADS, batch=8)
+    both = t_comm_decode(m, 4, 4, workloads=WORKLOADS, batch=8)
+    assert row_only.collectives == col_only.collectives == 24
+    assert both.collectives == 48    # two boundary families per layer
+    # fewer launches: a degenerate factorization halves fixed overheads
+    assert row_only.t_launch == pytest.approx(both.t_launch / 2)
+    # GPT row volume (2h) < col volume (7h): (16,1) beats (1,16) on bytes
+    assert row_only.t_bytes < col_only.t_bytes
+
+
+def test_decode_prefers_psum_over_ring_steps():
+    """O(log d) monolithic psum beats the O(d) ring under the latency
+    model — the opposite pressure from training's bandwidth ranking."""
+    m = comm_matrix.ic4_ib_cluster_16gpu()
+    c = t_comm_decode(m, 16, 1, workloads=WORKLOADS, batch=8)
+    assert c.boundary_mode == "psum"
+    ring = t_comm_decode(m, 16, 1, workloads=WORKLOADS, batch=8,
+                         boundary_mode="ring")
+    assert c.t_step < ring.t_step
+
+
+def test_decode_objective_differs_from_train_on_ic4():
+    """The acceptance pin: flat IB at tp=16 — training balances payload
+    across (8,2); decode folds everything into one boundary (16,1)."""
+    m = comm_matrix.ic4_ib_cluster_16gpu()
+    dec = search_strategy_decode(m, 16, workloads=WORKLOADS, batch=8)
+    tr = search_strategy_segments(m, 16, workloads=WORKLOADS,
+                                  batch=256, seq=4096)
+    assert tr.mesh() == (8, 2)
+    assert dec.mesh() == (16, 1)
+    assert dec.mesh() != tr.mesh()
+
+
+def test_decode_ranking_sorted_and_alpha_dominated():
+    m = comm_matrix.ic1_pcie_8gpu()
+    dec = search_strategy_decode(m, 8, workloads=WORKLOADS, batch=8)
+    ts = [c.t_step for c in dec.ranked]
+    assert ts == sorted(ts)
+    # decode is latency-bound: launch+alpha outweigh the byte term for
+    # every factorization (training is the mirror image at seq=4096)
+    assert all(c.t_launch + c.t_alpha > c.t_bytes for c in dec.ranked)
+
+
+def test_decode_search_uses_calibrated_alpha():
+    """A huge measured per-step latency on one factorization must demote
+    it below the analytic ranking."""
+    m = comm_matrix.ic4_ib_cluster_16gpu()
+    base = search_strategy_decode(m, 16, workloads=WORKLOADS, batch=8)
+    assert base.mesh() == (16, 1)
+    slow = CalibrationTable(entries=(
+        ((16, 1), CalibEntry(b1=25.0, b2=float("inf"), alpha_s=1.0)),))
+    steered = search_strategy_decode(m, 16, workloads=WORKLOADS, batch=8,
+                                     calibration=slow)
+    assert steered.mesh() != (16, 1)
+
+
+def test_axis_alpha_factors_span_slowest_layer():
+    m = comm_matrix.ic1_pcie_8gpu()   # socket 8x / switch 3x / gpu 2x
+    a1, a2 = m.axis_alpha_factors(1, 2)
+    assert (a1, a2) == (1.0, 2.0)     # innermost only
+    a1, a2 = m.axis_alpha_factors(2, 4)
+    assert (a1, a2) == (8.0, 3.0)     # d1 spans the socket layer
+    a1, a2 = m.axis_alpha_factors(8, 1)
+    assert (a1, a2) == (8.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# DecodePlan schema (format_version 3) + migration discipline.
+# ---------------------------------------------------------------------------
+
+
+def test_decode_plan_validation():
+    with pytest.raises(ValueError, match="chunks=1"):
+        DecodePlan(d1=2, d2=2, chunks=4)
+    with pytest.raises(ValueError, match="boundary_mode"):
+        DecodePlan(d1=2, d2=2, boundary_mode="nope")
+    with pytest.raises(ValueError, match=">= 1"):
+        DecodePlan(d1=0, d2=2)
+
+
+def test_plan_search_attaches_decode_subplan():
+    res = plan_search("ic4", 16, layers=24, batch=256, seq=4096,
+                      profile=GPT, decode_batch=8)
+    assert all(p.decode is not None for p in res.ranked)
+    best = res.best
+    assert (best.decode.d1, best.decode.d2) == (16, 1)
+    assert (best.d1, best.d2) == (8, 2)
+    assert best.decode.predicted_t_step > 0
+    assert any(k == "decode" for k, _ in best.provenance)
+    # decode sub-plan survives the JSON round trip exactly
+    q = ParallelPlan.from_json(best.to_json())
+    assert q == best and q.decode == best.decode
+
+
+def test_plan_search_without_decode_batch_has_no_subplan():
+    res = plan_search("ic4", 16, layers=24, batch=256, seq=4096, profile=GPT)
+    assert all(p.decode is None for p in res.ranked)
+    assert res.best.decode_view() is res.best
+
+
+def test_v2_fixture_still_loads(tmp_path):
+    """PR-3-era format_version 2 files load under v3: segments intact,
+    decode sub-plan absent (pre-v3 behavior: serve with train knobs)."""
+    plan = ParallelPlan.load("tests/data/plan_v2_pr3.json")
+    assert plan.decode is None
+    assert [s.kind for s in plan.segments] == ["dense", "moe"]
+    assert plan.segment_plan("dense").seq_parallel is True
+    assert plan.calibration.alpha(2, 2) == 2e-06
+    # round-trips at the CURRENT version with decode recorded as null
+    d = plan.to_dict()
+    assert d["format_version"] == PLAN_FORMAT_VERSION == 3
+    assert d["decode"] is None
+    assert ParallelPlan.from_dict(d) == plan
+
+
+def test_newer_format_version_fails_loudly():
+    d = ParallelPlan(d1=2, d2=2).to_dict()
+    d["format_version"] = PLAN_FORMAT_VERSION + 1
+    with pytest.raises(ValueError, match="format_version"):
+        ParallelPlan.from_dict(d)
+
+
+def test_decode_view_collapses_knobs():
+    plan = ParallelPlan(
+        d1=2, d2=4, dp=2, chunks=4, boundary_mode="ring", seq_parallel=True,
+        segments=(SegmentPlan("dense", chunks=4, boundary_mode="ring",
+                              seq_parallel=True),
+                  SegmentPlan("moe", chunks=2, boundary_mode="ring")),
+        decode=DecodePlan(d1=8, d2=1, boundary_mode="psum"))
+    v = plan.decode_view()
+    assert (v.d1, v.d2, v.dp) == (8, 1, 2)
+    assert v.tp == plan.tp            # same device budget, re-factored
+    assert (v.chunks, v.boundary_mode, v.seq_parallel) == (1, "psum", False)
+    assert all((s.chunks, s.boundary_mode, s.seq_parallel)
+               == (1, "psum", False) for s in v.segments)
+    assert [s.kind for s in v.segments] == ["dense", "moe"]
+    assert v.decode == plan.decode    # kept for audit
+    assert any(k == "decode_view" for k, _ in v.provenance)
+
+
+# ---------------------------------------------------------------------------
+# Chunked-overlap calibration feed (satellite: ROADMAP open item).
+# ---------------------------------------------------------------------------
+
+
+def _all_factorizations_table(entry):
+    return CalibrationTable(entries=tuple(
+        ((d1, d2), entry) for d1, d2 in
+        ((1, 16), (2, 8), (4, 4), (8, 2), (16, 1))))
+
+
+def test_slow_measured_chunk_path_steers_search_to_one():
+    m = comm_matrix.ic4_ib_cluster_16gpu()
+    kw = dict(layers=24, batch=64, seq=2048, profile=GPT, peak_tflops=5.0,
+              algo="ring", alpha_s=2e-6, chunks_options=(1, 2, 4),
+              seq_parallel_options=(False,))
+    base = search_strategy_overlap(m, 16, **kw)
+    assert base.best.chunks > 1       # the analytic model loves chunking
+    slow = _all_factorizations_table(CalibEntry(
+        b1=25.0, b2=25.0, chunk_eff=((2, 0.05, 0.05), (4, 0.05, 0.05))))
+    steered = search_strategy_overlap(m, 16, calibration=slow, **kw)
+    assert steered.best.chunks == 1
+    # a free measured chunk path (eff=1.0) leaves the choice alone
+    free = _all_factorizations_table(CalibEntry(
+        b1=25.0, b2=25.0, chunk_eff=((2, 1.0, 1.0), (4, 1.0, 1.0))))
+    kept = search_strategy_overlap(m, 16, calibration=free, **kw)
+    assert kept.best.chunks == base.best.chunks
+
+
+def test_chunk_eff_json_round_trip():
+    e = CalibEntry(b1=3.0, b2=7.0, alpha_s=1e-6,
+                   chunk_eff=((2, 0.9, 0.8), (4, 0.7, 0.6)))
+    t = CalibrationTable(entries=(((2, 2), e),))
+    s = json.dumps(t.to_dict())
+    back = CalibrationTable.from_dict(json.loads(s))
+    assert back == t
+    assert back.chunk_efficiency(2, 2) == {2: (0.9, 0.8), 4: (0.7, 0.6)}
+    assert back.chunk_efficiency(4, 1) is None
+
+
+def test_measured_chunk_eff_reaches_table():
+    """calibrate_mesh's injectable measure path carries chunk_eff through
+    merge + JSON exactly like the bandwidth fields."""
+    from repro.core.calibrate import calibrate_mesh
+
+    def fake_measure(d1, d2):
+        return CalibEntry(b1=float(d1), b2=float(d2),
+                          chunk_eff=((2, 0.5, 0.5), (4, 0.25, 0.25)))
+
+    t = calibrate_mesh(4, measure=fake_measure)
+    assert t.chunk_efficiency(2, 2) == {2: (0.5, 0.5), 4: (0.25, 0.25)}
+    merged = t.merged(CalibrationTable(entries=(
+        ((2, 2), CalibEntry(b1=9.0, b2=9.0)),)))
+    assert merged.chunk_efficiency(2, 2) is None   # fresher entry wins
+    assert merged.chunk_efficiency(4, 1) == {2: (0.5, 0.5), 4: (0.25, 0.25)}
