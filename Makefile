@@ -6,8 +6,10 @@ XLA_DEVICES ?= 8
 # -> execute must agree bit-for-bit), the heterogeneous-segment gate
 # (per-segment knobs reach execution on a mixed dense+MoE stack), the
 # elastic-restart gate (failure -> shrink -> recalibrate -> re-search ->
-# resharded restore -> loss continuity) and the serving gate (decode-
-# searched plan -> paged continuous batching -> wave-loop token parity).
+# resharded restore -> loss continuity), the serving gate (decode-
+# searched plan -> paged continuous batching -> wave-loop token parity)
+# and the bench-baseline replay (checked-in BENCH_*.json metrics must not
+# regress >10%).
 .PHONY: test
 test:
 	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
@@ -17,6 +19,7 @@ test:
 	$(MAKE) segment-smoke
 	$(MAKE) elastic-smoke
 	$(MAKE) serve-smoke
+	$(MAKE) bench-regress
 
 .PHONY: plan-smoke
 plan-smoke:
@@ -52,6 +55,21 @@ bench-serve:
 bench-overlap:
 	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
 	$(PYTHON) -m benchmarks.overlap_bench
+
+.PHONY: bench-quant
+bench-quant:
+	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	$(PYTHON) -m benchmarks.quant_bench
+
+# Replay the checked-in bench baselines (benchmarks/baselines.json)
+# against whatever BENCH_*.json artifacts exist; >10% regression on a
+# tracked ratio or any flipped invariant fails.  Re-pin with
+#   PYTHONPATH=src $(PYTHON) -m benchmarks.bench_regress --freeze
+.PHONY: bench-regress
+bench-regress:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	$(PYTHON) -m benchmarks.bench_regress
 
 .PHONY: bench
 bench:

@@ -1,0 +1,134 @@
+"""Replay checked-in bench baselines and fail on >10% regression.
+
+    PYTHONPATH=src python -m benchmarks.bench_regress            # replay
+    PYTHONPATH=src python -m benchmarks.bench_regress --freeze   # re-pin
+
+Replay reads each BENCH_*.json artifact at the repo root and compares the
+tracked metrics against ``benchmarks/baselines.json``:
+
+  - ``ratio`` metrics (higher is better, deterministic byte/volume
+    ratios — NOT wall-clock timings, which are too noisy on shared CI
+    hosts) fail when the current value drops below 0.9x the baseline;
+  - ``flag`` metrics are pinned invariants (token parity, the search
+    flip) and fail on ANY change from the baseline.
+
+A missing BENCH artifact skips its metrics (benches are not re-run
+here — ``make bench`` produces the artifacts), so ``make test`` stays
+green on a fresh checkout; a missing baselines.json fails loudly since
+that file is checked in.
+"""
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")
+
+#: bench artifact -> tracked metrics (path into the JSON, kind)
+TRACKED = {
+    "BENCH_overlap.json": [
+        ("summary.ax1_boundary_reduction_x", "ratio"),
+    ],
+    "BENCH_serve.json": [
+        ("summary.cache_bytes_ratio", "ratio"),
+        ("summary.token_parity", "flag"),
+    ],
+    "BENCH_quant.json": [
+        ("summary.wire_bytes_ratio", "ratio"),
+        ("summary.pool_bytes_ratio", "ratio"),
+        ("summary.greedy_parity", "flag"),
+        ("summary.search_flips_mesh", "flag"),
+    ],
+}
+
+TOLERANCE = 0.9   # current ratio must stay >= 90% of the frozen baseline
+
+
+def _lookup(doc, path):
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _collect():
+    """{artifact: {path: value}} for every artifact present on disk."""
+    out = {}
+    for fname, metrics in TRACKED.items():
+        fpath = os.path.join(ROOT, fname)
+        if not os.path.exists(fpath):
+            continue
+        with open(fpath) as fh:
+            doc = json.load(fh)
+        vals = {}
+        for path, kind in metrics:
+            v = _lookup(doc, path)
+            if v is None:
+                print(f"ERROR: {fname} is missing tracked metric {path}")
+                sys.exit(2)
+            vals[path] = v
+        out[fname] = vals
+    return out
+
+
+def freeze() -> None:
+    current = _collect()
+    if not current:
+        print("no BENCH_*.json artifacts found; run the benches first")
+        sys.exit(2)
+    with open(BASELINES, "w") as fh:
+        json.dump(current, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"froze {sum(len(v) for v in current.values())} metrics from "
+          f"{len(current)} artifacts -> {os.path.relpath(BASELINES)}")
+
+
+def replay() -> None:
+    if not os.path.exists(BASELINES):
+        print(f"ERROR: {BASELINES} is missing (it is checked in; "
+              f"re-pin with --freeze)")
+        sys.exit(2)
+    with open(BASELINES) as fh:
+        base = json.load(fh)
+    current = _collect()
+    kinds = {p: k for ms in TRACKED.values() for p, k in ms}
+    failures, checked, skipped = [], 0, 0
+    for fname, metrics in base.items():
+        if fname not in current:
+            skipped += len(metrics)
+            print(f"skip {fname}: artifact not present")
+            continue
+        for path, frozen in metrics.items():
+            got = current[fname].get(path)
+            checked += 1
+            if kinds.get(path) == "flag":
+                ok = got == frozen
+                verdict = "ok" if ok else f"FLIPPED (was {frozen!r})"
+            else:
+                ok = float(got) >= TOLERANCE * float(frozen)
+                verdict = ("ok" if ok else
+                           f"REGRESSED >{(1 - TOLERANCE) * 100:.0f}% "
+                           f"(baseline {frozen})")
+            print(f"{'ok  ' if ok else 'FAIL'} {fname}:{path} = {got}"
+                  f"  [{verdict}]")
+            if not ok:
+                failures.append(f"{fname}:{path}")
+    print(f"bench-regress: {checked} checked, {skipped} skipped, "
+          f"{len(failures)} failed")
+    if failures:
+        sys.exit(1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--freeze", action="store_true",
+                    help="re-pin baselines.json from the current artifacts")
+    args = ap.parse_args()
+    freeze() if args.freeze else replay()
+
+
+if __name__ == "__main__":
+    main()

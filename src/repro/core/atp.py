@@ -94,6 +94,9 @@ class SegmentPlan:
     chunks: int = 1
     boundary_mode: str = "psum"
     seq_parallel: bool = False
+    #: boundary-collective payload dtype (plan format_version 4): "bf16"
+    #: full width, "int8"/"fp8" quantized wire (overlap.WIRE_DTYPES)
+    wire_dtype: str = "bf16"
 
     def __post_init__(self):
         if self.chunks < 1:
@@ -103,22 +106,29 @@ class SegmentPlan:
             raise ValueError(
                 f"segment {self.kind!r}: boundary_mode must be 'psum' or "
                 f"'ring', got {self.boundary_mode!r}")
+        if self.wire_dtype not in overlap.WIRE_DTYPES:
+            raise ValueError(
+                f"segment {self.kind!r}: wire_dtype must be one of "
+                f"{overlap.WIRE_DTYPES}, got {self.wire_dtype!r}")
 
     def describe(self) -> str:
         sp = "+sp" if self.seq_parallel else ""
-        return f"{self.kind}:ck{self.chunks}{self.boundary_mode}{sp}"
+        wd = "" if self.wire_dtype == "bf16" else f"@{self.wire_dtype}"
+        return f"{self.kind}:ck{self.chunks}{self.boundary_mode}{sp}{wd}"
 
     def to_dict(self) -> dict:
         return {"kind": self.kind, "chunks": self.chunks,
                 "boundary_mode": self.boundary_mode,
-                "seq_parallel": self.seq_parallel}
+                "seq_parallel": self.seq_parallel,
+                "wire_dtype": self.wire_dtype}
 
     @staticmethod
     def from_dict(d) -> "SegmentPlan":
         return SegmentPlan(kind=str(d["kind"]),
                            chunks=int(d.get("chunks", 1)),
                            boundary_mode=d.get("boundary_mode", "psum"),
-                           seq_parallel=bool(d.get("seq_parallel", False)))
+                           seq_parallel=bool(d.get("seq_parallel", False)),
+                           wire_dtype=d.get("wire_dtype", "bf16"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,6 +154,8 @@ class DecodePlan:
     d2: int
     boundary_mode: str = "psum"
     chunks: int = 1
+    #: boundary wire dtype for decode steps (format_version 4)
+    wire_dtype: str = "bf16"
     #: modelled seconds per generated token behind the choice (provenance)
     predicted_t_step: float | None = None
 
@@ -159,17 +171,23 @@ class DecodePlan:
             raise ValueError(
                 f"decode boundary_mode must be 'psum' or 'ring', got "
                 f"{self.boundary_mode!r}")
+        if self.wire_dtype not in overlap.WIRE_DTYPES:
+            raise ValueError(
+                f"decode wire_dtype must be one of {overlap.WIRE_DTYPES}, "
+                f"got {self.wire_dtype!r}")
 
     @property
     def tp(self) -> int:
         return self.d1 * self.d2
 
     def describe(self) -> str:
-        return f"decode[({self.d1},{self.d2}) {self.boundary_mode}]"
+        wd = "" if self.wire_dtype == "bf16" else f" @{self.wire_dtype}"
+        return f"decode[({self.d1},{self.d2}) {self.boundary_mode}{wd}]"
 
     def to_dict(self) -> dict:
         return {"d1": self.d1, "d2": self.d2,
                 "boundary_mode": self.boundary_mode, "chunks": self.chunks,
+                "wire_dtype": self.wire_dtype,
                 "predicted_t_step": self.predicted_t_step}
 
     @staticmethod
@@ -178,6 +196,7 @@ class DecodePlan:
         return DecodePlan(d1=int(d["d1"]), d2=int(d["d2"]),
                           boundary_mode=d.get("boundary_mode", "psum"),
                           chunks=int(d.get("chunks", 1)),
+                          wire_dtype=d.get("wire_dtype", "bf16"),
                           predicted_t_step=(None if ts is None
                                             else float(ts)))
 
@@ -203,6 +222,7 @@ class ATPContext:
     chunks: int = 1           # chunk-based overlapping factor (paper §4.1)
     boundary_mode: Literal["psum", "ring"] = "psum"  # see module docstring
     seq_parallel: bool = False  # block I/O [Shard(seq)@ax1, Shard(f)@ax2]
+    wire_dtype: str = "bf16"  # boundary payload dtype (overlap.WIRE_DTYPES)
     # per-segment knob overrides (plan format_version 2): model code asks
     # for its segment's view via ``for_segment(kind)``; the scalar knobs
     # above are the defaults for kinds with no dedicated entry
@@ -222,6 +242,10 @@ class ATPContext:
             raise ValueError(
                 f"boundary_mode must be 'psum' or 'ring', got "
                 f"{self.boundary_mode!r}")
+        if self.wire_dtype not in overlap.WIRE_DTYPES:
+            raise ValueError(
+                f"wire_dtype must be one of {overlap.WIRE_DTYPES}, got "
+                f"{self.wire_dtype!r}")
 
     @property
     def d1(self) -> int:
@@ -278,7 +302,8 @@ class ATPContext:
             if seg.kind == kind:
                 base = dataclasses.replace(
                     self, chunks=seg.chunks, boundary_mode=seg.boundary_mode,
-                    seq_parallel=seg.seq_parallel, segment_plans=())
+                    seq_parallel=seg.seq_parallel,
+                    wire_dtype=seg.wire_dtype, segment_plans=())
                 break
         else:
             if self.segment_plans:
@@ -308,6 +333,7 @@ def make_context(
     chunks: int = 1,
     boundary_mode: Literal["psum", "ring"] = "psum",
     seq_parallel: bool = False,
+    wire_dtype: str = "bf16",
     *,
     plan=None,
     **retired,
@@ -332,6 +358,7 @@ def make_context(
         chunks = plan.chunks
         boundary_mode = plan.boundary_mode
         seq_parallel = plan.seq_parallel
+        wire_dtype = getattr(plan, "wire_dtype", "bf16")
         segment_plans = tuple(getattr(plan, "segments", ()) or ())
     if topo is None:
         raise TypeError("make_context needs a MeshTopo or a plan")
@@ -339,7 +366,7 @@ def make_context(
     ctx = ATPContext(
         topo=topo, ax1=ax1, ax2=ax2, dp_axes=dp_axis_names(topo),
         chunks=chunks, boundary_mode=boundary_mode, seq_parallel=seq_parallel,
-        segment_plans=segment_plans,
+        wire_dtype=wire_dtype, segment_plans=segment_plans,
     )
     if plan is not None and (ctx.d1, ctx.d2) != (plan.d1, plan.d2):
         raise ValueError(
@@ -417,20 +444,30 @@ def _chunked_boundary_matmul(ctx: ATPContext, x, w, axis, b=None):
     explicit ppermute ring issued between consecutive chunk GEMMs
     (overlap.overlap_matmul_ar).  The bias add is fused into each chunk's
     post-boundary epilogue rather than a separate full-tensor add.
-    Semantically identical to the unchunked op.
+    Semantically identical to the unchunked op.  ``ctx.wire_dtype`` swaps
+    every boundary for its quantized-wire variant (scale-per-chunk; see
+    overlap.wire_quantize).
     """
     d = ctx.d2 if axis == ctx.ax2 else ctx.d1
     if ctx.boundary_mode == "ring":
-        return overlap.overlap_matmul_ar(x, w, axis, d, ctx.chunks, b=b)
+        return overlap.overlap_matmul_ar(x, w, axis, d, ctx.chunks, b=b,
+                                         wire_dtype=ctx.wire_dtype)
+    quant = ctx.wire_dtype != "bf16" and axis is not None
+
+    def _boundary(y):
+        if quant:
+            return overlap.quant_psum(y, axis, ctx.wire_dtype)
+        return atp_boundary(y, axis)
+
     c = max(1, min(ctx.chunks, x.shape[0]))
     if c <= 1:
-        y = atp_boundary(jnp.einsum("...k,kn->...n", x, w), axis)
+        y = _boundary(jnp.einsum("...k,kn->...n", x, w))
         return y + b if b is not None else y
     xs = (jnp.split(x, c, axis=0) if x.shape[0] % c == 0
           else jnp.array_split(x, c, axis=0))
     ys = []
     for xc in xs:
-        yc = atp_boundary(jnp.einsum("...k,kn->...n", xc, w), axis)
+        yc = _boundary(jnp.einsum("...k,kn->...n", xc, w))
         ys.append(yc + b if b is not None else yc)
     return jnp.concatenate(ys, axis=0)
 
@@ -466,10 +503,16 @@ def atp_linear(
     epilogue (psum is linear; keeps the bias gradient exact and local).
     """
     axis = ctx.ax2 if kind == "col" else ctx.ax1
+    quant = ctx.wire_dtype != "bf16" and axis is not None
     if (ctx.seq_parallel and kind == "row" and axis is not None
             and x.ndim >= 3):
         seq_dim = x.ndim - 2
-        if ctx.boundary_mode == "ring" and x.shape[seq_dim] % ctx.d1 == 0:
+        ring = ctx.boundary_mode == "ring" and x.shape[seq_dim] % ctx.d1 == 0
+        if quant:
+            y = overlap.quant_reduce_scatter(
+                jnp.einsum("...k,kn->...n", x, w), axis, ctx.d1, seq_dim,
+                ctx.wire_dtype, ring)
+        elif ring:
             y = overlap.overlap_matmul_rs(x, w, axis, ctx.d1, seq_dim)
         else:
             y = atp_reduce_scatter(
@@ -479,7 +522,12 @@ def atp_linear(
         return _chunked_boundary_matmul(ctx, x, w, axis, b)
     if ctx.boundary_mode == "ring" and axis is not None:
         d = ctx.d2 if kind == "col" else ctx.d1
-        y = overlap.ring_all_reduce(jnp.einsum("...k,kn->...n", x, w), axis, d)
+        g = jnp.einsum("...k,kn->...n", x, w)
+        y = (overlap.quant_ring_all_reduce(g, axis, d, ctx.wire_dtype)
+             if quant else overlap.ring_all_reduce(g, axis, d))
+    elif quant:
+        y = overlap.quant_psum(jnp.einsum("...k,kn->...n", x, w), axis,
+                               ctx.wire_dtype)
     else:
         y = atp_boundary(jnp.einsum("...k,kn->...n", x, w), axis)
     if b is not None:

@@ -47,12 +47,27 @@ class CalibEntry:
 
     chunk_eff holds the chunked-overlap *effective bandwidth* micro-
     benchmark (ROADMAP open item): tuples ``(chunks, eff1, eff2)`` where
-    eff_i is the measured bandwidth-efficiency of splitting one boundary
-    all-reduce on mesh dim i into ``chunks`` back-to-back collectives of
-    payload/chunks each (t_whole / t_chunked; 1.0 = free splitting).
-    ``t_comm_overlap(chunk_eff=...)`` prices the chunked boundary pieces
-    at ``raw_bw * eff`` instead of trusting the analytic exposure model —
-    a slow measured chunk path steers the search back to chunks=1.
+    eff_i is the measured PURE-bandwidth efficiency of splitting one
+    boundary all-reduce on mesh dim i into ``chunks`` back-to-back
+    collectives of payload/chunks each —
+    ``t_whole / (t_chunked - (chunks-1) * launch_s)``, 1.0 = free
+    splitting.  The per-extra-chunk software launch cost is measured
+    separately as ``launch_s`` (from the c=2 split: t_2 - t_whole) and
+    charged additively by ``t_comm_overlap(chunk_launch_s=...)``; folding
+    it into the bandwidth number — the pre-fix behavior — double-counted
+    launch overhead against the alpha_s term.  A slow measured chunk path
+    (either number) still steers the search back to chunks=1.
+
+    b1_q / b2_q are the *quantized-collective* algorithm bandwidths: the
+    same micro-benchmark run over the int8 wire
+    (``overlap.quant_psum``), in the WIRE-byte convention — a quantized
+    all-reduce of N elements takes ``N * 1 byte / (b_q * 1e9)`` seconds.
+    They pair with ``t_comm_overlap(wire_dtype=..., calibrated=...)``:
+    the search substitutes (b1_q, b2_q) for (b1, b2) when pricing a
+    quantized plan, which is how measured quant/dequant overhead (or a
+    fabric that accelerates small payloads sub-linearly) can flip the
+    chosen factorization or chunk count.  None = unmeasured (the search
+    falls back to the full-width bandwidths over the halved byte count).
     """
 
     b1: float
@@ -61,6 +76,9 @@ class CalibEntry:
     t_ring: float | None = None
     alpha_s: float | None = None
     chunk_eff: tuple[tuple[int, float, float], ...] | None = None
+    launch_s: float | None = None
+    b1_q: float | None = None
+    b2_q: float | None = None
 
     @property
     def boundary_mode(self) -> str | None:
@@ -80,17 +98,24 @@ class CalibEntry:
                 "t_psum": self.t_psum, "t_ring": self.t_ring,
                 "alpha_s": self.alpha_s,
                 "chunk_eff": (None if self.chunk_eff is None
-                              else [list(t) for t in self.chunk_eff])}
+                              else [list(t) for t in self.chunk_eff]),
+                "launch_s": self.launch_s,
+                "b1_q": (None if self.b1_q is None else _enc_inf(self.b1_q)),
+                "b2_q": (None if self.b2_q is None else _enc_inf(self.b2_q))}
 
     @staticmethod
     def from_dict(d: Mapping) -> "CalibEntry":
         ce = d.get("chunk_eff")
+        b1_q, b2_q = d.get("b1_q"), d.get("b2_q")
         return CalibEntry(b1=_dec_inf(d["b1"]), b2=_dec_inf(d["b2"]),
                           t_psum=d.get("t_psum"), t_ring=d.get("t_ring"),
                           alpha_s=d.get("alpha_s"),
                           chunk_eff=(None if ce is None else tuple(
                               (int(c), float(e1), float(e2))
-                              for c, e1, e2 in ce)))
+                              for c, e1, e2 in ce)),
+                          launch_s=d.get("launch_s"),
+                          b1_q=(None if b1_q is None else _dec_inf(b1_q)),
+                          b2_q=(None if b2_q is None else _dec_inf(b2_q)))
 
 
 def _enc_inf(v: float):
@@ -136,6 +161,22 @@ class CalibrationTable:
         """Measured chunked-collective bandwidth efficiencies (or None)."""
         e = self.get(d1, d2)
         return e.chunk_efficiency() if e is not None else None
+
+    def launch(self, d1: int, d2: int) -> float | None:
+        """Measured per-extra-chunk launch cost (None when unmeasured)."""
+        e = self.get(d1, d2)
+        return e.launch_s if e is not None else None
+
+    def quant_bandwidths(self, d1: int, d2: int) \
+            -> tuple[float, float] | None:
+        """Measured quantized-collective bandwidths (b1_q, b2_q) in the
+        wire-byte convention, or None when the quantized micro-benchmark
+        did not run for this factorization."""
+        e = self.get(d1, d2)
+        if e is None or (e.b1_q is None and e.b2_q is None):
+            return None
+        return (e.b1_q if e.b1_q is not None else e.b1,
+                e.b2_q if e.b2_q is not None else e.b2)
 
     def covers_tp(self, tp_degree: int) -> bool:
         """True if any entry measures a factorization of ``tp_degree``.
@@ -240,13 +281,30 @@ def _measure_factorization(d1: int, d2: int, payload_bytes: int,
     elems = max(1, payload_bytes // 4)
 
     def time_allreduce(axis: str, d: int, ring: bool = False,
-                       n_elems: int | None = None) -> float:
+                       n_elems: int | None = None,
+                       quant: bool = False) -> float:
         x = jnp.ones((d, n_elems or elems), jnp.float32)
-        red = ((lambda v: overlap.ring_all_reduce(v, axis, d)) if ring
-               else (lambda v: lax.psum(v, axis)))
+        if quant:
+            red = lambda v: overlap.quant_psum(v, axis, "int8")  # noqa: E731
+        elif ring:
+            red = lambda v: overlap.ring_all_reduce(v, axis, d)  # noqa: E731
+        else:
+            red = lambda v: lax.psum(v, axis)  # noqa: E731
         f = jax.jit(shard_map(red, mesh=mesh, in_specs=P(axis),
                               out_specs=P(axis), check_vma=True))
         return _time_fn(f, x, repeats=repeats)
+
+    def quant_bw(axis: str | None, d: int) -> float | None:
+        """Quantized-collective bandwidth in the WIRE-byte convention:
+        the int8 wire moves 1 byte per element, so b_q = elems / t — the
+        number ``t_comm_overlap(wire_dtype="int8")`` divides its 1-byte
+        volumes by.  Quant/dequant overhead lands in t, which is the
+        point: a fabric (or emulation) where quantization does not pay
+        shows up as b_q < b/2 and the search prices it honestly."""
+        if axis is None:
+            return None
+        t = time_allreduce(axis, d, quant=True)
+        return elems / t / 1e9 if t > 0.0 else None
 
     def alpha_from_tiny(axis: str, d: int) -> float:
         """Per-step latency: a 64-element all-reduce is latency-bound, so
@@ -269,16 +327,30 @@ def _measure_factorization(d1: int, d2: int, payload_bytes: int,
                               out_specs=P(axis), check_vma=True))
         return _time_fn(f, x, repeats=repeats)
 
-    def chunk_eff_axis(axis: str | None, d: int, whole: float,
-                       c: int) -> float:
-        """Measured bandwidth efficiency of splitting into c chunks on one
-        axis (1.0 for singleton dims: nothing to split)."""
+    def launch_axis(axis: str | None, d: int,
+                    whole: float | None) -> float | None:
+        """Per-extra-chunk software launch cost: the c=2 split issues
+        exactly one extra collective, so t_2 - t_whole isolates it from
+        the bandwidth term (the satellite fix for the chunk-eff
+        double-count)."""
+        if axis is None or whole is None or whole <= 0.0:
+            return None
+        return max(0.0, time_chunked(axis, d, 2) - whole)
+
+    def chunk_eff_axis(axis: str | None, d: int, whole: float, c: int,
+                       launch: float | None) -> float:
+        """Measured PURE-bandwidth efficiency of splitting into c chunks
+        on one axis (1.0 for singleton dims): the measured per-extra-chunk
+        launch cost is subtracted from the chunked time first, so this
+        number no longer double-counts what ``launch_s`` (and the alpha
+        term) already charge."""
         if axis is None or whole is None or whole <= 0.0:
             return 1.0
-        tc = time_chunked(axis, d, c)
+        tc = time_chunked(axis, d, c) - (c - 1) * (launch or 0.0)
         return min(1.0, whole / tc) if tc > 0.0 else 1.0
 
     b1 = b2 = math.inf
+    b1_q = b2_q = None
     t_psum = t_ring = alpha_s = None
     t1_whole = t2_whole = None
     if ax1 is not None:
@@ -286,10 +358,12 @@ def _measure_factorization(d1: int, d2: int, payload_bytes: int,
         t_ring = time_allreduce(ax1, d1, ring=True)
         b1 = payload_bytes / t_psum / 1e9
         alpha_s = alpha_from_tiny(ax1, d1)
+        b1_q = quant_bw(ax1, d1)
         t1_whole = t_psum
         if ax2 is not None:
             t2_whole = time_allreduce(ax2, d2)
             b2 = payload_bytes / t2_whole / 1e9
+            b2_q = quant_bw(ax2, d2)
             # one alpha serves every collective of this factorization —
             # keep the slower axis's latency (conservative: the cost model
             # must not over-chunk the slow axis on a two-level fabric)
@@ -301,14 +375,20 @@ def _measure_factorization(d1: int, d2: int, payload_bytes: int,
         t_ring = time_allreduce(ax2, d2, ring=True)
         b2 = payload_bytes / t_psum / 1e9
         alpha_s = alpha_from_tiny(ax2, d2)
+        b2_q = quant_bw(ax2, d2)
         t2_whole = t_psum
+    launch1 = launch_axis(ax1, d1, t1_whole)
+    launch2 = launch_axis(ax2, d2, t2_whole)
+    launch_s = max((v for v in (launch1, launch2) if v is not None),
+                   default=None)
     chunk_eff = tuple(
         (c,
-         chunk_eff_axis(ax1, d1, t1_whole, c),
-         chunk_eff_axis(ax2, d2, t2_whole, c))
+         chunk_eff_axis(ax1, d1, t1_whole, c, launch1),
+         chunk_eff_axis(ax2, d2, t2_whole, c, launch2))
         for c in (2, 4))
     return CalibEntry(b1=b1, b2=b2, t_psum=t_psum, t_ring=t_ring,
-                      alpha_s=alpha_s, chunk_eff=chunk_eff)
+                      alpha_s=alpha_s, chunk_eff=chunk_eff,
+                      launch_s=launch_s, b1_q=b1_q, b2_q=b2_q)
 
 
 def calibrate_mesh(

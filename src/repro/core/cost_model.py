@@ -296,6 +296,22 @@ def t_comm(
 # ---------------------------------------------------------------------------
 
 
+def wire_bytes_per_elem(wire_dtype: str, bytes_per_elem: int) -> float:
+    """Bytes per element a boundary collective actually moves.
+
+    Mirrors ``overlap.WIRE_DTYPES`` without importing jax: "bf16" is the
+    full-width baseline (whatever ``bytes_per_elem`` the caller models),
+    int8/fp8 payloads are one byte on the wire (the shared per-chunk
+    scale is O(1) per collective — negligible against the payload)."""
+    if wire_dtype in ("int8", "fp8"):
+        return 1.0
+    if wire_dtype != "bf16":
+        raise ValueError(
+            f"wire_dtype must be 'bf16', 'int8' or 'fp8', got "
+            f"{wire_dtype!r}")
+    return float(bytes_per_elem)
+
+
 @dataclasses.dataclass(frozen=True)
 class OverlapStrategyCost:
     """Per-(d1, d2, chunks, seq_parallel) modelled step communication.
@@ -362,6 +378,8 @@ def t_comm_overlap(
     alpha_s: float = 0.0,
     calibrated: tuple[float, float] | None = None,
     chunk_eff: "Mapping[int, tuple[float, float]] | None" = None,
+    chunk_launch_s: float | None = None,
+    wire_dtype: str = "bf16",
 ) -> OverlapStrategyCost:
     """Generalised Eq. 2 with explicit-overlap accounting.
 
@@ -388,6 +406,19 @@ def t_comm_overlap(
     at ``raw_bw * eff`` while the unchunked totals keep the full-payload
     bandwidth.  Absent (or for a chunk count with no entry) the analytic
     exposure model is used unchanged.
+
+    ``chunk_launch_s`` is the measured per-extra-chunk launch cost
+    (``CalibEntry.launch_s``): splitting a boundary into c collectives
+    pays c-1 extra software launches that no amount of overlap hides.
+    Kept separate from ``chunk_eff`` — which since the double-count fix
+    prices pure bandwidth loss — and from ``alpha_s`` (per *ring step*
+    wire latency, already charged per chunk by ``collective_seconds``).
+
+    ``wire_dtype`` prices the boundary payloads at the quantized wire
+    width: "int8"/"fp8" move 1 byte per element instead of
+    ``bytes_per_elem``.  GEMM flops are unchanged (compute stays full
+    precision) and the MoE flat dispatch keeps full-width activations
+    (wire quantization rides the f1..f4 boundary collectives only).
     """
     if profile.hidden is None:
         raise ValueError(
@@ -403,15 +434,16 @@ def t_comm_overlap(
         if d2 > 1 and cb2 is not None and not math.isinf(cb2):
             b2_raw = cb2 * 2.0 * (d2 - 1) / d2
     steps = 2.0 * layers  # fwd + bwd per layer
+    wire_bytes = wire_bytes_per_elem(wire_dtype, bytes_per_elem)
     # col boundary pool: d1-sharded column outputs + full-width (unsharded)
     # psum(ax2) outputs — MLA latents, SSM recurrent-state projections
     vol_col = batch * seq * (profile.col_first_out / max(1, d1)
-                             + profile.col_full_out) * bytes_per_elem
+                             + profile.col_full_out) * wire_bytes
     # row boundary pool: d2-sharded row outputs + full-width psum(ax1)
     # outputs (zamba regather, xlstm recurrent h) — no GEMM-overlap credit
     # is claimed for the full-width part (conservative: it stays exposed)
     vol_row = batch * seq * (profile.row_first_out / max(1, d2)
-                             + profile.row_full_out) * bytes_per_elem
+                             + profile.row_full_out) * wire_bytes
 
     # producing-GEMM time per boundary group (overlappable work); the
     # full-width outputs' GEMMs shard only over ax2 (K = hidden/d2)
@@ -466,12 +498,20 @@ def t_comm_overlap(
             return raw
         return raw * eff[axis]
 
+    # measured per-extra-chunk launch cost: software overhead paid once
+    # per additional collective, never hidden by overlap (satellite fix:
+    # this used to be baked into chunk_eff, double-counting alpha)
+    launch = chunk_launch_s or 0.0
+    t_launch = (max(0, chunks - 1) * launch * (1.0 if d2 > 1 else 0.0)
+                + max(0, row_chunks - 1) * launch * (1.0 if d1 > 1 else 0.0))
+
     t_comm = steps * (t_col + t_row + t_gather + t_flat)
     t_exposed = steps * (
         _exposed(vol_col, d2, chunked_bw(b2_raw, 1, chunks), "all_reduce",
                  algo, alpha_s, chunks, tg_col)
         + _exposed(vol_row, d1, chunked_bw(b1_raw, 0, row_chunks),
                    row_boundary_op, algo, alpha_s, row_chunks, tg_row)
+        + t_launch   # per-extra-chunk launches stay on the critical path
         + t_gather   # entry gathers overlap the norm only
         + t_flat)    # dispatch is on the routing critical path
     t_gemm = steps * (tg_col + tg_row)
@@ -563,6 +603,7 @@ def t_comm_decode(
     launch_s: float = DECODE_LAUNCH_S,
     calibrated: tuple[float, float] | None = None,
     boundary_mode: str | None = None,
+    wire_dtype: str = "bf16",
 ) -> DecodeStrategyCost:
     """Per-token decode communication time of one (d1, d2) factorization.
 
@@ -577,6 +618,8 @@ def t_comm_decode(
     everywhere else; a calibrated ``alpha_s`` should be passed by the
     caller (the search threads the table's measured per-step latency).
     ``boundary_mode`` forces psum/ring; default picks the cheaper.
+    ``wire_dtype`` prices the boundary payloads at the quantized wire
+    width (int8/fp8 = 1 byte/elem), exactly as in ``t_comm_overlap``.
     """
     b1_raw, b2_raw = matrix.axis_bandwidths(d1, d2)
     if calibrated is not None:
@@ -587,15 +630,16 @@ def t_comm_decode(
             b2_raw = cb2 * 2.0 * (d2 - 1) / d2
     a1, a2 = matrix.axis_alpha_factors(d1, d2)
     n_flat = d1 * d2
+    wire_bytes = wire_bytes_per_elem(wire_dtype, bytes_per_elem)
 
     def mode_cost(algo: str) -> tuple[float, float, float, float]:
         launch = alpha = byte = coll = 0.0
         for w in workloads:
             p = w.profile
             vol_col = batch * (p.col_first_out / max(1, d1)
-                               + p.col_full_out) * bytes_per_elem
+                               + p.col_full_out) * wire_bytes
             vol_row = batch * (p.row_first_out / max(1, d2)
-                               + p.row_full_out) * bytes_per_elem
+                               + p.row_full_out) * wire_bytes
             for vol, d, bw, af in ((vol_col, d2, b2_raw, a2),
                                    (vol_row, d1, b1_raw, a1)):
                 if d <= 1 or vol <= 0.0:

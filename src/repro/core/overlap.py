@@ -44,6 +44,22 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+#: wire dtypes the boundary collectives understand.  "bf16" is the
+#: full-width baseline (whatever dtype the activations carry); "int8" and
+#: "fp8" quantize the payload before it hits the ring/psum and dequantize
+#: in the chunk epilogue.  The same names are the ``wire_dtype`` knob on
+#: SegmentPlan / DecodePlan / ParallelPlan and the per-dtype byte
+#: accounting in core.cost_model.
+WIRE_DTYPES = ("bf16", "int8", "fp8")
+
+#: fp8-e4m3 when this jax build has it; the quantizers fall back to the
+#: int8 grid otherwise (gated, never an import error)
+_FP8_DTYPE = getattr(jnp, "float8_e4m3fn", None)
+
+#: symmetric quantization ceilings: int8 grid is +-127, fp8-e4m3 +-448
+_INT8_QMAX = 127.0
+_FP8_QMAX = 448.0
+
 
 # ---------------------------------------------------------------------------
 # Ring plumbing.  `axis_size` is threaded statically (the ATPContext knows
@@ -209,6 +225,132 @@ ring_all_gather.defvjp(_ag_fwd, _ag_bwd)
 
 
 # ---------------------------------------------------------------------------
+# Quantized wire: symmetric scale-shared int8 / fp8-e4m3 boundary payloads.
+#
+# The reduction itself must stay exact, so every rank in the group shares
+# ONE scale (pmax of the local amax): the wire then carries values on the
+# int8 (or fp8) grid, held in f32 so the existing ring/psum machinery sums
+# them bit-exactly (<= 16 ranks x 127 is far inside f32's exact-integer
+# range), and a single ``* scale`` dequantizes the reduced result in the
+# chunk epilogue — riding the same position the bias add already does.
+# Backward schedules are mirrored AND quantized: the cotangent ring is the
+# same wire, so it pays (and saves) the same bytes — a straight-through
+# estimator through the quantization grid.
+# ---------------------------------------------------------------------------
+
+
+def wire_quantize(x, axis, wire_dtype: str):
+    """Quantize a boundary payload onto the shared-scale wire grid.
+
+    Returns ``(q, scale)``: ``q`` holds the grid values in f32 (summable
+    exactly by the unmodified collectives), ``scale`` is shared across the
+    ``axis`` group (``pmax`` of the local amax) so every rank dequantizes
+    the reduced tensor identically.  fp8 uses the e4m3 grid when this jax
+    build ships the dtype and falls back to the int8 grid otherwise.
+    """
+    if wire_dtype not in WIRE_DTYPES:
+        raise ValueError(
+            f"wire_dtype must be one of {WIRE_DTYPES}, got {wire_dtype!r}")
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    if axis is not None:
+        amax = lax.pmax(amax, axis)
+    if wire_dtype == "fp8" and _FP8_DTYPE is not None:
+        scale = jnp.maximum(amax / _FP8_QMAX, 1e-12)
+        q = (xf / scale).astype(_FP8_DTYPE).astype(jnp.float32)
+    else:
+        scale = jnp.maximum(amax / _INT8_QMAX, 1e-12)
+        q = jnp.clip(jnp.round(xf / scale), -_INT8_QMAX, _INT8_QMAX)
+    return q, scale
+
+
+def _quant_ar_raw(x, axis, d, wire_dtype):
+    q, scale = wire_quantize(x, axis, wire_dtype)
+    return (_ring_all_reduce_raw(q, axis, d) * scale).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def quant_ring_all_reduce(x, axis, axis_size, wire_dtype):
+    """~= lax.psum(x, axis) over a quantized ring wire.
+
+    quantize (shared scale) -> ppermute ring on grid values -> dequantize.
+    Backward runs the SAME quantized ring on the cotangent (mirrored
+    schedule, straight-through estimator through the grid)."""
+    return _quant_ar_raw(x, axis, axis_size, wire_dtype)
+
+
+def _qar_fwd(x, axis, axis_size, wire_dtype):
+    return _quant_ar_raw(x, axis, axis_size, wire_dtype), None
+
+
+def _qar_bwd(axis, axis_size, wire_dtype, _res, ct):
+    return (_quant_ar_raw(ct, axis, axis_size, wire_dtype),)
+
+
+quant_ring_all_reduce.defvjp(_qar_fwd, _qar_bwd)
+
+
+def _quant_psum_raw(x, axis, wire_dtype):
+    q, scale = wire_quantize(x, axis, wire_dtype)
+    return (lax.psum(q, axis) * scale).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def quant_psum(x, axis, wire_dtype):
+    """~= lax.psum(x, axis) with the payload quantized on the wire (the
+    monolithic-collective counterpart of :func:`quant_ring_all_reduce`)."""
+    return _quant_psum_raw(x, axis, wire_dtype)
+
+
+def _qpsum_fwd(x, axis, wire_dtype):
+    return _quant_psum_raw(x, axis, wire_dtype), None
+
+
+def _qpsum_bwd(axis, wire_dtype, _res, ct):
+    return (_quant_psum_raw(ct, axis, wire_dtype),)
+
+
+quant_psum.defvjp(_qpsum_fwd, _qpsum_bwd)
+
+
+def _quant_rs_raw(x, axis, d, dim, wire_dtype, ring):
+    q, scale = wire_quantize(x, axis, wire_dtype)
+    if ring:
+        y = _ring_reduce_scatter_raw(q, axis, d, dim)
+    else:
+        y = lax.psum_scatter(q, axis, scatter_dimension=dim, tiled=True)
+    return (y * scale).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def quant_reduce_scatter(x, axis, axis_size, dim, wire_dtype, ring=False):
+    """~= psum_scatter(x, axis, dim, tiled) on a quantized wire; the
+    sequence-parallel row boundary under quantization.  Backward is the
+    mirrored all-gather of the (re-quantized) cotangent."""
+    if ring:
+        _require_divisible(x.shape[dim], axis_size, "quant_reduce_scatter")
+    return _quant_rs_raw(x, axis, axis_size, dim, wire_dtype, ring)
+
+
+def _qrs_fwd(x, axis, axis_size, dim, wire_dtype, ring):
+    return _quant_rs_raw(x, axis, axis_size, dim, wire_dtype, ring), None
+
+
+def _qrs_bwd(axis, axis_size, dim, wire_dtype, ring, _res, ct):
+    # all-gather moves bytes but reduces nothing: quantize the cotangent
+    # for the wire, gather the grid values, dequantize locally
+    q, scale = wire_quantize(ct, axis, wire_dtype)
+    if ring:
+        g = _ring_all_gather_raw(q, axis, axis_size, dim)
+    else:
+        g = lax.all_gather(q, axis, axis=dim, tiled=True)
+    return ((g * scale).astype(ct.dtype),)
+
+
+quant_reduce_scatter.defvjp(_qrs_fwd, _qrs_bwd)
+
+
+# ---------------------------------------------------------------------------
 # Collective matmuls.
 # ---------------------------------------------------------------------------
 
@@ -217,19 +359,30 @@ def _gemm(x, w):
     return jnp.einsum("...k,kn->...n", x, w)
 
 
-def overlap_matmul_ar(x, w, axis, axis_size, chunks: int, b=None):
+def overlap_matmul_ar(x, w, axis, axis_size, chunks: int, b=None,
+                      wire_dtype: str = "bf16"):
     """Chunk-pipelined ``psum(x @ w, axis)`` (+ fused per-chunk bias).
 
     Program order interleaves chunk k's ring with chunk k+1's GEMM; the two
     are data-independent, so the ring's ppermute chain overlaps the GEMM.
     Uneven leading dimensions fall back to ``jnp.array_split`` chunks.
+
+    ``wire_dtype`` != "bf16" swaps each chunk's ring for the quantized
+    wire: scale-per-chunk (every chunk computes its own shared amax), with
+    the dequant multiply landing in the per-chunk epilogue directly before
+    the bias add it already carries.
     """
+    def _ar(y):
+        if wire_dtype != "bf16":
+            return quant_ring_all_reduce(y, axis, axis_size, wire_dtype)
+        return ring_all_reduce(y, axis, axis_size)
+
     if axis is None:
         y = _gemm(x, w)
         return y + b if b is not None else y
     c = max(1, min(chunks, x.shape[0]))
     if c <= 1:
-        y = ring_all_reduce(_gemm(x, w), axis, axis_size)
+        y = _ar(_gemm(x, w))
         return y + b if b is not None else y
     xs = (jnp.split(x, c, axis=0) if x.shape[0] % c == 0
           else jnp.array_split(x, c, axis=0))
@@ -242,9 +395,9 @@ def overlap_matmul_ar(x, w, axis, axis_size, chunks: int, b=None):
     for xc in xs:
         g = _gemm(xc, w)
         if pending is not None:
-            ys.append(_epilogue(ring_all_reduce(pending, axis, axis_size)))
+            ys.append(_epilogue(_ar(pending)))
         pending = g
-    ys.append(_epilogue(ring_all_reduce(pending, axis, axis_size)))
+    ys.append(_epilogue(_ar(pending)))
     return jnp.concatenate(ys, axis=0)
 
 

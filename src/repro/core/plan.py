@@ -33,17 +33,21 @@ from repro.core.cost_model import (DECODE_ALPHA_S, DECODE_LAUNCH_S,
                                    LayerCommProfile, OverlapStrategyCost,
                                    SegmentWorkload, segment_workloads)
 from repro.core.mesh import MeshTopo, atp_topo
+from repro.core.overlap import WIRE_DTYPES
 from repro.core.search import (search_strategy_decode,
                                search_strategy_overlap,
                                search_strategy_segments)
 
 #: v2 added per-segment ``SegmentPlan`` tuples (heterogeneous per-segment
 #: overlap strategies); v3 adds the optional ``decode`` sub-plan (the
-#: latency-aware serve objective's factorization + boundary_mode).  v1/v2
-#: files load unchanged — v1 global knobs broadcast to every segment
-#: (``segment_plan``), and a missing ``decode`` means "serve with the
-#: train knobs" (the pre-v3 behavior).  Newer versions still fail loudly.
-PLAN_FORMAT_VERSION = 3
+#: latency-aware serve objective's factorization + boundary_mode); v4 adds
+#: ``wire_dtype`` (quantized boundary collectives) on the plan, its
+#: segments and its decode sub-plan.  v1-v3 files load unchanged — v1
+#: global knobs broadcast to every segment (``segment_plan``), a missing
+#: ``decode`` means "serve with the train knobs" (the pre-v3 behavior),
+#: and a missing ``wire_dtype`` means full-width "bf16" (the pre-v4
+#: behavior).  Newer versions still fail loudly.
+PLAN_FORMAT_VERSION = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +92,10 @@ class ParallelPlan:
     chunks: int = 1
     boundary_mode: str = "psum"
     seq_parallel: bool = False
+    #: boundary-collective payload dtype (format_version 4): "bf16" full
+    #: width, "int8"/"fp8" quantized wire — the default broadcast to
+    #: segments with no dedicated entry, exactly like the other knobs
+    wire_dtype: str = "bf16"
     segments: tuple[SegmentPlan, ...] = ()
     #: decode-time sub-plan (format_version 3): the serve objective's
     #: factorization/boundary choice; None = serve with the train knobs
@@ -106,6 +114,10 @@ class ParallelPlan:
             raise ValueError(
                 f"boundary_mode must be 'psum' or 'ring', got "
                 f"{self.boundary_mode!r}")
+        if self.wire_dtype not in WIRE_DTYPES:
+            raise ValueError(
+                f"wire_dtype must be one of {WIRE_DTYPES}, got "
+                f"{self.wire_dtype!r}")
         object.__setattr__(self, "segments", tuple(self.segments))
         kinds = [s.kind for s in self.segments]
         if len(set(kinds)) != len(kinds):
@@ -143,7 +155,8 @@ class ParallelPlan:
                 return seg
         return SegmentPlan(kind=kind, chunks=self.chunks,
                            boundary_mode=self.boundary_mode,
-                           seq_parallel=self.seq_parallel)
+                           seq_parallel=self.seq_parallel,
+                           wire_dtype=self.wire_dtype)
 
     def decode_view(self) -> "ParallelPlan":
         """The plan a decode-dominated serving deployment executes.
@@ -162,12 +175,13 @@ class ParallelPlan:
         dec = self.decode
         segs = tuple(SegmentPlan(kind=s.kind, chunks=dec.chunks,
                                  boundary_mode=dec.boundary_mode,
-                                 seq_parallel=False)
+                                 seq_parallel=False,
+                                 wire_dtype=dec.wire_dtype)
                      for s in self.segments)
         return self.with_(
             d1=dec.d1, d2=dec.d2, chunks=dec.chunks,
             boundary_mode=dec.boundary_mode, seq_parallel=False,
-            segments=segs,
+            wire_dtype=dec.wire_dtype, segments=segs,
             provenance=self.provenance + (
                 ("decode_view", f"serving on DeviceMesh({dec.d1},{dec.d2})"),))
 
@@ -179,8 +193,9 @@ class ParallelPlan:
 
     def describe(self) -> str:
         sp = "+sp" if self.seq_parallel else ""
+        wd = "" if self.wire_dtype == "bf16" else f" wire={self.wire_dtype}"
         out = (f"DeviceMesh({self.d1},{self.d2}) dp={self.dp} "
-               f"chunks={self.chunks} {self.boundary_mode}{sp}")
+               f"chunks={self.chunks} {self.boundary_mode}{sp}{wd}")
         if self.segments:
             out += (" segments["
                     + " ".join(s.describe() for s in self.segments) + "]")
@@ -202,6 +217,7 @@ class ParallelPlan:
             "d1": self.d1, "d2": self.d2, "dp": self.dp, "pods": self.pods,
             "chunks": self.chunks, "boundary_mode": self.boundary_mode,
             "seq_parallel": self.seq_parallel,
+            "wire_dtype": self.wire_dtype,
             "segments": [s.to_dict() for s in self.segments],
             "decode": (self.decode.to_dict()
                        if self.decode is not None else None),
@@ -232,6 +248,8 @@ class ParallelPlan:
             chunks=int(d.get("chunks", 1)),
             boundary_mode=d.get("boundary_mode", "psum"),
             seq_parallel=bool(d.get("seq_parallel", False)),
+            # absent in v1-v3 files: full-width boundary collectives
+            wire_dtype=d.get("wire_dtype", "bf16"),
             # absent in v1 files: the global knobs above broadcast to every
             # segment through ``segment_plan`` / ``ATPContext.for_segment``
             segments=tuple(SegmentPlan.from_dict(s)
@@ -309,6 +327,7 @@ def plan_search(
     alpha_s: float = 0.0,
     calibration: CalibrationTable | Mapping | None = None,
     boundary_mode: str | None = None,
+    wire_dtype: str = "bf16",
     decode_batch: int | None = None,
     decode_alpha_s: float = DECODE_ALPHA_S,
     decode_launch_s: float = DECODE_LAUNCH_S,
@@ -342,6 +361,13 @@ def plan_search(
     ``boundary_mode`` forces psum/ring; by default it follows the
     calibration's measured preference (falling back to "psum").
 
+    ``wire_dtype`` prices the boundary collectives at the quantized wire
+    width ("int8"/"fp8" move 1 byte per element instead of
+    ``bytes_per_elem``; quantized-collective bandwidths from the
+    calibration table override Eq. 3/4 where measured), so quantization
+    can flip the optimal (d1, d2)/chunks/boundary_mode — and the emitted
+    plans carry the knob into execution.
+
     ``decode_batch`` (the serving slot count) additionally runs the
     latency-aware decode objective (``search_strategy_decode``) over the
     same strategy space and attaches its winner as a :class:`DecodePlan`
@@ -362,7 +388,7 @@ def plan_search(
             bytes_per_elem=bytes_per_elem, chunks_options=chunks_options,
             seq_parallel_options=seq_parallel_options,
             peak_tflops=peak_tflops, algo=algo, alpha_s=alpha_s,
-            calibration=calibration)
+            calibration=calibration, wire_dtype=wire_dtype)
         workload_tag = (f"model={model.name} "
                         f"segments={'+'.join(f'{w.kind}x{w.layers}' for w in workloads)} "
                         f"batch={batch} seq={seq} bytes={bytes_per_elem}")
@@ -373,7 +399,7 @@ def plan_search(
             chunks_options=chunks_options,
             seq_parallel_options=seq_parallel_options,
             peak_tflops=peak_tflops, algo=algo, alpha_s=alpha_s,
-            calibration=calibration)
+            calibration=calibration, wire_dtype=wire_dtype)
         workload_tag = (f"layers={layers} batch={batch} seq={seq} "
                         f"bytes={bytes_per_elem}")
 
@@ -386,10 +412,11 @@ def plan_search(
             hm, tp_degree, workloads=dworkloads, batch=decode_batch,
             bytes_per_elem=bytes_per_elem, alpha_s=decode_alpha_s,
             launch_s=decode_launch_s, calibration=calibration,
-            boundary_mode=boundary_mode)
+            boundary_mode=boundary_mode, wire_dtype=wire_dtype)
         decode_plan = DecodePlan(
             d1=dres.best.d1, d2=dres.best.d2,
             boundary_mode=dres.best.boundary_mode,
+            wire_dtype=wire_dtype,
             predicted_t_step=dres.best.t_step)
 
     prov = (
@@ -401,6 +428,8 @@ def plan_search(
         ("workload", workload_tag),
         ("calibrated", "yes" if calibration is not None else "no"),
     )
+    if wire_dtype != "bf16":
+        prov += (("wire_dtype", wire_dtype),)
     if decode_plan is not None:
         prov += (("decode",
                   f"objective=serve batch={decode_batch} -> "
@@ -422,10 +451,12 @@ def plan_search(
         if model is not None:
             segs = tuple(SegmentPlan(
                 kind=s.kind, chunks=s.chunks, boundary_mode=bm,
-                seq_parallel=s.seq_parallel) for s in c.segments)
+                seq_parallel=s.seq_parallel,
+                wire_dtype=wire_dtype) for s in c.segments)
         return ParallelPlan(
             d1=c.d1, d2=c.d2, dp=dp, pods=pods, chunks=c.chunks,
-            boundary_mode=bm, seq_parallel=c.seq_parallel, segments=segs,
+            boundary_mode=bm, seq_parallel=c.seq_parallel,
+            wire_dtype=wire_dtype, segments=segs,
             decode=decode_plan, topology=preset, calibration=calibration,
             predicted=PredictedCost(t_comm=c.t_comm, t_exposed=c.t_exposed,
                                     t_gemm=c.t_gemm),

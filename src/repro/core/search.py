@@ -82,16 +82,30 @@ class OverlapSearchResult:
                 "seq_parallel": self.best.seq_parallel}
 
 
-def _calibration_lookups(calibration, alpha_s: float):
-    """(calib_for, alpha_for, chunk_eff_for) shared by every search —
-    measured bandwidths / per-step latencies / chunked-collective
-    efficiencies override the analytic defaults for the factorizations the
-    table covers.  One implementation: the v1/v2 parity pin depends on all
-    searches pricing calibration identically."""
+def _calibration_lookups(calibration, alpha_s: float,
+                         wire_dtype: str = "bf16"):
+    """(calib_for, alpha_for, chunk_eff_for, launch_for) shared by every
+    search — measured bandwidths / per-step latencies / chunked-collective
+    efficiencies / per-chunk launch costs override the analytic defaults
+    for the factorizations the table covers.  One implementation: the
+    v1/v2 parity pin depends on all searches pricing calibration
+    identically.
+
+    Under ``wire_dtype`` "int8"/"fp8" the measured *quantized* wire
+    bandwidths (``CalibEntry.b1_q``/``b2_q``, already in the 1-byte/elem
+    convention the cost model uses for quantized volumes) replace the
+    full-width ones where measured — this is what lets ``plan_search``
+    pick a different factorization under quantization when the fabric's
+    small-message behaviour differs from its large-message one."""
 
     def calib_for(d1: int, d2: int):
-        return (calibration.bandwidths(d1, d2)
-                if calibration is not None else None)
+        if calibration is None:
+            return None
+        if wire_dtype != "bf16":
+            q = calibration.quant_bandwidths(d1, d2)
+            if q is not None:
+                return q
+        return calibration.bandwidths(d1, d2)
 
     def alpha_for(d1: int, d2: int) -> float:
         if calibration is not None:
@@ -105,7 +119,12 @@ def _calibration_lookups(calibration, alpha_s: float):
             return calibration.chunk_efficiency(d1, d2)
         return None
 
-    return calib_for, alpha_for, chunk_eff_for
+    def launch_for(d1: int, d2: int):
+        if calibration is not None:
+            return calibration.launch(d1, d2)
+        return None
+
+    return calib_for, alpha_for, chunk_eff_for, launch_for
 
 
 def search_strategy_overlap(
@@ -123,8 +142,14 @@ def search_strategy_overlap(
     algo: str = "ring",
     alpha_s: float = 0.0,
     calibration=None,
+    wire_dtype: str = "bf16",
 ) -> OverlapSearchResult:
     """Rank (d1, d2) x chunks x seq_parallel by exposed comm time.
+
+    ``wire_dtype`` prices boundary collectives at 1 byte/elem for
+    "int8"/"fp8" (MoE dispatch stays full width) and, when the
+    calibration table carries measured quantized bandwidths, ranks
+    against those instead of the full-width measurements.
 
     ``seq_parallel`` subsumes the retired ``ATPContext.use_reduce_scatter``
     knob: the fused psum+slice boundary it named is exactly the
@@ -142,8 +167,8 @@ def search_strategy_overlap(
     """
 
     calibration = CalibrationTable.coerce(calibration)
-    calib_for, alpha_for, chunk_eff_for = _calibration_lookups(
-        calibration, alpha_s)
+    calib_for, alpha_for, chunk_eff_for, launch_for = _calibration_lookups(
+        calibration, alpha_s, wire_dtype)
 
     costs = []
     for d1, d2 in factorizations(tp_degree):
@@ -160,7 +185,9 @@ def search_strategy_overlap(
                     peak_tflops=peak_tflops, algo=algo,
                     alpha_s=alpha_for(d1, d2),
                     calibrated=calib_for(d1, d2),
-                    chunk_eff=chunk_eff_for(d1, d2)))
+                    chunk_eff=chunk_eff_for(d1, d2),
+                    chunk_launch_s=launch_for(d1, d2),
+                    wire_dtype=wire_dtype))
     if not costs:
         raise ValueError(
             f"no valid (d1,d2) for tp={tp_degree} on {matrix.name}")
@@ -233,6 +260,7 @@ def search_strategy_segments(
     algo: str = "ring",
     alpha_s: float = 0.0,
     calibration=None,
+    wire_dtype: str = "bf16",
 ) -> SegmentedSearchResult:
     """Per-segment knob search over a shared (d1, d2) mesh.
 
@@ -251,8 +279,8 @@ def search_strategy_segments(
     if not workloads:
         raise ValueError("search_strategy_segments needs >= 1 workload")
     calibration = CalibrationTable.coerce(calibration)
-    calib_for, alpha_for, chunk_eff_for = _calibration_lookups(
-        calibration, alpha_s)
+    calib_for, alpha_for, chunk_eff_for, launch_for = _calibration_lookups(
+        calibration, alpha_s, wire_dtype)
 
     meshes = []
     for d1, d2 in factorizations(tp_degree):
@@ -270,7 +298,9 @@ def search_strategy_segments(
                 chunks=chunks, seq_parallel=sp, peak_tflops=peak_tflops,
                 algo=algo, alpha_s=alpha_for(d1, d2),
                 calibrated=calib_for(d1, d2),
-                chunk_eff=chunk_eff_for(d1, d2))
+                chunk_eff=chunk_eff_for(d1, d2),
+                chunk_launch_s=launch_for(d1, d2),
+                wire_dtype=wire_dtype)
                 for chunks in chunks_options for sp in sp_opts]
             best = min(cands, key=lambda c: (c.t_exposed, c.chunks,
                                              c.seq_parallel))
@@ -318,6 +348,7 @@ def search_strategy_decode(
     launch_s: float = DECODE_LAUNCH_S,
     calibration=None,
     boundary_mode: str | None = None,
+    wire_dtype: str = "bf16",
 ) -> DecodeSearchResult:
     """Rank (d1, d2) by modelled per-token decode latency (serve objective).
 
@@ -337,7 +368,8 @@ def search_strategy_decode(
     if not workloads:
         raise ValueError("search_strategy_decode needs >= 1 workload")
     calibration = CalibrationTable.coerce(calibration)
-    calib_for, alpha_for, _ = _calibration_lookups(calibration, alpha_s)
+    calib_for, alpha_for, _, _ = _calibration_lookups(
+        calibration, alpha_s, wire_dtype)
 
     costs = []
     for d1, d2 in factorizations(tp_degree):
@@ -352,7 +384,7 @@ def search_strategy_decode(
             matrix, d1, d2, workloads=workloads, batch=batch,
             bytes_per_elem=bytes_per_elem, alpha_s=alpha_for(d1, d2),
             launch_s=launch_s, calibrated=calib_for(d1, d2),
-            boundary_mode=bm))
+            boundary_mode=bm, wire_dtype=wire_dtype))
     if not costs:
         raise ValueError(
             f"no valid (d1,d2) for tp={tp_degree} on {matrix.name}")

@@ -16,8 +16,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _mm_kernel(a_ref, b_ref, *rest, activation: str | None):
-    bias_ref, o_ref, acc = rest if len(rest) == 3 else (None, *rest)
+def _mm_kernel(*refs, activation: str | None, has_scale: bool,
+               has_bias: bool):
+    a_ref, b_ref = refs[0], refs[1]
+    i = 2
+    scale_ref = refs[i] if has_scale else None
+    i += has_scale
+    bias_ref = refs[i] if has_bias else None
+    i += has_bias
+    o_ref, acc = refs[i], refs[i + 1]
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -31,13 +38,19 @@ def _mm_kernel(a_ref, b_ref, *rest, activation: str | None):
 
     @pl.when(ki == nk - 1)
     def _fin():
+        scale = None if scale_ref is None else scale_ref[0, 0]
         bias = None if bias_ref is None else bias_ref[...].astype(jnp.float32)
-        out = _epilogue(acc[...], bias, activation)
+        out = _epilogue(acc[...], scale, bias, activation)
         o_ref[...] = out.astype(o_ref.dtype)
 
 
-def _epilogue(out, bias, activation: str | None):
-    """Fused K-loop epilogue: bias add (broadcast over rows), then act."""
+def _epilogue(out, scale, bias, activation: str | None):
+    """Fused K-loop epilogue: dequant, bias add (broadcast over rows), act.
+
+    Dequant comes FIRST — the f32 accumulator holds the integer-grid
+    product, and bias/activation are defined on real-valued activations."""
+    if scale is not None:
+        out = out * scale
     if bias is not None:
         out = out + bias
     if activation == "gelu":
@@ -47,17 +60,27 @@ def _epilogue(out, bias, activation: str | None):
     return out
 
 
-def matmul(a, b, bias=None, *, activation: str | None = None,
-           block_m: int = 128, block_n: int = 128, block_k: int = 128,
-           interpret: bool = False):
-    """a: [M, K] @ b: [K, N] -> [M, N] (+fused bias [N] and activation).
+def matmul(a, b, bias=None, *, scale=None, activation: str | None = None,
+           out_dtype=None, block_m: int = 128, block_n: int = 128,
+           block_k: int = 128, interpret: bool = False):
+    """a: [M, K] @ b: [K, N] -> [M, N] (+fused dequant/bias/activation).
 
     The bias rides the last K-step's epilogue (applied before the
-    activation) instead of a separate post-GEMM elementwise kernel."""
+    activation) instead of a separate post-GEMM elementwise kernel.
+
+    ``scale`` enables the quantized path: a/b hold integer-grid values
+    (int8, accumulated in fp32 by the same K loop) and ``scale`` is the
+    combined dequant factor ``a_scale * b_scale`` applied in the epilogue
+    BEFORE bias/activation — dequant rides the last K step exactly like
+    the bias does.  Pass ``out_dtype`` when the inputs are int8 (the
+    output must be a float dtype; defaults to a.dtype otherwise).
+    """
     M, K = a.shape
     K2, N = b.shape
     assert K == K2
     assert bias is None or bias.shape == (N,)
+    if out_dtype is None:
+        out_dtype = jnp.bfloat16 if a.dtype == jnp.int8 else a.dtype
     bm, bn, bk = (min(block_m, M), min(block_n, N), min(block_k, K))
     pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
     if pm or pk:
@@ -69,16 +92,34 @@ def matmul(a, b, bias=None, *, activation: str | None = None,
         pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
     ]
     operands = [a, b]
+    if scale is not None:
+        # one (1,1) f32 scalar operand, broadcast to every grid cell
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)))
+        operands.append(jnp.asarray(scale, jnp.float32).reshape(1, 1))
     if bias is not None:
         in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
         operands.append(jnp.pad(bias, (0, pn)).reshape(1, b.shape[1]))
     out = pl.pallas_call(
-        functools.partial(_mm_kernel, activation=activation),
+        functools.partial(_mm_kernel, activation=activation,
+                          has_scale=scale is not None,
+                          has_bias=bias is not None),
         grid=(a.shape[0] // bm, b.shape[1] // bn, a.shape[1] // bk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), a.dtype),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(*operands)
     return out[:M, :N] if (pm or pn) else out
+
+
+def quantize_for_matmul(x, qmax: float = 127.0):
+    """Tensor-wise symmetric int8 quantization for the quantized matmul.
+
+    Returns (q int8 [M, K], scale f32 scalar) with ``q * scale ~= x``;
+    feed two quantized operands and ``scale=a_scale * b_scale`` to
+    :func:`matmul`."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)) / qmax, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale

@@ -121,6 +121,10 @@ def main():
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--num-pages", type=int, default=0,
                     help="page-pool size (0 = sized to the workload)")
+    ap.add_argument("--page-dtype", choices=("bf16", "int8", "fp8"),
+                    default="bf16",
+                    help="KV page-pool storage dtype (int8/fp8 store 1 "
+                         "byte/elem + fp16 per-position scales)")
     ap.add_argument("--plan", default=None,
                     help="load a saved ParallelPlan JSON (train --save-plan)")
     ap.add_argument("--auto-atp", action="store_true",
@@ -172,7 +176,8 @@ def main():
         scfg = ServerConfig(
             batch_slots=args.slots, prefill_chunk=args.prefill_chunk,
             paged=PagedConfig(page_size=args.page_size,
-                              num_pages=num_pages, pages_per_slot=mp))
+                              num_pages=num_pages, pages_per_slot=mp,
+                              page_dtype=args.page_dtype))
         server, _ = make_paged_server(cfg, scfg, params, plan=plan,
                                       topo=topo)
         for rid, p in enumerate(prompts):

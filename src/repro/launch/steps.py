@@ -101,11 +101,14 @@ def resolve_ctx(topo: MeshTopo | None, plan, chunks: int = 1,
     if decode and plan is not None \
             and getattr(plan, "decode", None) is not None:
         dec = plan.decode
+        wd = getattr(dec, "wire_dtype", "bf16")
         ctx = dataclasses.replace(
             ctx, chunks=dec.chunks, boundary_mode=dec.boundary_mode,
+            wire_dtype=wd,
             segment_plans=tuple(
                 dataclasses.replace(s, chunks=dec.chunks,
-                                    boundary_mode=dec.boundary_mode)
+                                    boundary_mode=dec.boundary_mode,
+                                    wire_dtype=wd)
                 for s in ctx.segment_plans))
     if decode and ctx.any_seq_parallel:
         ctx = dataclasses.replace(

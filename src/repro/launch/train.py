@@ -136,6 +136,11 @@ def make_elastic_trainer(cfg, plan: ParallelPlan, opt_cfg, trainer_cfg,
                                      live["ctx"], opt_cfg.mode)
         return params, jax.device_put(opt, inf.sharding(inf.ospecs))
 
+    # the checkpoint's canonical (plan-independent) opt layout: zero1's
+    # banked state unbanks to "plain"; compressed keeps its own mode so
+    # the error-feedback residual ("err") rides the checkpoint too
+    canon_mode = "plain" if opt_cfg.mode == "zero1" else opt_cfg.mode
+
     def ckpt_template():
         """Abstract shape/dtype view of the checkpoint tree (params +
         canonical opt) — restore needs no materialized throwaway state."""
@@ -143,7 +148,7 @@ def make_elastic_trainer(cfg, plan: ParallelPlan, opt_cfg, trainer_cfg,
         params = jax.eval_shape(
             lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
         canon = adamw.init_opt_state(params, inf.pspecs, live["ctx"],
-                                     "plain", abstract=True)
+                                     canon_mode, abstract=True)
         return (params, canon)
 
     def restore_shardings():
@@ -156,7 +161,8 @@ def make_elastic_trainer(cfg, plan: ParallelPlan, opt_cfg, trainer_cfg,
         from repro.checkpoint import manager as ckpt
 
         inf = live["info"]
-        canon_specs = adamw.opt_state_specs(inf.pspecs, live["ctx"], "plain")
+        canon_specs = adamw.opt_state_specs(inf.pspecs, live["ctx"],
+                                            canon_mode)
         canon_host = jax.tree.map(lambda _: ckpt.HOST, canon_specs,
                                   is_leaf=lambda x: isinstance(x, P))
         return (inf.sharding(inf.pspecs), canon_host)

@@ -407,6 +407,8 @@ def init_paged_caches(cfg: ModelConfig, ctx: ATPContext,
     del n  # banks formula lives in _attn_cache_shape
     flat = _flat_axes(ctx)
     np_, pg = pcfg.num_pages, pcfg.page_size
+    store = paging.page_store_dtype(pcfg.page_dtype)
+    pool_dtype = dtype if store is None else store
 
     def arr(shape, dt):
         if abstract:
@@ -416,17 +418,28 @@ def init_paged_caches(cfg: ModelConfig, ctx: ATPContext,
     def attn_pool(count):
         banks = _attn_cache_shape(cfg, ctx, 1, 1)[2]
         shape = (count, np_, pg, banks, cfg.hd)
-        c = {"k": arr(shape, dtype), "v": arr(shape, dtype)}
+        c = {"k": arr(shape, pool_dtype), "v": arr(shape, pool_dtype)}
         sp = {"k": P(None, None, None, flat, None),
               "v": P(None, None, None, flat, None)}
+        if pcfg.quantized:
+            # parallel scale pools: same paging, feature dim dropped
+            c["k_scale"] = arr((count, np_, pg, banks), jnp.float16)
+            c["v_scale"] = arr((count, np_, pg, banks), jnp.float16)
+            sp["k_scale"] = P(None, None, None, flat)
+            sp["v_scale"] = P(None, None, None, flat)
         return c, sp
 
     def mla_pool(count):
         m = cfg.mla
-        c = {"ckv": arr((count, np_, pg, m.kv_lora_rank), dtype),
-             "krope": arr((count, np_, pg, m.qk_rope_head_dim), dtype)}
+        c = {"ckv": arr((count, np_, pg, m.kv_lora_rank), pool_dtype),
+             "krope": arr((count, np_, pg, m.qk_rope_head_dim), pool_dtype)}
         sp = {"ckv": P(None, None, None, None),
               "krope": P(None, None, None, None)}
+        if pcfg.quantized:
+            c["ckv_scale"] = arr((count, np_, pg), jnp.float16)
+            c["krope_scale"] = arr((count, np_, pg), jnp.float16)
+            sp["ckv_scale"] = P(None, None, None)
+            sp["krope_scale"] = P(None, None, None)
         return c, sp
 
     caches, specs = {}, {}

@@ -124,11 +124,19 @@ def mla_block(
             # paged serving: the latent pools are position-paged exactly
             # like K/V; scatter this run, gather the slot's mapped pages
             table, start = paged["table"], paged["start"]
-            pckv = paging.append_tokens(cache["ckv"], table, start, ckv)
-            pkr = paging.append_tokens(cache["krope"], table, start, k_pe_new)
+            pd = paging.pool_page_dtype(cache["ckv"])
+            pckv, pckv_s = paging.append_tokens_q(
+                cache["ckv"], cache.get("ckv_scale"), table, start, ckv, pd)
+            pkr, pkr_s = paging.append_tokens_q(
+                cache["krope"], cache.get("krope_scale"), table, start,
+                k_pe_new, pd)
             new_cache = {"ckv": pckv, "krope": pkr}
-            cckv = paging.gather_pages(pckv, table)     # [b, S_alloc, rank]
-            ckr = paging.gather_pages(pkr, table)
+            if pckv_s is not None:
+                new_cache["ckv_scale"], new_cache["krope_scale"] = pckv_s, pkr_s
+            cckv = paging.gather_pages_q(pckv, pckv_s, table,
+                                         out_dtype=ckv.dtype)  # [b,S_alloc,rank]
+            ckr = paging.gather_pages_q(pkr, pkr_s, table,
+                                        out_dtype=k_pe_new.dtype)
             klen = start                                 # [b] per-slot
         else:
             klen = cache["len"]

@@ -42,6 +42,15 @@ import numpy as np
 #: physical page reserved for unmapped table entries / padded writes
 GARBAGE_PAGE = 0
 
+#: storage dtypes a page pool supports; "bf16" means "the model dtype"
+#: (no quantization), the narrow ones store 1 byte/elem plus an fp16
+#: per-position scale
+PAGE_DTYPES = ("bf16", "int8", "fp8")
+
+_INT8_QMAX = 127.0
+_FP8_QMAX = 448.0  # float8_e4m3fn finite max
+_FP8_DTYPE = getattr(jnp, "float8_e4m3fn", None)
+
 
 @dataclasses.dataclass(frozen=True)
 class PagedConfig:
@@ -53,15 +62,30 @@ class PagedConfig:
     ceiling is ``pages_per_slot * page_size`` (the paged analogue of
     ``s_max``, but it bounds only the *table*, not the memory: unmapped
     entries cost nothing).
+
+    ``page_dtype`` picks the pool storage format: "bf16" stores the model
+    dtype verbatim; "int8"/"fp8" store 1 byte per element plus an fp16
+    per-position scale pool (symmetric, shared across the feature dim —
+    see :func:`quantize_tokens`).  Quant/dequant happens at the pool
+    boundary (:func:`append_tokens_q` / :func:`gather_pages_q`); attention
+    itself always runs on dequantized full-width values.
     """
 
     page_size: int = 8
     num_pages: int = 64
     pages_per_slot: int = 8
+    page_dtype: str = "bf16"
 
     def __post_init__(self):
         if self.page_size < 1 or self.num_pages < 2 or self.pages_per_slot < 1:
             raise ValueError(f"degenerate page geometry: {self}")
+        if self.page_dtype not in PAGE_DTYPES:
+            raise ValueError(f"page_dtype must be one of {PAGE_DTYPES}, "
+                             f"got {self.page_dtype!r}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.page_dtype != "bf16"
 
     @property
     def max_seq(self) -> int:
@@ -180,3 +204,87 @@ def append_tokens(pages, table, start, values):
             logical, table.shape[1] - 1), axis=1), GARBAGE_PAGE)
     off = pos % page
     return pages.at[phys, off].set(values.astype(pages.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Quantized pools: int8/fp8 storage + fp16 per-position scales.
+# ---------------------------------------------------------------------------
+
+
+def page_store_dtype(page_dtype: str):
+    """The jnp storage dtype for a quantized pool (None = model dtype).
+
+    "fp8" falls back to int8 storage on jax builds without
+    ``float8_e4m3fn`` — same byte count, slightly different grid.
+    """
+    if page_dtype == "int8":
+        return jnp.int8
+    if page_dtype == "fp8":
+        return _FP8_DTYPE if _FP8_DTYPE is not None else jnp.int8
+    if page_dtype == "bf16":
+        return None
+    raise ValueError(f"page_dtype must be one of {PAGE_DTYPES}, "
+                     f"got {page_dtype!r}")
+
+
+def pool_page_dtype(pages) -> str:
+    """Recover the PAGE_DTYPES tag from a pool tensor's storage dtype.
+
+    The compiled step sees only the cache tree, not the PagedConfig, so
+    the quant path keys off the pool dtype itself (fp8-fallback pools
+    stored as int8 correctly report "int8" — their grid)."""
+    if pages.dtype == jnp.int8:
+        return "int8"
+    if _FP8_DTYPE is not None and pages.dtype == _FP8_DTYPE:
+        return "fp8"
+    return "bf16"
+
+
+def quantize_tokens(values, page_dtype: str):
+    """values [..., feat] -> (quantized [..., feat], fp16 scales [...]).
+
+    Symmetric per-position quantization: one scale per token position
+    (shared over the trailing feature dim), so the scale pool is a
+    parallel paged tensor with the feature dim dropped and rides the same
+    page tables through :func:`append_tokens` / :func:`gather_pages`.
+    Scales are stored fp16 — at head_dim >= 32 an f32 scale alone would
+    eat the margin below a 1.8x pool-byte reduction.
+    """
+    vf = values.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(vf), axis=-1)
+    fp8 = page_dtype == "fp8" and _FP8_DTYPE is not None
+    qmax = _FP8_QMAX if fp8 else _INT8_QMAX
+    scale = jnp.maximum(amax / qmax, 1e-12)
+    q = vf / scale[..., None]
+    if fp8:
+        q = q.astype(_FP8_DTYPE)
+    else:
+        q = jnp.clip(jnp.round(q), -_INT8_QMAX, _INT8_QMAX).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def append_tokens_q(pages, scales, table, start, values, page_dtype: str):
+    """Quant-aware :func:`append_tokens`: returns (new_pages, new_scales).
+
+    ``scales is None`` means the pool is full-width — plain append, scale
+    pool untouched.  Otherwise the values are quantized per position and
+    both the value pool and the parallel scale pool are scattered through
+    the same table."""
+    if scales is None:
+        return append_tokens(pages, table, start, values), None
+    q, s = quantize_tokens(values, page_dtype)
+    return (append_tokens(pages, table, start, q),
+            append_tokens(scales, table, start, s))
+
+
+def gather_pages_q(pages, scales, table, out_dtype=jnp.bfloat16):
+    """Quant-aware :func:`gather_pages`: dequantize at the pool boundary.
+
+    ``scales is None`` -> plain gather.  Otherwise gathers values and
+    scales through the same table and returns ``values * scale`` in
+    ``out_dtype`` (attention always runs full-width)."""
+    if scales is None:
+        return gather_pages(pages, table)
+    v = gather_pages(pages, table).astype(jnp.float32)
+    s = gather_pages(scales, table).astype(jnp.float32)
+    return (v * s[..., None]).astype(out_dtype)

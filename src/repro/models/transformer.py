@@ -156,11 +156,16 @@ def attn_block(
         # tables, then attend over each slot's MAPPED pages only (per-slot
         # positions; garbage-page reads are masked by start + s)
         table, start = paged["table"], paged["start"]
-        ck = paging.append_tokens(cache["k"], table, start, k)
-        cv = paging.append_tokens(cache["v"], table, start, v)
+        pd = paging.pool_page_dtype(cache["k"])
+        ck, cks = paging.append_tokens_q(cache["k"], cache.get("k_scale"),
+                                         table, start, k, pd)
+        cv, cvs = paging.append_tokens_q(cache["v"], cache.get("v_scale"),
+                                         table, start, v, pd)
         new_cache = {"k": ck, "v": cv}
-        kk = paging.gather_pages(ck, table)
-        vv = paging.gather_pages(cv, table)
+        if cks is not None:
+            new_cache["k_scale"], new_cache["v_scale"] = cks, cvs
+        kk = paging.gather_pages_q(ck, cks, table, out_dtype=k.dtype)
+        vv = paging.gather_pages_q(cv, cvs, table, out_dtype=v.dtype)
         o = L.attention_core(cfg, q, kk, vv, q_offset=start,
                              kv_len=start + q.shape[1], window=layer_window)
     elif decode:

@@ -119,7 +119,15 @@ def init_opt_state(params, param_specs_tree, ctx: ATPContext,
                 "v": mk((dp, tpn, k), jnp.float32)}
 
     leaves = jax.tree.map(leaf_state, params, param_specs_tree)
-    return {"step": mk((), jnp.int32), "leaves": leaves}
+    state = {"step": mk((), jnp.int32), "leaves": leaves}
+    if mode == "compressed":
+        # persistent error-feedback residual: what int8 rounding dropped
+        # this step is added back before quantizing the next step.  Param-
+        # shaped f32 like plain m/v (compressed is never zero1-banked), so
+        # it checkpoints and reshards exactly like the moments.
+        state["err"] = jax.tree.map(
+            lambda x: mk(x.shape, jnp.float32), params)
+    return state
 
 
 def opt_state_specs(param_specs_tree, ctx: ATPContext, mode: str = "zero1"):
@@ -134,9 +142,12 @@ def opt_state_specs(param_specs_tree, ctx: ATPContext, mode: str = "zero1"):
         s = P(dp_t, axes if axes else None, None)
         return {"m": s, "v": s}
 
-    return {"step": P(),
-            "leaves": jax.tree.map(leaf_spec, param_specs_tree,
-                                   is_leaf=lambda x: isinstance(x, P))}
+    out = {"step": P(),
+           "leaves": jax.tree.map(leaf_spec, param_specs_tree,
+                                  is_leaf=lambda x: isinstance(x, P))}
+    if mode == "compressed":
+        out["err"] = param_specs_tree
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -317,10 +328,22 @@ def apply_adamw(
     step = opt_state["step"]
     lr = lr_at(cfg, step)
 
+    new_err = None
     if cfg.mode == "compressed":
-        from repro.optim.grad_compress import compressed_psum_mean
-        grads = jax.tree.map(
-            lambda g: compressed_psum_mean(g, dp_axes), grads)
+        from repro.optim.grad_compress import (compressed_psum_mean,
+                                               compressed_psum_mean_ef)
+        err = opt_state.get("err")
+        if err is None:
+            # legacy state (pre-error-feedback checkpoint): memoryless path
+            grads = jax.tree.map(
+                lambda g: compressed_psum_mean(g, dp_axes), grads)
+        else:
+            flat_g, gdef = jax.tree.flatten(grads)
+            flat_e = gdef.flatten_up_to(err)
+            res = [compressed_psum_mean_ef(g, e, dp_axes)
+                   for g, e in zip(flat_g, flat_e)]
+            grads = jax.tree.unflatten(gdef, [r[0] for r in res])
+            new_err = jax.tree.unflatten(gdef, [r[1] for r in res])
     elif dp_axes and cfg.mode == "plain":
         grads = jax.tree.map(lambda g: lax.pmean(g, dp_axes), grads)
 
@@ -350,8 +373,10 @@ def apply_adamw(
     out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
     new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
     new_leaves = jax.tree.unflatten(tdef, [o[1] for o in out])
-    return new_params, {"step": step + 1, "leaves": new_leaves}, \
-        {"lr": lr, "grad_norm": gnorm}
+    new_state = {"step": step + 1, "leaves": new_leaves}
+    if new_err is not None:
+        new_state["err"] = new_err
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
 
 
 def _zero1_step(cfg, ctx, params, grads, opt_state, lr, rep=None):

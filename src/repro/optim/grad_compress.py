@@ -34,7 +34,18 @@ def compressed_psum_mean(g, axes, bits: int = 8):
 
 
 def compressed_psum_mean_ef(g, err, axes, bits: int = 8):
-    """Error-feedback variant.  Returns (mean_grad, new_err)."""
+    """Error-feedback variant.  Returns (mean_grad, new_err).
+
+    The raw quantization residual lives per DP rank (each rank quantized
+    its OWN gradient), which would make the carried state unreplicated —
+    impossible to emit from a replication-checked shard_map, to
+    checkpoint under the parameter specs, or to survive an elastic dp
+    change.  So the residuals are averaged over the group on a second
+    int8 wire: ``new_err`` is the (quantized) DP-mean residual,
+    replicated like the parameters.  Total wire cost 2 bytes/elem —
+    still half of f32 gradients — and the carried state approximates
+    ``true_mean - mean_grad`` to one residual-grid step.
+    """
     if not axes:
         return g, err
     gf = g.astype(jnp.float32) + err
@@ -42,6 +53,6 @@ def compressed_psum_mean_ef(g, err, axes, bits: int = 8):
     qmax = float(2 ** (bits - 1) - 1)
     scale = jnp.maximum(amax / qmax, 1e-12)
     q = jnp.clip(jnp.round(gf / scale), -qmax, qmax)
-    new_err = gf - q * scale
+    new_err = compressed_psum_mean(gf - q * scale, axes, bits=bits)
     total = lax.psum(q.astype(jnp.int32), axes).astype(jnp.float32) * scale
     return (total / _dp_degree(axes)).astype(g.dtype), new_err

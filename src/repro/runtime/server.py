@@ -109,6 +109,24 @@ class Server:
     def busy(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)
 
+    def cache_bytes(self) -> int:
+        """Device bytes held by the page pools — value leaves plus, for
+        quantized pools, the fp16 scale leaves (the honest total the
+        quantization ratio is measured against)."""
+        import jax
+
+        return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                   for x in jax.tree.leaves(self.caches))
+
+    def stats(self) -> dict:
+        """Scheduler/pool counters for benches and operators."""
+        return {"ticks": self.ticks,
+                "live_tokens": sum(s.length for s in self.slots
+                                   if s is not None),
+                "free_pages": self.alloc.free_pages,
+                "page_dtype": self.cfg.paged.page_dtype,
+                "cache_bytes": self.cache_bytes()}
+
     def _chunk_rounded(self, n: int) -> int:
         c = self.cfg.prefill_chunk
         return -(-n // c) * c

@@ -304,7 +304,7 @@ def test_v2_fixture_still_loads(tmp_path):
     assert plan.calibration.alpha(2, 2) == 2e-06
     # round-trips at the CURRENT version with decode recorded as null
     d = plan.to_dict()
-    assert d["format_version"] == PLAN_FORMAT_VERSION == 3
+    assert d["format_version"] == PLAN_FORMAT_VERSION == 4
     assert d["decode"] is None
     assert ParallelPlan.from_dict(d) == plan
 
