@@ -33,6 +33,11 @@ TRACKED = {
     "BENCH_serve.json": [
         ("summary.cache_bytes_ratio", "ratio"),
         ("summary.token_parity", "flag"),
+        ("summary.prefix_prefill_speedup_x", "ratio"),
+        ("summary.prefix_hit_rate", "ratio"),
+        ("summary.spec_greedy_parity", "flag"),
+        ("summary.spec_accept_rate", "ratio"),
+        ("summary.paged_read_flips_mesh", "flag"),
     ],
     "BENCH_quant.json": [
         ("summary.wire_bytes_ratio", "ratio"),

@@ -192,6 +192,172 @@ def _paged_cache_bytes(cfg, pcfg) -> int:
     return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches)))
 
 
+def run_prefix(cfg, params) -> dict:
+    """Copy-on-write prefix cache on a shared-system-prompt workload.
+
+    Eight requests share a 48-token system prompt (6 full pages) over
+    short per-request suffixes, ``max_new=1`` so the measurement is pure
+    prefill.  A warmer request (submitted and drained first, which also
+    compiles the chunk shape) registers the prefix in the radix index;
+    the measured batch then admits against a warm cache.  With the cache
+    off every request prefills all ~7 chunks; with it on, admission maps
+    the 6 shared pages and feeds only the suffix chunk.
+    """
+    import numpy as np
+
+    from repro.core.mesh import atp_topo
+    from repro.launch.serve import make_paged_server
+    from repro.models.paging import PagedConfig
+    from repro.runtime.server import Request, ServerConfig
+
+    SYS_LEN, N_REQ = 48, 8
+    rng = np.random.default_rng(7)
+    system = rng.integers(0, cfg.vocab_size, size=SYS_LEN, dtype=np.int32)
+    prompts = [np.concatenate([system, rng.integers(
+        0, cfg.vocab_size, size=int(rng.integers(4, 8)), dtype=np.int32)])
+        for _ in range(N_REQ + 1)]           # +1: the warmer
+    pool = 1 + sum(-(-(len(p) + 1) // PAGE) for p in prompts)
+    topo = atp_topo(1, 1, 1)
+
+    out = {}
+    for on in (False, True):
+        scfg = ServerConfig(
+            batch_slots=SLOTS, prefill_chunk=PAGE,
+            paged=PagedConfig(page_size=PAGE, num_pages=pool,
+                              pages_per_slot=-(-MAX_SEQ // PAGE)),
+            prefix_cache=on)
+        server, _ = make_paged_server(cfg, scfg, params, topo=topo)
+        server.submit(Request(rid=0, prompt=prompts[0], max_new=1))
+        server.run_until_drained()           # warm: compile + register
+        t0 = time.perf_counter()
+        for rid, p in enumerate(prompts[1:], start=1):
+            server.submit(Request(rid=rid, prompt=p, max_new=1))
+        server.run_until_drained()
+        wall = time.perf_counter() - t0
+        toks = sum(len(p) for p in prompts[1:])
+        st = server.stats()
+        out["on" if on else "off"] = {
+            "wall_s": round(wall, 4),
+            "prefill_tokens_per_s": round(toks / wall, 2),
+            "prefix_hit_rate": round(st["prefix_hit_rate"], 4),
+            "pages_shared_peak": st["pages_shared"],
+            "outs": [r.out for r in sorted(server.completed,
+                                           key=lambda r: r.rid)],
+        }
+    # the cache must be invisible in the tokens
+    assert out["on"]["outs"] == out["off"]["outs"], \
+        "prefix cache changed greedy tokens"
+    for d in out.values():
+        d.pop("outs")
+    out["speedup_x"] = round(out["on"]["prefill_tokens_per_s"]
+                             / out["off"]["prefill_tokens_per_s"], 3)
+    out["workload"] = {"system_tokens": SYS_LEN, "requests": N_REQ,
+                      "page_size": PAGE, "max_new": 1}
+    return out
+
+
+def _oracle_params(cfg, params):
+    """A parametrization whose MTP head is an exact next-step oracle.
+
+    Zeroing every block's output projections (attn ``wo``, mlp
+    ``w_down``) collapses the residual stream to the token embedding, so
+    greedy decode becomes a fixed chain t -> argmax lm_head(norm(emb(t)))
+    ; with ``proj_h = 0`` and ``proj_e = I`` the draft head computes the
+    SAME chain one step ahead, making every draft acceptable.  Random
+    init gives acceptance ~1/vocab (the parity leg still exercises the
+    rollback machinery); this harness pins the accept path itself.
+    """
+    import copy
+
+    import jax.numpy as jnp
+
+    p = copy.deepcopy(params)
+
+    def zero_block(bp):
+        bp["attn"]["wo"] = jnp.zeros_like(bp["attn"]["wo"])
+        bp["mlp"]["w_down"] = jnp.zeros_like(bp["mlp"]["w_down"])
+
+    for k in list(p):
+        if k.startswith("seg"):
+            zero_block(p[k])
+    zero_block(p["mtp"]["block"])
+    p["mtp"]["proj_h"] = jnp.zeros_like(p["mtp"]["proj_h"])
+    p["mtp"]["proj_e"] = jnp.eye(cfg.d_model,
+                                 dtype=p["mtp"]["proj_e"].dtype)
+    return p
+
+
+def run_speculative(cfg) -> dict:
+    """MTP self-speculative decode: greedy parity + acceptance rate.
+
+    Serves the mixed workload twice (plain paged vs ``speculate=True``)
+    on random init — tokens must match EXACTLY — then re-serves with the
+    oracle parametrization where every draft is acceptable, pinning a
+    positive mean accepted-draft rate and the tick savings it buys.
+    """
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.core.mesh import atp_topo
+    from repro.launch.serve import make_paged_server
+    from repro.models import lm
+    from repro.models.paging import PagedConfig
+    from repro.runtime.server import Request, ServerConfig
+
+    mcfg = dataclasses.replace(cfg, mtp=True)
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, mcfg.vocab_size, size=n, dtype=np.int32)
+               for n in PROMPT_LENS]
+    per_req = sorted((-(-(len(p) + MAX_NEW) // PAGE) for p in prompts),
+                     reverse=True)
+    pool = 1 + sum(per_req[:SLOTS])
+    topo = atp_topo(1, 1, 1)
+
+    def serve_all(ps, speculate):
+        scfg = ServerConfig(
+            batch_slots=SLOTS, prefill_chunk=CHUNK,
+            paged=PagedConfig(page_size=PAGE, num_pages=pool,
+                              pages_per_slot=-(-MAX_SEQ // PAGE)),
+            speculate=speculate)
+        server, _ = make_paged_server(mcfg, scfg, ps, topo=topo)
+        for rid, p in enumerate(prompts):
+            server.submit(Request(rid=rid, prompt=p, max_new=MAX_NEW))
+        ticks = server.run_until_drained()
+        outs = [r.out for r in sorted(server.completed,
+                                      key=lambda r: r.rid)]
+        return outs, ticks, server.stats()
+
+    plain, plain_ticks, _ = serve_all(params, False)
+    spec, spec_ticks, st = serve_all(params, True)
+    parity = spec == plain
+    assert parity, f"speculative decode broke greedy parity:\n{spec}\nvs\n{plain}"
+
+    oparams = _oracle_params(mcfg, params)
+    oplain, oplain_ticks, _ = serve_all(oparams, False)
+    ospec, ospec_ticks, ost = serve_all(oparams, True)
+    assert ospec == oplain, "oracle speculative decode broke parity"
+    assert ost["spec_accept_rate"] > 0.0, \
+        f"oracle drafts must be accepted (got {ost['spec_accept_rate']})"
+
+    return {
+        "random_init": {
+            "greedy_parity": parity,
+            "accept_rate": round(st["spec_accept_rate"], 4),
+            "plain_ticks": plain_ticks, "spec_ticks": spec_ticks,
+        },
+        "oracle": {
+            "accept_rate": round(ost["spec_accept_rate"], 4),
+            "drafts": ost["spec_drafts"],
+            "accepted": ost["spec_accepted"],
+            "plain_ticks": oplain_ticks, "spec_ticks": ospec_ticks,
+            "tick_reduction_x": round(oplain_ticks / ospec_ticks, 3),
+        },
+    }
+
+
 def modeled_decode_rankings() -> dict:
     """Decode-vs-train objective rankings per preset (pure cost model)."""
     from repro.core import comm_matrix as cm
@@ -223,6 +389,35 @@ def modeled_decode_rankings() -> dict:
     return out
 
 
+def modeled_paged_read_flip() -> dict:
+    """The paged-read term changing the chosen decode mesh (the pinned
+    ic1 + dbrx case from tests/test_serving.py, recorded as data)."""
+    from repro.configs.registry import get_config
+    from repro.core import comm_matrix as cm
+    from repro.core.cost_model import paged_read_model, segment_workloads
+    from repro.core.search import search_strategy_decode
+
+    cfg = get_config("dbrx-132b")
+    w = segment_workloads(cfg)
+    m = cm.PRESETS["ic1"]()
+    base = search_strategy_decode(m, 8, workloads=w, batch=64)
+    pr = paged_read_model(cfg, avg_len=4096, tp=8)
+    priced = search_strategy_decode(m, 8, workloads=w, batch=64,
+                                    paged_read=pr)
+    return {
+        "preset": "ic1", "arch": "dbrx-132b", "tp": 8, "batch": 64,
+        "avg_len": 4096,
+        "kv_bytes_per_token_per_layer": round(pr.kv_bytes_per_token, 1),
+        "unpriced_mesh": [base.best.d1, base.best.d2],
+        "unpriced_mode": base.best.boundary_mode,
+        "priced_mesh": [priced.best.d1, priced.best.d2],
+        "priced_mode": priced.best.boundary_mode,
+        "exposed_read_us": round(priced.best.t_read * 1e6, 2),
+        "mesh_flipped": (base.best.d1, base.best.d2)
+        != (priced.best.d1, priced.best.d2),
+    }
+
+
 def main() -> None:
     cfg, params, prompts = _setup()
 
@@ -239,9 +434,13 @@ def main() -> None:
     assert all(wave["outs"][i] == ref[i] for i in full), \
         "wave loop diverges from reference on unpadded prompts"
 
+    prefix = run_prefix(cfg, params)
+    spec = run_speculative(cfg)
+
     speedup = wave["wall_s"] / paged["wall_s"]
     rankings = modeled_decode_rankings()
     differs = [p for p, r in rankings.items() if r["decode_differs"]]
+    read_flip = modeled_paged_read_flip()
 
     summary = {
         "workload": {"requests": len(prompts), "prompt_lens": PROMPT_LENS,
@@ -256,6 +455,11 @@ def main() -> None:
         "cache_bytes_ratio": round(wave["cache_bytes"]
                                    / paged["cache_bytes"], 3),
         "decode_objective_differs_on": differs,
+        "prefix_prefill_speedup_x": prefix["speedup_x"],
+        "prefix_hit_rate": prefix["on"]["prefix_hit_rate"],
+        "spec_greedy_parity": spec["random_init"]["greedy_parity"],
+        "spec_accept_rate": spec["oracle"]["accept_rate"],
+        "paged_read_flips_mesh": read_flip["mesh_flipped"],
     }
     assert speedup > 1.0, (
         f"paged continuous batching must beat the wave loop: {speedup:.3f}x")
@@ -263,6 +467,12 @@ def main() -> None:
         "live-token page pool must undercut the dense slots x s_max cache")
     assert "ic4" in differs, (
         "decode objective must differ from train on the pinned ic4 preset")
+    assert summary["prefix_prefill_speedup_x"] >= 1.5, (
+        "shared-system-prompt prefill must speed up >= 1.5x with the "
+        f"prefix cache (got {summary['prefix_prefill_speedup_x']}x)")
+    assert summary["spec_accept_rate"] > 0.0
+    assert read_flip["mesh_flipped"], (
+        "the paged-read term must change the chosen decode mesh on ic1")
 
     for r in (wave, paged):
         r.pop("outs")  # tokens verified above; keep the artifact small
@@ -271,7 +481,10 @@ def main() -> None:
         "arch": "qwen1.5-0.5b (reduced)",
         "wave": wave,
         "paged": paged,
+        "prefix_cache": prefix,
+        "speculative": spec,
         "modeled_decode": rankings,
+        "modeled_paged_read": read_flip,
         "summary": summary,
     }
     with open(OUT_PATH, "w") as fh:

@@ -156,6 +156,12 @@ class DecodePlan:
     chunks: int = 1
     #: boundary wire dtype for decode steps (format_version 4)
     wire_dtype: str = "bf16"
+    #: MTP self-speculative decode pays on this interconnect: the tick
+    #: costs one extra token of boundary traffic but amortizes over
+    #: 1 + accept_rate tokens (format_version 5)
+    speculate: bool = False
+    #: copy-on-write prefix sharing at admission (format_version 5)
+    prefix_cache: bool = False
     #: modelled seconds per generated token behind the choice (provenance)
     predicted_t_step: float | None = None
 
@@ -182,12 +188,16 @@ class DecodePlan:
 
     def describe(self) -> str:
         wd = "" if self.wire_dtype == "bf16" else f" @{self.wire_dtype}"
-        return f"decode[({self.d1},{self.d2}) {self.boundary_mode}{wd}]"
+        sp = " +spec" if self.speculate else ""
+        pc = " +pfx" if self.prefix_cache else ""
+        return f"decode[({self.d1},{self.d2}) {self.boundary_mode}{wd}{sp}{pc}]"
 
     def to_dict(self) -> dict:
         return {"d1": self.d1, "d2": self.d2,
                 "boundary_mode": self.boundary_mode, "chunks": self.chunks,
                 "wire_dtype": self.wire_dtype,
+                "speculate": self.speculate,
+                "prefix_cache": self.prefix_cache,
                 "predicted_t_step": self.predicted_t_step}
 
     @staticmethod
@@ -197,6 +207,8 @@ class DecodePlan:
                           boundary_mode=d.get("boundary_mode", "psum"),
                           chunks=int(d.get("chunks", 1)),
                           wire_dtype=d.get("wire_dtype", "bf16"),
+                          speculate=bool(d.get("speculate", False)),
+                          prefix_cache=bool(d.get("prefix_cache", False)),
                           predicted_t_step=(None if ts is None
                                             else float(ts)))
 

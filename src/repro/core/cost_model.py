@@ -564,6 +564,85 @@ DECODE_LAUNCH_S = 6.0e-6
 
 
 @dataclasses.dataclass(frozen=True)
+class PagedReadModel:
+    """Per-tick paged-attention KV read cost (the decode cost-model debt:
+    measured in BENCH_serve.json since PR 5, unmodeled until now).
+
+    Every decode tick each live slot gathers its whole mapped history
+    from the page pools — ``avg_len`` tokens x ``kv_bytes_per_token``
+    per layer off HBM, plus the attention FLOPs over those tokens.  The
+    per-DEVICE volume is factorization-independent (attention banks are
+    sharded over the flat TP degree, MLA latents are replicated — either
+    way d1 x d2 is fixed across candidates), so what makes the term
+    mesh-RELEVANT is overlap with the boundary collectives: a ring
+    pipelines its transfers and leaves bandwidth slack the gather can
+    hide in (exposed = max(0, t_read - t_bytes)), while Rabenseifner
+    psum's log-step bursts leave nothing to hide behind (fully exposed).
+    Candidates with fatter wire terms therefore hide more of the read,
+    and the (d1, d2) argmin can flip once the term is priced.
+
+    Build one with :func:`paged_read_model` (derives the per-token bytes
+    and FLOPs from a ModelConfig) or construct directly for what-ifs.
+    """
+
+    kv_bytes_per_token: float    # per layer, per device
+    avg_len: float               # mean mapped history per live slot
+    layers: int
+    hbm_gbps: float = 800.0
+    attn_flops_per_token: float = 0.0   # per layer, per device
+    peak_tflops: float = 200.0
+
+    def t_read(self, batch: int) -> float:
+        """Seconds per decode tick spent gathering + scoring paged KV."""
+        per_tok = (self.kv_bytes_per_token / (self.hbm_gbps * 1e9)
+                   + self.attn_flops_per_token / (self.peak_tflops * 1e12))
+        return batch * self.avg_len * self.layers * per_tok
+
+
+def paged_read_model(cfg, *, avg_len: float, tp: int = 1,
+                     page_dtype: str = "bf16", hbm_gbps: float = 800.0,
+                     peak_tflops: float = 200.0) -> PagedReadModel:
+    """Derive a :class:`PagedReadModel` from a ModelConfig.
+
+    Per attention layer a token's cached KV costs ``2 * kv_dim`` elements
+    (split over the flat TP degree — banks are tp-sharded); an MLA layer
+    caches the replicated latent ``kv_lora_rank + qk_rope_head_dim``.
+    Recurrent kinds (mamba/zamba's inner blocks/xlstm) hold O(1) state —
+    no per-token read — so only their attention sub-blocks contribute.
+    Attention FLOPs per cached token are ``4 * q_dim`` (QK dot + value
+    weighting), tp-sharded.  ``page_dtype`` prices quantized pools at
+    1 byte/elem (scale reads are per-page, negligible).
+    """
+    from repro.configs.base import segments
+
+    elem = 1.0 if page_dtype in ("int8", "fp8") else 2.0
+    layers = 0
+    kv_bytes = 0.0
+    flops = 0.0
+    for s in segments(cfg):
+        if s.kind in ("dense", "moe", "zamba"):
+            # zamba: one shared attention block per super-block
+            kv_bytes += s.count * 2.0 * cfg.kv_dim * elem / max(1, tp)
+            flops += s.count * 4.0 * cfg.q_dim / max(1, tp)
+            layers += s.count
+        elif s.kind in ("mla_dense", "mla_moe"):
+            m = cfg.mla
+            kv_bytes += s.count * (m.kv_lora_rank + m.qk_rope_head_dim) * elem
+            flops += s.count * 4.0 * cfg.q_dim / max(1, tp)
+            layers += s.count
+        # mamba / xlstm: O(1) recurrent state, nothing to page-read
+    if layers == 0:
+        return PagedReadModel(kv_bytes_per_token=0.0, avg_len=avg_len,
+                              layers=0, hbm_gbps=hbm_gbps,
+                              peak_tflops=peak_tflops)
+    # normalize to per-layer averages so t_read(b) = b*len*layers*per_tok
+    return PagedReadModel(
+        kv_bytes_per_token=kv_bytes / layers, avg_len=avg_len,
+        layers=layers, hbm_gbps=hbm_gbps,
+        attn_flops_per_token=flops / layers, peak_tflops=peak_tflops)
+
+
+@dataclasses.dataclass(frozen=True)
 class DecodeStrategyCost:
     """Modelled per-decode-step (one token, whole model) cost of (d1, d2).
 
@@ -579,6 +658,15 @@ class DecodeStrategyCost:
     explicit ring (O(d) steps) under this latency model — decode
     virtually always answers "psum", the opposite pressure from the
     bandwidth-bound training objective.
+
+    ``t_read`` is the EXPOSED part of the per-tick paged KV gather when a
+    :class:`PagedReadModel` is priced (0.0 otherwise) — rings hide up to
+    ``t_bytes`` of it, psum hides none, so it shifts the psum/ring break-
+    even and with it the mesh choice.  ``speculate`` marks that this
+    candidate's ``t_step`` is the per-ACCEPTED-token cost of the MTP
+    self-speculative tick (s=2 payloads + one extra head block, amortized
+    over ``1 + accept_rate`` tokens) and that speculation beat the plain
+    tick on this interconnect.
     """
 
     d1: int
@@ -589,6 +677,8 @@ class DecodeStrategyCost:
     t_alpha: float
     t_bytes: float
     collectives: float   # collective launches per decode step
+    t_read: float = 0.0  # exposed paged-read seconds per token
+    speculate: bool = False
 
 
 def t_comm_decode(
@@ -604,6 +694,8 @@ def t_comm_decode(
     calibrated: tuple[float, float] | None = None,
     boundary_mode: str | None = None,
     wire_dtype: str = "bf16",
+    paged_read: PagedReadModel | None = None,
+    spec_accept_rate: float | None = None,
 ) -> DecodeStrategyCost:
     """Per-token decode communication time of one (d1, d2) factorization.
 
@@ -620,6 +712,18 @@ def t_comm_decode(
     ``boundary_mode`` forces psum/ring; default picks the cheaper.
     ``wire_dtype`` prices the boundary payloads at the quantized wire
     width (int8/fp8 = 1 byte/elem), exactly as in ``t_comm_overlap``.
+
+    ``paged_read`` adds the per-tick paged-attention KV gather: its raw
+    seconds are factorization-independent, but a ring overlaps streamed
+    chunks with the gather (exposed = max(0, t_read - t_bytes)) while
+    Rabenseifner's bursty log-steps hide nothing (fully exposed), so the
+    term shifts the psum/ring break-even — and with it the chosen mesh.
+    ``spec_accept_rate`` additionally evaluates the MTP self-speculative
+    tick for each mode: s=2 payloads (2x bandwidth term) plus one extra
+    head block (x (L+1)/L on the latency terms), amortized over
+    ``1 + accept_rate`` emitted tokens; the candidate wins whenever
+    acceptance outruns the overhead, and ``speculate`` records which tick
+    shape the returned cost describes.  Both default off (inert).
     """
     b1_raw, b2_raw = matrix.axis_bandwidths(d1, d2)
     if calibrated is not None:
@@ -668,16 +772,40 @@ def t_comm_decode(
                 coll += 2 * w.layers
         return launch, alpha, byte, coll
 
+    t_read_raw = paged_read.t_read(batch) if paged_read is not None else 0.0
+    L_total = sum(w.layers for w in workloads)
+    mtp_factor = (L_total + 1) / L_total if L_total > 0 else 1.0
+
     modes = ([boundary_mode] if boundary_mode is not None
              else ["psum", "ring"])
     best = None
     for bm in modes:
         algo = "ring" if bm == "ring" else "rabenseifner"
         launch, alpha, byte, coll = mode_cost(algo)
-        cand = DecodeStrategyCost(
+        # ring streams its transfers — the paged gather hides in the
+        # bandwidth slack; psum's bursty log-steps expose it fully
+        exposed = (max(0.0, t_read_raw - byte) if bm == "ring"
+                   else t_read_raw)
+        cands = [DecodeStrategyCost(
             d1=d1, d2=d2, boundary_mode=bm,
-            t_step=launch + alpha + byte,
-            t_launch=launch, t_alpha=alpha, t_bytes=byte, collectives=coll)
-        if best is None or cand.t_step < best.t_step:
-            best = cand
+            t_step=launch + alpha + byte + exposed,
+            t_launch=launch, t_alpha=alpha, t_bytes=byte, collectives=coll,
+            t_read=exposed)]
+        if spec_accept_rate is not None:
+            # speculative tick: s=2 payloads double the bandwidth term,
+            # the extra MTP head block scales the per-layer terms by
+            # (L+1)/L, and 1 + accept_rate tokens come out per tick
+            exposed_spec = (max(0.0, t_read_raw - 2.0 * byte)
+                            if bm == "ring" else t_read_raw)
+            t_tick = ((launch + alpha + 2.0 * byte) * mtp_factor
+                      + exposed_spec)
+            cands.append(DecodeStrategyCost(
+                d1=d1, d2=d2, boundary_mode=bm,
+                t_step=t_tick / (1.0 + spec_accept_rate),
+                t_launch=launch * mtp_factor, t_alpha=alpha * mtp_factor,
+                t_bytes=2.0 * byte * mtp_factor, collectives=coll,
+                t_read=exposed_spec, speculate=True))
+        for cand in cands:
+            if best is None or cand.t_step < best.t_step:
+                best = cand
     return best

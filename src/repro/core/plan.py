@@ -42,12 +42,16 @@ from repro.core.search import (search_strategy_decode,
 #: overlap strategies); v3 adds the optional ``decode`` sub-plan (the
 #: latency-aware serve objective's factorization + boundary_mode); v4 adds
 #: ``wire_dtype`` (quantized boundary collectives) on the plan, its
-#: segments and its decode sub-plan.  v1-v3 files load unchanged — v1
-#: global knobs broadcast to every segment (``segment_plan``), a missing
-#: ``decode`` means "serve with the train knobs" (the pre-v3 behavior),
-#: and a missing ``wire_dtype`` means full-width "bf16" (the pre-v4
-#: behavior).  Newer versions still fail loudly.
-PLAN_FORMAT_VERSION = 4
+#: segments and its decode sub-plan; v5 adds the decode sub-plan's
+#: ``speculate`` / ``prefix_cache`` serving knobs (MTP self-speculative
+#: decode priced by the search, copy-on-write prefix sharing).  v1-v4
+#: files load unchanged — v1 global knobs broadcast to every segment
+#: (``segment_plan``), a missing ``decode`` means "serve with the train
+#: knobs" (the pre-v3 behavior), a missing ``wire_dtype`` means
+#: full-width "bf16" (the pre-v4 behavior), and missing
+#: ``speculate``/``prefix_cache`` mean False (the pre-v5 behavior).
+#: Newer versions still fail loudly.
+PLAN_FORMAT_VERSION = 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -331,6 +335,9 @@ def plan_search(
     decode_batch: int | None = None,
     decode_alpha_s: float = DECODE_ALPHA_S,
     decode_launch_s: float = DECODE_LAUNCH_S,
+    decode_paged_read=None,
+    decode_accept_rate: float | None = None,
+    decode_prefix_cache: bool = False,
 ) -> PlanSearchResult:
     """Rank the full strategy space and emit ParallelPlans.
 
@@ -375,6 +382,16 @@ def plan_search(
     activations are latency-bound, so the serve factorization may differ
     from the train/prefill one; ``ParallelPlan.decode_view`` is the
     execution side of that split.
+
+    ``decode_paged_read`` (a :class:`cost_model.PagedReadModel`) adds the
+    per-tick paged-attention KV read term — exposed under bursty psum
+    boundaries, partially hidden behind a ring's pipelined transfers —
+    which can flip the chosen decode mesh.  ``decode_accept_rate`` (the
+    measured/expected MTP draft acceptance rate) makes the search price
+    self-speculative decode per candidate; when it wins, the emitted
+    DecodePlan records ``speculate=True``.  ``decode_prefix_cache``
+    stamps the admission-time COW prefix sharing knob onto the sub-plan
+    (an admission policy, not a per-mesh cost).
     """
     hm, preset = _resolve_matrix(matrix)
     calibration = CalibrationTable.coerce(calibration)
@@ -412,11 +429,15 @@ def plan_search(
             hm, tp_degree, workloads=dworkloads, batch=decode_batch,
             bytes_per_elem=bytes_per_elem, alpha_s=decode_alpha_s,
             launch_s=decode_launch_s, calibration=calibration,
-            boundary_mode=boundary_mode, wire_dtype=wire_dtype)
+            boundary_mode=boundary_mode, wire_dtype=wire_dtype,
+            paged_read=decode_paged_read,
+            spec_accept_rate=decode_accept_rate)
         decode_plan = DecodePlan(
             d1=dres.best.d1, d2=dres.best.d2,
             boundary_mode=dres.best.boundary_mode,
             wire_dtype=wire_dtype,
+            speculate=getattr(dres.best, "speculate", False),
+            prefix_cache=decode_prefix_cache,
             predicted_t_step=dres.best.t_step)
 
     prov = (
@@ -431,10 +452,17 @@ def plan_search(
     if wire_dtype != "bf16":
         prov += (("wire_dtype", wire_dtype),)
     if decode_plan is not None:
+        extras = ""
+        if decode_plan.speculate:
+            extras += f" +spec(accept={decode_accept_rate})"
+        if decode_plan.prefix_cache:
+            extras += " +prefix_cache"
+        if decode_paged_read is not None:
+            extras += " +paged_read"
         prov += (("decode",
                   f"objective=serve batch={decode_batch} -> "
                   f"DeviceMesh({decode_plan.d1},{decode_plan.d2}) "
-                  f"{decode_plan.boundary_mode}"),)
+                  f"{decode_plan.boundary_mode}{extras}"),)
 
     def boundary_for(d1: int, d2: int) -> str:
         bm = boundary_mode

@@ -349,6 +349,8 @@ def search_strategy_decode(
     calibration=None,
     boundary_mode: str | None = None,
     wire_dtype: str = "bf16",
+    paged_read=None,
+    spec_accept_rate: float | None = None,
 ) -> DecodeSearchResult:
     """Rank (d1, d2) by modelled per-token decode latency (serve objective).
 
@@ -364,6 +366,10 @@ def search_strategy_decode(
 
     ``calibration`` threads measured (B1, B2) and per-step alpha exactly
     like the training searches; ``batch`` is the decode slot count.
+    ``paged_read`` prices the per-tick paged KV gather (exposed only
+    where the boundary algorithm can't hide it — see ``t_comm_decode``);
+    ``spec_accept_rate`` lets each factorization also bid its MTP
+    self-speculative tick.  Both default off, leaving rankings unchanged.
     """
     if not workloads:
         raise ValueError("search_strategy_decode needs >= 1 workload")
@@ -384,7 +390,8 @@ def search_strategy_decode(
             matrix, d1, d2, workloads=workloads, batch=batch,
             bytes_per_elem=bytes_per_elem, alpha_s=alpha_for(d1, d2),
             launch_s=launch_s, calibrated=calib_for(d1, d2),
-            boundary_mode=bm, wire_dtype=wire_dtype))
+            boundary_mode=bm, wire_dtype=wire_dtype,
+            paged_read=paged_read, spec_accept_rate=spec_accept_rate))
     if not costs:
         raise ValueError(
             f"no valid (d1,d2) for tp={tp_degree} on {matrix.name}")

@@ -23,6 +23,7 @@ mesh.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import logging
 
 import jax
@@ -77,29 +78,70 @@ def make_paged_server(cfg, scfg: ServerConfig, params,
     than the train mesh, the stack is built from ``plan.decode_view()``
     — serving is decode-dominated, and prefill/decode share one set of
     sharded params and caches, so the decode mesh wins.
+
+    Mode resolution: recurrent archs (mamba/zamba/xlstm segments) get
+    the slot-addressed step automatically; ``speculate``/``prefix_cache``
+    come from the ServerConfig OR the plan's decode sub-plan (the search
+    records when they pay), and are downgraded with a log line when the
+    arch cannot support them (no MTP head, recurrent state).
     """
+    from repro.configs.base import segments
+
     if plan is not None:
         view = plan.decode_view()
         if (view.d1, view.d2) != (plan.d1, plan.d2):
             log.info("decode sub-plan re-meshes serving: %s -> "
                      "DeviceMesh(%d,%d)", plan.describe(), view.d1, view.d2)
+        topo = view.topo()
+        dec = view.decode
+        if dec is not None:
+            scfg = dataclasses.replace(
+                scfg, speculate=scfg.speculate or dec.speculate,
+                prefix_cache=scfg.prefix_cache or dec.prefix_cache)
         plan = view
-        topo = plan.topo()
     elif topo is None:
         raise TypeError("make_paged_server needs a plan or a topo")
+    recurrent = any(s.kind in lm.RECURRENT_STATE_KINDS
+                    for s in segments(cfg))
+    if scfg.speculate and (not cfg.mtp or recurrent):
+        log.info("speculative decode off: %s",
+                 "no MTP head" if not cfg.mtp else "recurrent state")
+        scfg = dataclasses.replace(scfg, speculate=False)
+    if scfg.prefix_cache and recurrent:
+        log.info("prefix cache off: recurrent state is not page-addressable")
+        scfg = dataclasses.replace(scfg, prefix_cache=False)
+    scfg = dataclasses.replace(scfg, recurrent=recurrent)
     mesh = topo.build()
-    step, info = build_paged_step(cfg, topo, paged_cfg=scfg.paged,
-                                  mesh=mesh, plan=plan)
+    step, info = build_paged_step(
+        cfg, topo, paged_cfg=scfg.paged, mesh=mesh, plan=plan,
+        slots=scfg.batch_slots if recurrent else None,
+        speculate=scfg.speculate)
     params = jax.device_put(params, info.sharding(info.pspecs))
 
     def init_caches():
-        caches, cache_specs = lm.init_paged_caches(cfg, info.ctx, scfg.paged)
+        caches, cache_specs = lm.init_paged_caches(
+            cfg, info.ctx, scfg.paged,
+            slots=scfg.batch_slots if recurrent else None)
         return jax.device_put(caches, info.sharding(cache_specs))
 
-    def step_fn(tokens, start, table, caches):
-        toks, caches = step(params, jnp.asarray(tokens),
-                            jnp.asarray(start), jnp.asarray(table), caches)
-        return np.asarray(toks), caches
+    if recurrent:
+        def step_fn(tokens, start, table, slot, caches):
+            toks, caches = step(params, jnp.asarray(tokens),
+                                jnp.asarray(start), jnp.asarray(table),
+                                jnp.asarray(slot), caches)
+            return np.asarray(toks), caches
+    elif scfg.speculate:
+        def step_fn(tokens, start, table, caches):
+            toks, drafts, caches = step(params, jnp.asarray(tokens),
+                                        jnp.asarray(start),
+                                        jnp.asarray(table), caches)
+            return np.asarray(toks), np.asarray(drafts), caches
+    else:
+        def step_fn(tokens, start, table, caches):
+            toks, caches = step(params, jnp.asarray(tokens),
+                                jnp.asarray(start), jnp.asarray(table),
+                                caches)
+            return np.asarray(toks), caches
 
     return Server(scfg, step_fn, init_caches), info
 
@@ -125,6 +167,12 @@ def main():
                     default="bf16",
                     help="KV page-pool storage dtype (int8/fp8 store 1 "
                          "byte/elem + fp16 per-position scales)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="copy-on-write prefix sharing across requests "
+                         "(radix index over page contents)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="MTP self-speculative decode (needs cfg.mtp; "
+                         "exact greedy parity)")
     ap.add_argument("--plan", default=None,
                     help="load a saved ParallelPlan JSON (train --save-plan)")
     ap.add_argument("--auto-atp", action="store_true",
@@ -177,7 +225,8 @@ def main():
             batch_slots=args.slots, prefill_chunk=args.prefill_chunk,
             paged=PagedConfig(page_size=args.page_size,
                               num_pages=num_pages, pages_per_slot=mp,
-                              page_dtype=args.page_dtype))
+                              page_dtype=args.page_dtype),
+            prefix_cache=args.prefix_cache, speculate=args.speculate)
         server, _ = make_paged_server(cfg, scfg, params, plan=plan,
                                       topo=topo)
         for rid, p in enumerate(prompts):
@@ -186,8 +235,13 @@ def main():
         for req in sorted(server.completed, key=lambda r: r.rid):
             log.info("request %d (%d prompt tokens) -> %s",
                      req.rid, len(req.prompt), req.out)
-        log.info("served %d requests in %d ticks (continuous)",
-                 len(server.completed), ticks)
+        st = server.stats()
+        log.info("served %d requests in %d ticks (continuous); "
+                 "pages_shared=%d prefix_hit_rate=%.3f "
+                 "spec_accept_rate=%.3f used_cache_bytes=%d",
+                 len(server.completed), ticks, st["pages_shared"],
+                 st["prefix_hit_rate"], st["spec_accept_rate"],
+                 st["used_cache_bytes"])
         return
 
     # wave baseline: equal-length waves

@@ -117,6 +117,89 @@ def main():
     check(got == solo,
           "paged continuous greedy tokens == per-request wave reference "
           "for every mixed-length prompt")
+
+    # 4. recurrent-kind paged serving: zamba's mixed attention+mamba
+    #    super-blocks run the same continuous scheduler (slot-addressed
+    #    state pools + paged KV for the shared attention block) at exact
+    #    wave-loop token parity
+    zcfg = get_config("zamba2-7b").reduced()
+    zparams = lm.init_params(zcfg, jax.random.PRNGKey(1))
+    zlens = [9, 4, 11, 6]
+    zprompts = [rng.integers(0, zcfg.vocab_size, size=n, dtype=np.int32)
+                for n in zlens]
+    zpool = 1 + sum(-(-(n + MAX_NEW) // 4) for n in zlens)
+    zscfg = ServerConfig(
+        batch_slots=2, prefill_chunk=4,
+        paged=PagedConfig(page_size=4, num_pages=zpool, pages_per_slot=8))
+    zserver, zinfo = make_paged_server(zcfg, zscfg, zparams, plan=loaded)
+    check(zserver.cfg.recurrent, "zamba server runs the slot-addressed step")
+    for rid, p in enumerate(zprompts):
+        zserver.submit(Request(rid=rid, prompt=p, max_new=MAX_NEW))
+    zticks = zserver.run_until_drained()
+    check(len(zserver.completed) == len(zprompts)
+          and zserver.alloc.free_pages == zpool - 1,
+          f"zamba paged serve drained in {zticks} ticks, pages returned")
+    zgot = [r.out for r in sorted(zserver.completed, key=lambda r: r.rid)]
+    zsolo = []
+    for p in zprompts:
+        outs = serve(zcfg, None, zparams, [p], MAX_NEW, 32, plan=view)
+        zsolo.append(outs[0].tolist())
+    check(zgot == zsolo,
+          "zamba paged continuous greedy tokens == wave reference")
+
+    # 5. MTP self-speculative decode: same arch with the MTP head, served
+    #    with --speculate, must emit EXACTLY the plain paged greedy tokens
+    #    (speculation changes latency, never the argmax sequence)
+    import dataclasses as _dc
+
+    mcfg = _dc.replace(cfg, mtp=True)
+    mparams = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    plain_server, _ = make_paged_server(mcfg, scfg, mparams, plan=loaded)
+    for rid, p in enumerate(prompts):
+        plain_server.submit(Request(rid=rid, prompt=p, max_new=MAX_NEW))
+    plain_server.run_until_drained()
+    plain = [r.out for r in sorted(plain_server.completed,
+                                   key=lambda r: r.rid)]
+    sscfg = _dc.replace(scfg, speculate=True)
+    spec_server, _ = make_paged_server(mcfg, sscfg, mparams, plan=loaded)
+    check(spec_server.cfg.speculate, "speculative server enabled")
+    for rid, p in enumerate(prompts):
+        spec_server.submit(Request(rid=rid, prompt=p, max_new=MAX_NEW))
+    sticks = spec_server.run_until_drained()
+    check(len(spec_server.completed) == len(prompts)
+          and spec_server.alloc.free_pages == pool - 1,
+          f"speculative serve drained in {sticks} ticks, pages returned")
+    spec = [r.out for r in sorted(spec_server.completed,
+                                  key=lambda r: r.rid)]
+    st = spec_server.stats()
+    check(spec == plain,
+          f"speculative greedy tokens EXACTLY match plain paged decode "
+          f"(accept_rate={st['spec_accept_rate']:.3f})")
+
+    # 6. copy-on-write prefix cache: a shared system prompt admits with
+    #    page-aligned reuse and still produces identical greedy tokens
+    pscfg = _dc.replace(scfg, prefix_cache=True)
+    sys_prefix = rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)
+    pprompts = [np.concatenate([sys_prefix, p]) for p in prompts[:4]]
+    ppool = 1 + sum(-(-(len(p) + MAX_NEW) // 4) for p in pprompts)
+    pscfg = _dc.replace(
+        pscfg, paged=_dc.replace(scfg.paged, num_pages=ppool))
+    pref_server, _ = make_paged_server(cfg, pscfg, params, plan=loaded)
+    for rid, p in enumerate(pprompts):
+        pref_server.submit(Request(rid=rid, prompt=p, max_new=MAX_NEW))
+    pref_server.run_until_drained()
+    pst = pref_server.stats()
+    check(pst["prefix_hit_rate"] > 0.0,
+          f"prefix cache hit on the shared system prompt "
+          f"(hit_rate={pst['prefix_hit_rate']:.3f})")
+    pgot = [r.out for r in sorted(pref_server.completed,
+                                  key=lambda r: r.rid)]
+    psolo = []
+    for p in pprompts:
+        outs = serve(cfg, None, params, [p], MAX_NEW, 32, plan=view)
+        psolo.append(outs[0].tolist())
+    check(pgot == psolo,
+          "prefix-cached greedy tokens == wave reference (COW is exact)")
     print("[serve-smoke] PASS")
 
 

@@ -16,7 +16,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.compat import shard_map
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig, ShapeConfig, segments
 from repro.core.atp import ATPContext, make_context
 from repro.core.mesh import MeshTopo
 from repro.models import lm
@@ -210,7 +210,8 @@ def _greedy_pick(ctx: ATPContext, cfg: ModelConfig, logits):
 def build_paged_step(cfg: ModelConfig, topo: MeshTopo | None = None,
                      paged_cfg=None,
                      mesh: jax.sharding.Mesh | None = None,
-                     plan=None):
+                     plan=None, slots: int | None = None,
+                     speculate: bool = False):
     """The compiled paged cache-write step (decode tick AND prefill chunk).
 
     Signature: (params, tokens [b, s], start [b], table [b, mp],
@@ -224,18 +225,98 @@ def build_paged_step(cfg: ModelConfig, topo: MeshTopo | None = None,
     every input position come back so the scheduler can read the last
     *valid* position of a padded final chunk on the host.
 
+    Two opt-in variants (the default signature is untouched):
+
+      - recurrent archs (mamba/zamba/xlstm segments) need ``slots`` (the
+        scheduler's ``batch_slots``, sizing the per-slot state pools) and
+        the step gains a 4th positional input ``slot [b]`` — per-row slot
+        ids, sentinel = ``slots`` for masked rows (state writes drop);
+      - ``speculate=True`` (requires ``cfg.mtp``) returns
+        (tokens, drafts, caches): ``drafts[b, s]`` is the MTP head's
+        greedy pick for the position AFTER each trunk pick — the free
+        draft token self-speculative decode verifies next tick.
+
     ``decode=True`` context resolution applies the plan's decode
     sub-plan knobs (boundary_mode, chunks=1) and masks seq_parallel.
     """
     from repro.models.paging import PagedConfig
 
     pcfg = paged_cfg if paged_cfg is not None else PagedConfig()
+    needs_slot = any(s.kind in lm.RECURRENT_STATE_KINDS
+                     for s in segments(cfg))
+    if needs_slot and slots is None:
+        raise ValueError(
+            "recurrent kinds (mamba/zamba/xlstm) need "
+            "build_paged_step(..., slots=<scheduler batch_slots>)")
+    if speculate and not cfg.mtp:
+        raise ValueError("speculate=True needs an MTP head (cfg.mtp)")
+    if speculate and needs_slot:
+        raise NotImplementedError(
+            "self-speculative decode rolls rejected drafts back by KV "
+            "length; recurrent state has no position axis to roll back")
     ctx = resolve_ctx(topo, plan, decode=True)
     topo = ctx.topo
     mesh = mesh if mesh is not None else topo.build()
     pspecs = lm.param_specs(cfg, ctx)
-    _, cache_specs = lm.init_paged_caches(cfg, ctx, pcfg, abstract=True)
+    _, cache_specs = lm.init_paged_caches(cfg, ctx, pcfg, abstract=True,
+                                          slots=slots)
     tspec = P(None, None)
+    info = StepInfo(mesh, ctx, pspecs, tspec, cache_specs=cache_specs)
+
+    if needs_slot:
+        def local(params, tokens, start, table, slot, caches):
+            logits, new_caches = lm.paged_step(ctx, cfg, params, tokens,
+                                               start, table, caches,
+                                               slot=slot)
+            return _greedy_pick(ctx, cfg, logits), new_caches
+
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=(pspecs, tspec, P(None), tspec, P(None),
+                                 cache_specs),
+                       out_specs=(tspec, cache_specs),
+                       check_vma=_check_vma(ctx))
+        jit_fn = jax.jit(
+            fn,
+            in_shardings=(info.sharding(pspecs), NamedSharding(mesh, tspec),
+                          NamedSharding(mesh, P(None)),
+                          NamedSharding(mesh, tspec),
+                          NamedSharding(mesh, P(None)),
+                          info.sharding(cache_specs)),
+            out_shardings=(NamedSharding(mesh, tspec),
+                           info.sharding(cache_specs)),
+            donate_argnums=(5,))
+        return jit_fn, info
+
+    if speculate:
+        def local(params, tokens, start, table, caches):
+            logits, h, new_caches = lm.paged_step(ctx, cfg, params, tokens,
+                                                  start, table, caches,
+                                                  with_hidden=True)
+            toks = _greedy_pick(ctx, cfg, logits)
+            b, s = tokens.shape
+            prange = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+            if cfg.mrope_sections:
+                positions = jnp.broadcast_to(prange[None], (3, b, s))
+            else:
+                positions = prange
+            dl = lm.mtp_draft_logits(ctx, cfg, params, h, positions, toks)
+            return toks, _greedy_pick(ctx, cfg, dl), new_caches
+
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=(pspecs, tspec, P(None), tspec, cache_specs),
+                       out_specs=(tspec, tspec, cache_specs),
+                       check_vma=_check_vma(ctx))
+        jit_fn = jax.jit(
+            fn,
+            in_shardings=(info.sharding(pspecs), NamedSharding(mesh, tspec),
+                          NamedSharding(mesh, P(None)),
+                          NamedSharding(mesh, tspec),
+                          info.sharding(cache_specs)),
+            out_shardings=(NamedSharding(mesh, tspec),
+                           NamedSharding(mesh, tspec),
+                           info.sharding(cache_specs)),
+            donate_argnums=(4,))
+        return jit_fn, info
 
     def local(params, tokens, start, table, caches):
         logits, new_caches = lm.paged_step(ctx, cfg, params, tokens, start,
@@ -245,7 +326,6 @@ def build_paged_step(cfg: ModelConfig, topo: MeshTopo | None = None,
     fn = shard_map(local, mesh=mesh,
                    in_specs=(pspecs, tspec, P(None), tspec, cache_specs),
                    out_specs=(tspec, cache_specs), check_vma=_check_vma(ctx))
-    info = StepInfo(mesh, ctx, pspecs, tspec, cache_specs=cache_specs)
     jit_fn = jax.jit(
         fn,
         in_shardings=(info.sharding(pspecs), NamedSharding(mesh, tspec),

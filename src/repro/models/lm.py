@@ -374,16 +374,23 @@ def init_decode_caches(cfg: ModelConfig, ctx: ATPContext, B: int, s_max: int,
     return caches, specs
 
 
-#: segment kinds whose O(s) caches can live in a block-paged pool; the
-#: recurrent kinds (mamba / zamba / xlstm) hold O(1)-per-slot state that
-#: stays dense and has no per-slot view inside a b=1 prefill chunk, so
-#: they keep the dense wave-serving path.
+#: segment kinds whose O(s) caches live in a block-paged pool.
 PAGED_CACHE_KINDS = frozenset({"dense", "moe", "mla_dense", "mla_moe"})
+
+#: segment kinds holding O(1)-per-slot recurrent state.  They have no
+#: token axis to page; instead ``init_paged_caches`` gives them per-slot
+#: STATE POOLS (a ``slots`` axis where the dense cache has batch) and the
+#: forward pass gathers/scatters each batch row's state by its slot id —
+#: masked rows carry the sentinel id ``slots`` and their scatter drops,
+#: which is what lets a b=1 prefill chunk or a partially-live decode tick
+#: touch only its own slot's state.
+RECURRENT_STATE_KINDS = frozenset({"mamba", "zamba", "xlstm"})
 
 
 def init_paged_caches(cfg: ModelConfig, ctx: ATPContext,
                       pcfg: "paging.PagedConfig",
-                      dtype=jnp.bfloat16, abstract: bool = False):
+                      dtype=jnp.bfloat16, abstract: bool = False,
+                      slots: int | None = None):
     """Block-paged decode caches: (caches, specs) page pools per segment.
 
     Unlike :func:`init_decode_caches` there is no per-slot ``s_max`` axis
@@ -400,11 +407,15 @@ def init_paged_caches(cfg: ModelConfig, ctx: ATPContext,
       mla (mla_dense/moe) latent pools ``[count, np, pg, rank]`` +
                          ``[count, np, pg, rope_dim]``, TP-replicated
                          (caching the latent is MLA's whole point);
-      mamba/zamba/xlstm  O(1)-per-slot recurrent state — not paged; these
-                         kinds raise (serve them with the wave loop).
+      mamba/zamba/xlstm  O(1)-per-slot recurrent state — not paged but
+                         *pooled*: dense-cache shapes with the batch axis
+                         replaced by a ``slots`` axis (slot-replicated,
+                         so any batch row can address any slot).  These
+                         kinds require ``slots`` (the scheduler's
+                         ``batch_slots``) and a per-row ``slot`` id map
+                         fed to each step.
     """
     n = ctx.tp
-    del n  # banks formula lives in _attn_cache_shape
     flat = _flat_axes(ctx)
     np_, pg = pcfg.num_pages, pcfg.page_size
     store = paging.page_store_dtype(pcfg.page_dtype)
@@ -442,18 +453,107 @@ def init_paged_caches(cfg: ModelConfig, ctx: ATPContext,
             sp["krope_scale"] = P(None, None, None)
         return c, sp
 
+    # recurrent state pools: the dense-cache builders with B -> slots and
+    # the slot axis replicated (a b=1 prefill row must reach ANY slot)
+    def mamba_state(count):
+        d_inner, nheads = mamba2.mamba_dims(cfg)
+        k = cfg.ssm.conv_kernel
+        c = {"conv_x": arr((count, slots, k - 1, d_inner), dtype),
+             "conv_bc": arr((count, slots, k - 1, 2 * cfg.ssm.d_state), dtype),
+             "ssd": arr((count, slots, nheads, cfg.ssm.head_dim,
+                         cfg.ssm.d_state), jnp.float32)}
+        sp = {"conv_x": P(None, None, None, flat),
+              "conv_bc": P(None, None, None, None),
+              "ssd": P(None, None, flat, None, None)}
+        return c, sp
+
+    def mlstm_state(count):
+        d_inner, nh, dk, dv = xlstm.mlstm_dims(cfg)
+        g, r = xlstm.mlstm_plan(ctx, cfg)
+        k = cfg.ssm.conv_kernel
+        c = {"conv": arr((count, slots, k - 1, d_inner), dtype),
+             "C": arr((count, slots, n, nh // g, dk, dv // r + 1),
+                      jnp.float32)}
+        sp = {"conv": P(None, None, None, flat),
+              "C": P(None, None, flat, None, None, None)}
+        return c, sp
+
+    def slstm_state(count):
+        nh, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+        c = {k2: arr((count, slots, nh, dh), jnp.float32)
+             for k2 in ("c", "n", "h")}
+        sp = {k2: P(None, None, None, None) for k2 in ("c", "n", "h")}
+        return c, sp
+
+    def stack_inner(tree, sp_tree, inner):
+        tree = jax.tree.map(
+            lambda x: (jax.ShapeDtypeStruct(
+                (x.shape[0], inner) + x.shape[1:], x.dtype)
+                if abstract else
+                jnp.zeros((x.shape[0], inner) + x.shape[1:], x.dtype)),
+            tree)
+        sp_tree = jax.tree.map(lambda s: P(None, *s), sp_tree,
+                               is_leaf=lambda x: isinstance(x, P))
+        return tree, sp_tree
+
+    if slots is None and any(s.kind in RECURRENT_STATE_KINDS
+                             for s in segments(cfg)):
+        raise ValueError(
+            "paged serving of recurrent kinds (mamba/zamba/xlstm) needs "
+            "slots=<scheduler batch_slots> to size the per-slot state "
+            "pools (init_paged_caches(..., slots=...))")
+
     caches, specs = {}, {}
     for i, seg in enumerate(segments(cfg)):
-        if seg.kind not in PAGED_CACHE_KINDS:
-            raise NotImplementedError(
-                f"segment kind {seg.kind!r} holds O(1)-per-slot recurrent "
-                f"state with no paged representation; serve this arch "
-                f"with the dense wave loop (init_decode_caches)")
         if seg.kind in ("dense", "moe"):
             caches[f"seg{i}"], specs[f"seg{i}"] = attn_pool(seg.count)
-        else:
+        elif seg.kind in ("mla_dense", "mla_moe"):
             caches[f"seg{i}"], specs[f"seg{i}"] = mla_pool(seg.count)
+        elif seg.kind == "mamba":
+            caches[f"seg{i}"], specs[f"seg{i}"] = mamba_state(seg.count)
+        elif seg.kind == "zamba":
+            ac, asp = attn_pool(seg.count)
+            mc, msp = stack_inner(*mamba_state(seg.count), seg.inner - 1)
+            caches[f"seg{i}"] = {"attn": ac, "mamba": mc}
+            specs[f"seg{i}"] = {"attn": asp, "mamba": msp}
+        elif seg.kind == "xlstm":
+            mc, msp = stack_inner(*mlstm_state(seg.count), seg.inner - 1)
+            sc, ssp = slstm_state(seg.count)
+            caches[f"seg{i}"] = {"mlstm": mc, "slstm": sc}
+            specs[f"seg{i}"] = {"mlstm": msp, "slstm": ssp}
+        else:
+            raise ValueError(seg.kind)
     return caches, specs
+
+
+def _state_take(pool, slot, fresh=None):
+    """Gather per-slot recurrent state rows ``[b, ...]`` from a per-layer
+    state pool ``[slots, ...]``.  Out-of-range ids (the masked-row
+    sentinel ``slots``) read row 0 — harmless, because the conjugate
+    :func:`_state_put` drops their writes.
+
+    ``fresh`` ([b] bool) zeroes the gathered rows for requests whose fed
+    window starts at position 0: a recycled slot's pool row still holds
+    the previous occupant's state, and unlike the page table (which is
+    remapped at admission) recurrent state has no per-token addressing to
+    hide behind — it must be reset exactly when a new prompt begins."""
+    def take(a):
+        r = jnp.take(a, jnp.clip(slot, 0, a.shape[0] - 1), axis=0)
+        if fresh is not None:
+            keep = jnp.reshape(~fresh, (-1,) + (1,) * (r.ndim - 1))
+            r = r * keep.astype(r.dtype)
+        return r
+
+    return jax.tree.map(take, pool)
+
+
+def _state_put(pool, rows, slot):
+    """Scatter updated state rows back into the pool.  Ids past the pool
+    (sentinel = ``slots``; never negative — JAX wraps those) are dropped,
+    so masked batch rows leave every slot's state untouched."""
+    return jax.tree.map(
+        lambda a, r: a.at[slot].set(r.astype(a.dtype), mode="drop"),
+        pool, rows)
 
 
 # ---------------------------------------------------------------------------
@@ -569,6 +669,16 @@ def forward(
     transition.
     """
     segs = segments(cfg)
+    slot = paged.get("slot") if paged is not None else None
+    if paged is not None and slot is None and any(
+            s.kind in RECURRENT_STATE_KINDS for s in segs):
+        raise ValueError(
+            "paged serving of recurrent kinds needs paged['slot'] — the "
+            "per-row slot ids addressing the state pools (see "
+            "launch.steps.build_paged_step)")
+    # a row whose fed window starts at 0 is a NEW request in a possibly
+    # recycled slot: its gathered state must read as zeros
+    fresh = (paged["start"] == 0) if slot is not None else None
     seg_ctxs = tuple(ctx.for_segment(s.kind) for s in segs)
     entry_sp = bool(seg_ctxs) and seg_ctxs[0].seq_parallel
     if caches is not None and any(c.seq_parallel for c in seg_ctxs):
@@ -622,6 +732,14 @@ def forward(
             def body(carry, xs, _kind=seg.kind, _ctx=sctx):
                 h, aux = carry
                 bp, win, c = xs
+                if _kind == "mamba" and paged is not None:
+                    # paged recurrent: this batch row's state lives at its
+                    # slot's pool row; gather, step, drop-mode scatter back
+                    rows = _state_take(c, slot, fresh)
+                    h, nr, a = _apply_block(_kind, _ctx, cfg, bp, h,
+                                            positions, plan, win, rows,
+                                            paged=paged)
+                    return (h, aux + a), _state_put(c, nr, slot)
                 h, nc, a = _apply_block(_kind, _ctx, cfg, bp, h, positions,
                                         plan, win, c, paged=paged)
                 return (h, aux + a), nc
@@ -649,12 +767,18 @@ def forward(
                     u = shard_slice(u, _ctx.index2(), _ctx.d2, dim=-1)
                 ac = c["attn"] if c is not None else None
                 h2, nac = transformer.dense_block(_ctx, cfg, shared["block"], h + u,
-                                                  positions, plan, cache=ac)
+                                                  positions, plan, cache=ac,
+                                                  paged=paged)
                 h = h2
 
                 def mbody(hc, xs2):
                     hh = hc
                     mp, mc = xs2
+                    if paged is not None:
+                        rows = _state_take(mc, slot, fresh)
+                        hh, nr = mamba2.mamba_block(_ctx, cfg, mp, hh,
+                                                    state=rows)
+                        return hh, _state_put(mc, nr, slot)
                     hh, nmc = mamba2.mamba_block(_ctx, cfg, mp, hh, state=mc)
                     return hh, nmc
 
@@ -675,13 +799,25 @@ def forward(
 
                 def mb(hc, xs2):
                     mp, mc = xs2
+                    if paged is not None:
+                        rows = _state_take(mc, slot, fresh)
+                        hh, ns = xlstm.mlstm_block(_ctx, cfg, mp, hc,
+                                                   state=rows)
+                        return hh, _state_put(mc, ns, slot)
                     hh, ns = xlstm.mlstm_block(_ctx, cfg, mp, hc, state=mc)
                     return hh, ns
 
                 mc = c["mlstm"] if c is not None else None
                 h, nms = lax.scan(mb, h, (bp["mlstm"], mc))
                 sc = c["slstm"] if c is not None else None
-                h, nss = xlstm.slstm_block(_ctx, cfg, bp["slstm"], h, state=sc)
+                if paged is not None:
+                    rows = _state_take(sc, slot, fresh)
+                    h, nr = xlstm.slstm_block(_ctx, cfg, bp["slstm"], h,
+                                              state=rows)
+                    nss = _state_put(sc, nr, slot)
+                else:
+                    h, nss = xlstm.slstm_block(_ctx, cfg, bp["slstm"], h,
+                                               state=sc)
                 ncs = {"mlstm": nms, "slstm": nss} if c is not None else 0.0
                 return (h, aux), ncs
 
@@ -787,18 +923,21 @@ def decode_step(ctx: ATPContext, cfg: ModelConfig, params, tokens, pos, caches):
 
 
 def paged_step(ctx: ATPContext, cfg: ModelConfig, params, tokens, start,
-               table, caches):
+               table, caches, slot=None, with_hidden: bool = False):
     """One paged cache-write step — decode tick AND prefill chunk.
 
     tokens [b, s] (decode: b=slots, s=1; prefill chunk: b=1, s=chunk);
     start [b] per-slot absolute position of tokens[:, 0]; table [b, mp]
-    page-table rows; caches from :func:`init_paged_caches`.
+    page-table rows; caches from :func:`init_paged_caches`; slot [b]
+    per-row slot ids (required for recurrent kinds — masked rows carry
+    the sentinel id = pool slot count, whose state writes drop).
 
-    Returns (logits [b, s, V/d1] for EVERY input position, new caches).
-    Returning all positions keeps one compiled step reusable across
-    prompt lengths: the scheduler picks the logits of the last *valid*
-    token of a padded final chunk on the host, instead of forcing a
-    recompile per length.
+    Returns (logits [b, s, V/d1] for EVERY input position, new caches);
+    ``with_hidden`` adds the final-norm hidden [b, s, h/d2] in the middle
+    (speculative decode feeds it to :func:`mtp_draft_logits`).  Returning
+    all positions keeps one compiled step reusable across prompt lengths:
+    the scheduler picks the logits of the last *valid* token of a padded
+    final chunk on the host, instead of forcing a recompile per length.
     """
     b, s = tokens.shape
     prange = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
@@ -806,7 +945,42 @@ def paged_step(ctx: ATPContext, cfg: ModelConfig, params, tokens, start,
         positions = jnp.broadcast_to(prange[None], (3, b, s))
     else:
         positions = prange
+    paged = {"table": table, "start": start}
+    if slot is not None:
+        paged["slot"] = slot
     h, new_caches, _, _ = forward(ctx, cfg, params, tokens, positions,
-                                  caches=caches,
-                                  paged={"table": table, "start": start})
-    return lm_logits(ctx, cfg, params, h), new_caches
+                                  caches=caches, paged=paged)
+    logits = lm_logits(ctx, cfg, params, h)
+    if with_hidden:
+        return logits, h, new_caches
+    return logits, new_caches
+
+
+def mtp_draft_logits(ctx: ATPContext, cfg: ModelConfig, params, h, positions,
+                     next_tokens):
+    """MTP head as a decode-time draft proposer.
+
+    Training teaches the head p(t+2 | h_t, emb(t+1)); at decode time we
+    feed the trunk hidden ``h`` [b, s, h/d2] (paged_step's
+    ``with_hidden`` output) and the greedy picks ``next_tokens`` [b, s]
+    just made from it, giving draft logits for the position AFTER each
+    pick — a free extra token per tick for self-speculative decode.
+    Mirrors the train head exactly (sp-free context, same block), except
+    the draft block attends only within the fed window (cache=None over
+    ``s`` positions): a weaker proposer, never a correctness issue —
+    the trunk verifies every draft before it is kept.
+    """
+    mctx = dataclasses.replace(ctx, seq_parallel=False, segment_plans=())
+    mp = params["mtp"]
+    emb_next = embed_tokens(mctx, cfg, params["embed"], next_tokens)
+    u = atp_boundary(
+        jnp.einsum("...k,kn->...n", h, mp["proj_h"])
+        + jnp.einsum("...k,kn->...n", emb_next, mp["proj_e"]), mctx.ax2)
+    if mctx.ax1 is not None:  # back to [.., h/d2] block I/O spec
+        u = lax.all_gather(u, mctx.ax1, axis=-1, tiled=True)
+    u = shard_slice(u, mctx.index2(), mctx.d2, dim=-1) if mctx.ax2 is not None else u
+    plan = L.make_attn_plan(mctx, cfg.num_heads, cfg.num_kv_heads)
+    u, _, _ = _apply_block("mla_dense" if cfg.mla else "dense",
+                           mctx, cfg, mp["block"], u, positions, plan, 0, None)
+    u = L.norm(mctx, cfg, u, mp["norm"])
+    return lm_logits(mctx, cfg, params, u)

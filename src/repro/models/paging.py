@@ -29,8 +29,22 @@ point at it, so inactive slots and padded chunk tails scatter there
 harmlessly (every read is masked by the slot's length before softmax).
 
 Only O(s) caches are paged — attention K/V and MLA's compressed-KV
-latents.  Mamba/xLSTM recurrent state is O(1) per slot and stays dense
-(see ``lm.init_paged_caches``).
+latents.  Mamba/xLSTM recurrent state is O(1) per slot and lives in
+per-slot state rows alongside the pools (see ``lm.init_paged_caches``).
+
+**Copy-on-write prefix sharing** (``prefix_cache=True``): the allocator
+keeps per-page refcounts plus a radix index over *page contents* — each
+node is keyed by (parent page, the page_size token ids written into it),
+so a chain of index hits proves the full token prefix matches and the
+cached KV values are exactly what prefill would recompute.  Admission
+(``runtime.server``) adopts the matched pages read-only into the new
+slot's table and skips their prefill chunks entirely; pages are freed
+only when their refcount drops to zero, and the index itself pins
+completed prompts' full pages (evicted leaf-first under pool pressure).
+Shared pages are never written: adopters only append at positions past
+the matched (page-aligned) prefix, i.e. strictly later pages.  The
+quantized (int8/fp8) value+scale pools ride the same page tables, so
+they share identically for free.
 """
 from __future__ import annotations
 
@@ -105,17 +119,33 @@ class PagedConfig:
 class PageAllocator:
     """Host-side page bookkeeping for one pool (numpy only, no jax).
 
-    Not thread-safe; the scheduler owns it.  ``None`` returns mean the
+    Not thread-safe; the scheduler owns it.  ``False`` returns mean the
     pool is exhausted — the caller defers (backpressure) rather than
     raising, because a continuous-batching scheduler can simply keep
     decoding its live slots until pages free up.
+
+    With ``prefix_cache=True`` the allocator additionally maintains
+    per-page refcounts and a radix index over page contents (copy-on-
+    write prefix sharing — see the module docstring): ``match_prefix``
+    walks the index, ``adopt`` maps shared pages into a slot, and
+    ``register_prefix`` pins a completed prompt's full pages for future
+    admissions.  ``release`` decrements refcounts and frees only at
+    zero.  Without the flag every page has exactly one owner and the
+    behavior is the seed allocator's, bit for bit.
     """
 
-    def __init__(self, cfg: PagedConfig, slots: int):
+    def __init__(self, cfg: PagedConfig, slots: int,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.slots = slots
+        self.prefix_cache = prefix_cache
         self._free = list(range(cfg.num_pages - 1, GARBAGE_PAGE, -1))
         self._owned: list[list[int]] = [[] for _ in range(slots)]
+        #: page -> mapping count (slot mappings + 1 if pinned by the index)
+        self._refs: dict[int, int] = {}
+        #: radix node: (parent page id or -1, page-content tokens) -> page
+        self._radix: dict[tuple[int, tuple[int, ...]], int] = {}
+        self._radix_rev: dict[int, tuple[int, tuple[int, ...]]] = {}
 
     @property
     def free_pages(self) -> int:
@@ -123,6 +153,37 @@ class PageAllocator:
 
     def slot_pages(self, slot: int) -> tuple[int, ...]:
         return tuple(self._owned[slot])
+
+    @property
+    def live_pages(self) -> int:
+        """Distinct pages mapped by at least one slot (shared counted once)."""
+        return len({p for owned in self._owned for p in owned})
+
+    @property
+    def pages_shared(self) -> int:
+        """Slot-mapped page references beyond each page's first mapping —
+        the device pages copy-on-write sharing is currently saving."""
+        counts: dict[int, int] = {}
+        for owned in self._owned:
+            for p in owned:
+                counts[p] = counts.get(p, 0) + 1
+        return sum(c - 1 for c in counts.values() if c > 1)
+
+    @property
+    def pinned_pages(self) -> int:
+        """Pages held (only) by the prefix index, reusable or evictable."""
+        return len(self._radix_rev)
+
+    @property
+    def held_pages(self) -> int:
+        """Distinct non-free pages — slot-mapped or index-pinned, each
+        counted once regardless of refcount (what honest cache-bytes
+        accounting bills)."""
+        return len({p for owned in self._owned for p in owned}
+                   | set(self._radix_rev))
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot``'s mapping to cover ``n_tokens`` positions.
@@ -132,6 +193,8 @@ class PageAllocator:
         request exceeding the page-table WIDTH raises instead: no amount
         of waiting can map more than ``pages_per_slot`` pages, so the
         scheduler must reject it at submit time (``Server.submit``).
+        Under pool pressure, index-pinned pages no slot maps are evicted
+        (leaf-first, so the radix never strands unreachable children).
         """
         need = self.cfg.pages_for(n_tokens)
         if need > self.cfg.pages_per_slot:
@@ -142,15 +205,133 @@ class PageAllocator:
         if grow <= 0:
             return True
         if grow > len(self._free):
+            self._evict(grow - len(self._free))
+        if grow > len(self._free):
             return False
-        self._owned[slot].extend(self._free.pop() for _ in range(grow))
+        for _ in range(grow):
+            p = self._free.pop()
+            self._refs[p] = 1
+            self._owned[slot].append(p)
         return True
 
     def release(self, slot: int) -> None:
-        """Return all of ``slot``'s pages to the free list (slot recycle)."""
+        """Unmap all of ``slot``'s pages (slot recycle): refcounts drop by
+        one and only pages nobody else maps (and the prefix index does
+        not pin) return to the free list."""
         pages = self._owned[slot]
-        self._free.extend(reversed(pages))
+        for p in reversed(pages):
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
         self._owned[slot] = []
+
+    # -- copy-on-write prefix sharing (radix index over page contents) ----
+
+    def match_prefix(self, tokens) -> tuple[int, ...]:
+        """Longest chain of cached full pages covering a prefix of
+        ``tokens``.  Each hop matches one page's exact contents under its
+        parent, so a k-page hit proves tokens[:k*page_size] equality."""
+        if not self.prefix_cache:
+            return ()
+        ps = self.cfg.page_size
+        toks = [int(t) for t in tokens]
+        out: list[int] = []
+        parent = -1
+        for j in range(len(toks) // ps):
+            page = self._radix.get((parent, tuple(toks[j * ps:(j + 1) * ps])))
+            if page is None:
+                break
+            out.append(page)
+            parent = page
+        return tuple(out)
+
+    def adopt(self, slot: int, pages) -> None:
+        """Map shared (prefix-cache) pages read-only into an empty slot.
+
+        The pages come first in the slot's table — the caller must adopt
+        before any private ``ensure`` growth, and must only write
+        positions past the adopted prefix (COW: shared pages are never
+        mutated; a diverging suffix lands in later, private pages)."""
+        if self._owned[slot]:
+            raise ValueError(
+                f"slot {slot}: adopt() must precede private page growth "
+                f"(owns {len(self._owned[slot])} pages)")
+        for p in pages:
+            self._refs[p] = self._refs.get(p, 0) + 1
+            self._owned[slot].append(p)
+
+    def register_prefix(self, slot: int, tokens) -> int:
+        """Index ``slot``'s fully-written prompt pages for future reuse.
+
+        Called when a prompt's prefill completes: every page whose
+        page_size positions are all covered by prompt tokens becomes a
+        radix node (+1 pin ref).  Pages already indexed under the same
+        content chain are walked, not re-registered, so concurrent
+        identical prompts converge on one physical copy.  Returns the
+        number of newly indexed pages."""
+        if not self.prefix_cache:
+            return 0
+        ps = self.cfg.page_size
+        toks = [int(t) for t in tokens]
+        owned = self._owned[slot]
+        parent = -1
+        added = 0
+        for j in range(len(toks) // ps):
+            if j >= len(owned):
+                break
+            key = (parent, tuple(toks[j * ps:(j + 1) * ps]))
+            hit = self._radix.get(key)
+            if hit is not None:
+                parent = hit
+                continue
+            page = owned[j]
+            if page in self._radix_rev:
+                # already indexed under a different chain — re-keying
+                # would corrupt both chains; stop here
+                break
+            self._radix[key] = page
+            self._radix_rev[page] = key
+            self._refs[page] = self._refs.get(page, 0) + 1
+            parent = page
+            added += 1
+        return added
+
+    def drop_prefix_index(self) -> int:
+        """Unpin the whole prefix index (operator reset); pages nobody
+        maps return to the free list.  Returns pages freed."""
+        freed = 0
+        for page in list(self._radix_rev):
+            self._unpin(page)
+            if self._refs.get(page) is None:
+                freed += 1
+        return freed
+
+    def _unpin(self, page: int) -> None:
+        key = self._radix_rev.pop(page)
+        del self._radix[key]
+        self._refs[page] -= 1
+        if self._refs[page] == 0:
+            del self._refs[page]
+            self._free.append(page)
+
+    def _evict(self, n: int) -> None:
+        """Free up to ``n`` pages held only by the prefix index —
+        leaf-first (never a node with indexed children, so surviving
+        chains stay reachable), newest-registered first."""
+        freed = 0
+        while freed < n and self._radix:
+            mapped = {p for owned in self._owned for p in owned}
+            parents = {k[0] for k in self._radix}
+            victim = None
+            for page in reversed(list(self._radix_rev)):
+                if page not in parents and page not in mapped:
+                    victim = page
+                    break
+            if victim is None:
+                return
+            self._unpin(victim)
+            freed += 1
 
     def table(self) -> np.ndarray:
         """The ``[slots, pages_per_slot]`` int32 device table; unmapped

@@ -1,0 +1,170 @@
+"""Property tests for copy-on-write prefix sharing (PageAllocator).
+
+Randomized admit / complete / recycle schedules (via the hypothesis shim)
+against a reference model of page CONTENTS, checking the invariants the
+device side depends on:
+
+  - a page is never on the free list while any slot maps it or the
+    prefix index pins it (and the free list never holds duplicates);
+  - refcounts are exactly (#slot mappings) + (1 if index-pinned) — no
+    leak: a full drain (release every slot, drop the index) returns the
+    pool to its pristine free count;
+  - COW safety: a page mapped by more than one owner is never written —
+    admission only writes positions past the adopted prefix, which land
+    in strictly later, private pages;
+  - a radix hit is honest: every adopted page's recorded contents equal
+    the corresponding page_size chunk of the new prompt.
+"""
+import random
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.paging import GARBAGE_PAGE, PageAllocator, PagedConfig
+
+PS = 4          # page_size
+NPAGES = 24
+PER_SLOT = 8
+SLOTS = 3
+
+
+def _check_structural(a: PageAllocator, contents):
+    free = a._free
+    assert len(set(free)) == len(free), "duplicate pages on the free list"
+    mapped = {p for owned in a._owned for p in owned}
+    pinned = set(a._radix_rev)
+    assert not (set(free) & (mapped | pinned)), \
+        "page freed while still mapped or pinned"
+    assert GARBAGE_PAGE not in set(free) | mapped | pinned
+    # refcount == slot mappings + pin, for every non-free page
+    count = {}
+    for owned in a._owned:
+        for p in owned:
+            count[p] = count.get(p, 0) + 1
+    for p in pinned:
+        count[p] = count.get(p, 0) + 1
+    assert {p: c for p, c in count.items()} == dict(a._refs)
+    # conservation: every page is free, held, or the garbage sink
+    assert len(free) + a.held_pages == NPAGES - 1
+    # the radix maps onto real contents: each indexed page's key tokens
+    # are exactly what was written there
+    for (parent, toks), page in a._radix.items():
+        assert contents.get(page) == list(toks)
+
+
+def _drive(seed: int) -> None:
+    rnd = random.Random(seed)
+    cfg = PagedConfig(page_size=PS, num_pages=NPAGES,
+                      pages_per_slot=PER_SLOT)
+    a = PageAllocator(cfg, slots=SLOTS, prefix_cache=True)
+    contents = {}        # physical page -> the PS tokens written to it
+    slot_req = {}        # slot -> (prompt, n_adopted)
+    # tiny alphabet + a shared system prefix make radix hits common
+    system = [7] * (2 * PS)
+
+    def admit(slot):
+        n = rnd.randint(1, 20)
+        prompt = (system[:] if rnd.random() < 0.6 else []) + [
+            rnd.choice((0, 1)) for _ in range(n)]
+        prompt = prompt[: PER_SLOT * PS - 2]
+        matched = list(a.match_prefix(prompt))
+        # the server caps the match below the last prompt position so
+        # the first-token logits are still computed
+        matched = matched[: (len(prompt) - 1) // PS]
+        for p in matched:     # a hit must be an honest content match
+            assert a.refcount(p) >= 1
+        a.adopt(slot, matched)
+        for j, p in enumerate(matched):
+            assert contents[p] == prompt[j * PS:(j + 1) * PS]
+        if not a.ensure(slot, len(prompt)):
+            a.release(slot)   # backpressure: roll the adoption back
+            return
+        owned = a.slot_pages(slot)
+        # COW: only pages past the adopted prefix are written
+        for j in range(len(matched), len(owned)):
+            page = owned[j]
+            assert a.refcount(page) == 1, \
+                f"writing page {page} with refcount {a.refcount(page)}"
+            contents[page] = prompt[j * PS:(j + 1) * PS]
+        slot_req[slot] = (prompt, len(matched))
+
+    def complete(slot):
+        prompt, _ = slot_req.pop(slot)
+        a.register_prefix(slot, prompt)
+        a.release(slot)
+
+    for _ in range(60):
+        busy = [s for s in range(SLOTS) if s in slot_req]
+        idle = [s for s in range(SLOTS) if s not in slot_req]
+        ops = []
+        if idle:
+            ops += ["admit"] * 3
+        if busy:
+            ops += ["complete"] * 2
+        ops += ["drop"]
+        op = rnd.choice(ops)
+        if op == "admit":
+            admit(rnd.choice(idle))
+        elif op == "complete":
+            complete(rnd.choice(busy))
+        else:
+            a.drop_prefix_index()
+        _check_structural(a, contents)
+
+    # full drain: no refcount leak anywhere
+    for slot in list(slot_req):
+        complete(slot)
+    a.drop_prefix_index()
+    _check_structural(a, contents)
+    assert a.free_pages == NPAGES - 1
+    assert a._refs == {} and a.held_pages == 0
+
+
+@settings(max_examples=30)
+@given(st.integers(0, 2**32 - 1))
+def test_prefix_allocator_invariants(seed):
+    _drive(seed)
+
+
+def test_identical_prompts_converge_on_one_copy():
+    """Two same-prompt admissions share physical pages: the second maps
+    the first's registered pages and allocates only the private tail."""
+    cfg = PagedConfig(page_size=PS, num_pages=NPAGES,
+                      pages_per_slot=PER_SLOT)
+    a = PageAllocator(cfg, slots=2, prefix_cache=True)
+    prompt = list(range(11))                      # 2 full pages + tail
+    assert a.match_prefix(prompt) == ()
+    assert a.ensure(0, len(prompt))
+    a.register_prefix(0, prompt)
+    a.release(0)
+    first = a.slot_pages(0)
+    assert first == () and a.pinned_pages == 2
+
+    matched = list(a.match_prefix(prompt))[: (len(prompt) - 1) // PS]
+    assert len(matched) == 2
+    a.adopt(1, matched)
+    assert a.ensure(1, len(prompt))
+    assert a.slot_pages(1)[:2] == tuple(matched)
+    assert all(a.refcount(p) == 2 for p in matched)   # slot + pin
+    a.release(1)
+    assert a.pinned_pages == 2 and a.free_pages == NPAGES - 1 - 2
+
+
+def test_eviction_is_leaf_first_and_spares_mapped_pages():
+    """Pool pressure evicts only index-held leaves: parents of surviving
+    radix nodes and slot-mapped pages are never reclaimed."""
+    cfg = PagedConfig(page_size=PS, num_pages=8, pages_per_slot=6)
+    a = PageAllocator(cfg, slots=2, prefix_cache=True)
+    prompt = list(range(16))                      # 4 full pages
+    assert a.ensure(0, len(prompt))
+    a.register_prefix(0, prompt)
+    a.release(0)
+    chain = list(a.match_prefix(prompt))
+    assert len(chain) == 4 and a.free_pages == 3
+    # a 6-page demand forces evicting 3 pinned pages — newest leaves
+    # first, so the chain survives as its 1-page prefix
+    assert a.ensure(1, 21)
+    assert a.pinned_pages == 1
+    assert a.match_prefix(prompt) == (chain[0],)
+    # the survivor is still content-addressable while slot 1 runs
+    assert a.refcount(chain[0]) == 1

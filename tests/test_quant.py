@@ -465,8 +465,9 @@ def test_calibrate_mesh_measures_quant_and_launch(devices8):
 
 
 def test_v3_fixture_still_loads():
-    """PR-5-era format_version 3 files load under v4: decode sub-plan
-    intact, wire_dtype defaulting to full width everywhere."""
+    """PR-5-era format_version 3 files load under the current version:
+    decode sub-plan intact, wire_dtype defaulting to full width
+    everywhere."""
     plan = ParallelPlan.load("tests/data/plan_v3_pr5.json")
     assert plan.wire_dtype == "bf16"
     assert plan.decode is not None and plan.decode.wire_dtype == "bf16"
@@ -474,7 +475,7 @@ def test_v3_fixture_still_loads():
     e = dict(plan.calibration.entries)[(4, 2)]
     assert e.launch_s is None and e.b1_q is None  # pre-v4 table fields
     d = plan.to_dict()
-    assert d["format_version"] == PLAN_FORMAT_VERSION == 4
+    assert d["format_version"] == PLAN_FORMAT_VERSION == 5
     assert ParallelPlan.from_dict(d) == plan
 
 

@@ -84,7 +84,7 @@ def test_v1_fixture_loads_and_broadcasts_global_knobs():
 def test_v1_fixture_roundtrips_as_current():
     plan = ParallelPlan.load(V1_FIXTURE)
     d = plan.to_dict()
-    assert d["format_version"] == PLAN_FORMAT_VERSION == 4
+    assert d["format_version"] == PLAN_FORMAT_VERSION == 5
     assert d["segments"] == []
     assert d["decode"] is None       # v1 files carry no decode sub-plan
     assert ParallelPlan.from_dict(d) == plan

@@ -304,8 +304,21 @@ def test_v2_fixture_still_loads(tmp_path):
     assert plan.calibration.alpha(2, 2) == 2e-06
     # round-trips at the CURRENT version with decode recorded as null
     d = plan.to_dict()
-    assert d["format_version"] == PLAN_FORMAT_VERSION == 4
+    assert d["format_version"] == PLAN_FORMAT_VERSION == 5
     assert d["decode"] is None
+    assert ParallelPlan.from_dict(d) == plan
+
+
+def test_v4_fixture_still_loads():
+    """PR-6-era format_version 4 files (decode sub-plan, no spec/prefix
+    knobs) load under v5 with both new DecodePlan fields defaulting off."""
+    plan = ParallelPlan.load("tests/data/plan_v4_pr6.json")
+    assert plan.decode is not None
+    assert plan.decode.speculate is False
+    assert plan.decode.prefix_cache is False
+    d = plan.to_dict()
+    assert d["format_version"] == PLAN_FORMAT_VERSION
+    assert d["decode"]["speculate"] is False
     assert ParallelPlan.from_dict(d) == plan
 
 
@@ -389,3 +402,100 @@ def test_measured_chunk_eff_reaches_table():
         ((2, 2), CalibEntry(b1=9.0, b2=9.0)),)))
     assert merged.chunk_efficiency(2, 2) is None   # fresher entry wins
     assert merged.chunk_efficiency(4, 1) == {2: (0.5, 0.5), 4: (0.25, 0.25)}
+
+
+# ---------------------------------------------------------------------------
+# Paged-read + speculation terms in the decode cost model (PR 8).
+# ---------------------------------------------------------------------------
+
+
+def test_paged_read_flips_decode_mesh_on_ic1():
+    """Pricing the per-tick paged KV gather changes the chosen decode mesh.
+
+    On the PCIe box the latency-only objective picks the pure column mesh
+    (8,1) under monolithic psum; with each of 64 slots gathering a
+    4k-token paged history per tick, the ring's streamed transfers hide
+    the gather in bandwidth slack (exposed = max(0, t_read - t_bytes))
+    while psum's bursty log-steps expose it fully — and (4,2) ring wins.
+    """
+    from repro.configs.registry import get_config
+    from repro.core.cost_model import paged_read_model, segment_workloads
+
+    cfg = get_config("dbrx-132b")
+    w = segment_workloads(cfg)
+    m = comm_matrix.PRESETS["ic1"]()
+    base = search_strategy_decode(m, 8, workloads=w, batch=64)
+    assert (base.best.d1, base.best.d2, base.best.boundary_mode) == \
+        (8, 1, "psum")
+    pr = paged_read_model(cfg, avg_len=4096, tp=8)
+    priced = search_strategy_decode(m, 8, workloads=w, batch=64,
+                                    paged_read=pr)
+    assert (priced.best.d1, priced.best.d2, priced.best.boundary_mode) == \
+        (4, 2, "ring")
+    assert priced.best.t_read > 0.0
+    # the knob off is byte-identical to the seed ranking
+    again = search_strategy_decode(m, 8, workloads=w, batch=64)
+    assert again.ranked == base.ranked
+
+
+def test_paged_read_model_kinds():
+    """Attention kinds pay 2*kv_dim/tp per token, MLA pays the replicated
+    latent, recurrent kinds pay nothing (O(1) state, nothing to page)."""
+    from repro.configs.registry import get_config
+    from repro.core.cost_model import paged_read_model
+
+    qcfg = get_config("qwen1.5-0.5b")
+    attn = paged_read_model(qcfg, avg_len=100, tp=2)
+    assert attn.layers > 0
+    assert attn.kv_bytes_per_token == pytest.approx(2.0 * qcfg.kv_dim)
+    mla = paged_read_model(get_config("deepseek-v3-671b"), avg_len=100,
+                           tp=2)
+    m = get_config("deepseek-v3-671b").mla
+    assert mla.kv_bytes_per_token == pytest.approx(
+        2.0 * (m.kv_lora_rank + m.qk_rope_head_dim))   # replicated, not /tp
+    rec = paged_read_model(get_config("xlstm-1.3b"), avg_len=100, tp=2)
+    assert rec.layers == 0 and rec.t_read(8) == 0.0
+
+
+def test_speculation_wins_only_when_acceptance_pays():
+    """The MTP self-speculative tick costs 2x payloads + one extra head
+    block but amortizes over 1 + accept_rate tokens: at zero acceptance
+    the plain tick wins (speculation is pure overhead), at 0.8 the
+    speculative candidate takes the ranking and t_step drops."""
+    from repro.configs.registry import get_config
+    from repro.core.cost_model import segment_workloads
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    w = segment_workloads(cfg)
+    m = comm_matrix.PRESETS["ic4"]()
+    plain = search_strategy_decode(m, 8, workloads=w, batch=8)
+    assert plain.best.speculate is False
+    lo = search_strategy_decode(m, 8, workloads=w, batch=8,
+                                spec_accept_rate=0.0)
+    assert lo.best.speculate is False
+    assert lo.best.t_step == pytest.approx(plain.best.t_step)
+    hi = search_strategy_decode(m, 8, workloads=w, batch=8,
+                                spec_accept_rate=0.8)
+    assert hi.best.speculate is True
+    assert hi.best.t_step < plain.best.t_step
+
+
+def test_plan_search_records_decode_knobs():
+    """plan_search threads the paged-read model + acceptance prior into
+    the decode objective and stamps the winning knobs on the DecodePlan
+    (v5 schema), which round-trips through JSON."""
+    from repro.configs.registry import get_config
+    from repro.core.cost_model import paged_read_model
+
+    cfg = get_config("dbrx-132b")
+    pr = paged_read_model(cfg, avg_len=4096, tp=8)
+    res = plan_search("ic1", 8, model=cfg, batch=64, seq=4096,
+                      decode_batch=64, decode_paged_read=pr,
+                      decode_prefix_cache=True)
+    dec = res.best.decode
+    assert (dec.d1, dec.d2, dec.boundary_mode) == (4, 2, "ring")
+    assert dec.prefix_cache is True and dec.speculate is False
+    back = ParallelPlan.from_dict(json.loads(json.dumps(
+        res.best.to_dict())))
+    assert back == res.best
+    assert "+pfx" in back.describe()
