@@ -7,9 +7,10 @@ XLA_DEVICES ?= 8
 # (per-segment knobs reach execution on a mixed dense+MoE stack), the
 # elastic-restart gate (failure -> shrink -> recalibrate -> re-search ->
 # resharded restore -> loss continuity), the serving gate (decode-
-# searched plan -> paged continuous batching -> wave-loop token parity)
-# and the bench-baseline replay (checked-in BENCH_*.json metrics must not
-# regress >10%).
+# searched plan -> paged continuous batching -> wave-loop token parity),
+# the plan-conformance lint (every searched plan's built step must emit
+# exactly the collectives the cost model priced) and the bench-baseline
+# replay (checked-in BENCH_*.json metrics must not regress >10%).
 .PHONY: test
 test:
 	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
@@ -19,7 +20,19 @@ test:
 	$(MAKE) segment-smoke
 	$(MAKE) elastic-smoke
 	$(MAKE) serve-smoke
+	$(MAKE) lint-plans
 	$(MAKE) bench-regress
+
+# Static plan-conformance sweep: config zoo x topology presets x
+# {train, prefill, decode} x {bf16, int8, fp8}, each searched plan's
+# build checked for collective conformance + proven out_spec
+# replication, plus the jaxpr-vs-HLO byte cross-check per preset.
+# Narrow with LINT_ARGS="--configs llama3-8b --presets ic1".
+.PHONY: lint-plans
+lint-plans:
+	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	$(PYTHON) -m repro.analysis.lint --hlo-check $(LINT_ARGS)
 
 .PHONY: plan-smoke
 plan-smoke:

@@ -10,7 +10,12 @@ tracked metrics against ``benchmarks/baselines.json``:
     ratios — NOT wall-clock timings, which are too noisy on shared CI
     hosts) fail when the current value drops below 0.9x the baseline;
   - ``flag`` metrics are pinned invariants (token parity, the search
-    flip) and fail on ANY change from the baseline.
+    flip) and fail on ANY change from the baseline;
+  - ``drift`` metrics are deterministic absolute quantities (the
+    per-preset extracted collective byte totals from ``make lint-plans``)
+    that fail on >10% movement in EITHER direction — comm volume cannot
+    silently grow between PRs, and a shrink means the sweep changed and
+    the baseline must be consciously re-pinned.
 
 A missing BENCH artifact skips its metrics (benches are not re-run
 here — ``make bench`` produces the artifacts), so ``make test`` stays
@@ -44,6 +49,13 @@ TRACKED = {
         ("summary.pool_bytes_ratio", "ratio"),
         ("summary.greedy_parity", "flag"),
         ("summary.search_flips_mesh", "flag"),
+    ],
+    "BENCH_analysis.json": [
+        ("summary.conformant", "flag"),
+    ] + [
+        (f"per_preset_raw_bytes.{p}", "drift")
+        for p in ("ic1", "ic2", "ic3", "ic4", "ic5", "ic6", "v5e",
+                  "v5e-multipod")
     ],
 }
 
@@ -112,6 +124,12 @@ def replay() -> None:
             if kinds.get(path) == "flag":
                 ok = got == frozen
                 verdict = "ok" if ok else f"FLIPPED (was {frozen!r})"
+            elif kinds.get(path) == "drift":
+                lo, hi = TOLERANCE * float(frozen), float(frozen) / TOLERANCE
+                ok = lo <= float(got) <= hi
+                verdict = ("ok" if ok else
+                           f"DRIFTED >{(1 - TOLERANCE) * 100:.0f}% "
+                           f"(baseline {frozen})")
             else:
                 ok = float(got) >= TOLERANCE * float(frozen)
                 verdict = ("ok" if ok else

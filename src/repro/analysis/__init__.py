@@ -1,0 +1,27 @@
+"""Plan-conformance static analysis (no execution required).
+
+Three checkers over built steps:
+
+  - :mod:`repro.analysis.signature` — trace a compiled step to its jaxpr
+    and extract the collective signature (op, mesh axes, payload bytes,
+    count, segment attribution via the load-bearing named scopes);
+  - :mod:`repro.analysis.expect` — derive the signature a
+    :class:`~repro.core.plan.ParallelPlan` + ModelConfig SHOULD emit and
+    diff it against the extracted one with segment-specific diagnostics;
+  - :mod:`repro.analysis.replication` — jaxpr-walking replication (vma)
+    lint that certifies shard_map ``out_specs`` even where upstream's
+    checker is disabled (legacy jax, ppermute rings, quantized wires).
+
+``python -m repro.analysis.lint`` sweeps the config zoo; ``make
+lint-plans`` gates it in CI.  See docs/analysis.md.
+"""
+from repro.analysis.expect import (assert_step_conforms, check_conformance,
+                                   expected_signature, lint_conformance)
+from repro.analysis.signature import Collective, StepSignature, extract
+from repro.analysis.replication import verify_replication
+
+__all__ = [
+    "Collective", "StepSignature", "extract",
+    "expected_signature", "check_conformance", "lint_conformance",
+    "assert_step_conforms", "verify_replication",
+]

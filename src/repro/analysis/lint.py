@@ -1,0 +1,304 @@
+"""Plan-conformance lint sweep (``make lint-plans``).
+
+    PYTHONPATH=src python -m repro.analysis.lint [options]
+
+For every (config, topology preset, wire dtype) this runs the same
+strategy search the deployment path runs (``plan_search(model=cfg)`` on
+the 8-way host mesh: tp=4, dp=2, with a decode sub-plan), builds the
+train / prefill / decode steps from the winning plan, and statically
+checks each build without executing it:
+
+  - **conformance** — the extracted collective signature
+    (:mod:`repro.analysis.signature`) must equal the expectation derived
+    from the plan (:mod:`repro.analysis.expect`): per-region ops, mesh
+    axes, counts, raw payload bytes and quantized-wire tagging forward;
+    structural ring/psum/quant rules backward;
+  - **replication** — every shard_map ``out_spec`` replication claim
+    must be proven by the jaxpr walk (:mod:`repro.analysis.replication`),
+    including the build paths where jax's own ``check_vma`` is off.
+
+Different presets frequently elect the *same* plan; identical
+(config, plan, phase) builds are linted once and the verdict attributed
+to every preset that produced them, so the full zoo x preset x wire
+sweep stays tractable.  Results land in ``BENCH_analysis.json`` with
+per-preset extracted byte totals — ``benchmarks/bench_regress.py``
+tracks those as drift metrics so comm volume cannot silently grow.
+
+``--hlo-check`` additionally compiles one pinned config's step per
+preset and cross-checks the jaxpr-level byte totals against the
+optimized-HLO totals from :mod:`repro.launch.hlo_analysis` (the second
+extraction backend).
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import sys
+import traceback
+from collections import defaultdict
+
+#: sweep geometry: one host mesh every preset's search can be traced on
+TP, DP, B, S, S_MAX = 4, 2, 4, 32, 64
+
+WIRES = ("bf16", "int8", "fp8")
+PHASES = ("train", "prefill", "decode")
+
+#: config whose compiled step anchors the jaxpr-vs-HLO byte cross-check
+HLO_CHECK_CONFIG = "qwen1.5-0.5b"
+
+#: jaxpr collective -> optimized-HLO op kind
+_HLO_KIND = {"psum": "all-reduce", "pmax": "all-reduce", "pmin": "all-reduce",
+             "all_gather": "all-gather", "reduce_scatter": "reduce-scatter",
+             "all_to_all": "all-to-all", "ppermute": "collective-permute"}
+
+
+def _zoo() -> list[str]:
+    from repro.configs.registry import ARCHS
+
+    return sorted(ARCHS)
+
+
+#: plan-document keys that record where a plan came from / what the cost
+#: model predicted for it — not what the build will execute
+_PROVENANCE_KEYS = frozenset({"topology", "calibration", "predicted",
+                              "provenance", "predicted_t_step"})
+
+
+def _fingerprint(plan) -> str:
+    """Plan identity for dedupe: the searched knobs, not the provenance
+    (topology preset name, calibration table and predicted timings
+    differ per preset even when the elected strategy is identical)."""
+    def strip(node):
+        if isinstance(node, dict):
+            return {k: strip(v) for k, v in node.items()
+                    if k not in _PROVENANCE_KEYS}
+        if isinstance(node, list):
+            return [strip(v) for v in node]
+        return node
+
+    return json.dumps(strip(json.loads(plan.to_json())), sort_keys=True)
+
+
+def searched_plan(cfg, preset: str, wire: str):
+    from repro.core.plan import plan_search
+
+    return plan_search(preset, TP, model=cfg, batch=B, seq=S, dp=DP,
+                       wire_dtype=wire, decode_batch=B).best
+
+
+def lint_build(cfg, plan, phase: str):
+    """Build one step and run both static checkers.
+
+    Returns ``(errors, op_bytes)`` — empty errors == the build conforms
+    to the plan and every replication claim is proven; ``op_bytes`` is
+    the extracted {op: raw bytes} inventory (fwd+bwd).
+    """
+    import jax
+    import numpy as np
+
+    from repro.analysis.expect import check_conformance, expected_signature
+    from repro.analysis.replication import verify_replication
+    from repro.analysis.signature import extract, trace_jaxpr
+    from repro.configs.base import ShapeConfig
+    from repro.launch.steps import (batch_struct, build_decode_step,
+                                    build_prefill, build_train_step)
+    from repro.models import lm
+    from repro.optim import adamw
+
+    params = lm.abstract_params(cfg)
+    if phase == "train":
+        fn, info = build_train_step(cfg, plan=plan)
+        pspecs = lm.param_specs(cfg, info.ctx)
+        opt = adamw.init_opt_state(params, pspecs, info.ctx, abstract=True)
+        batch = batch_struct(cfg, ShapeConfig("x", S, B, "train"), "train")
+        args = (params, opt, batch)
+        exp_plan, seq = plan, S
+    elif phase == "prefill":
+        fn, info = build_prefill(cfg, plan=plan)
+        batch = batch_struct(cfg, ShapeConfig("x", S, B, "prefill"),
+                             "prefill")
+        args = (params, batch)
+        exp_plan, seq = plan, S
+    else:
+        # serve.py builds the decode stack from plan.decode_view() (the
+        # decode factorization may flip the mesh) — lint what it runs
+        view = plan.decode_view() if getattr(plan, "decode", None) else plan
+        fn, info = build_decode_step(cfg, B=B, s_max=S_MAX, plan=view)
+        caches, _ = lm.init_decode_caches(cfg, info.ctx, B, S_MAX,
+                                          abstract=True)
+        tokens = jax.ShapeDtypeStruct((B, 1), np.int32)
+        pos = jax.ShapeDtypeStruct((), np.int32)
+        args = (params, tokens, pos, caches)
+        exp_plan, seq = view, 1
+
+    jaxpr = trace_jaxpr(fn, *args)
+    sig = extract(jaxpr)
+    exp = expected_signature(cfg, exp_plan, phase, B, seq)
+    errors = check_conformance(sig, exp)
+    errors += verify_replication(jaxpr, strict=False)
+    return errors, sig.op_bytes()
+
+
+def hlo_cross_check(cfg, plan) -> list[str]:
+    """Compile the prefill step and require the optimized-HLO collective
+    byte totals (:mod:`repro.launch.hlo_analysis`) to agree with the
+    jaxpr-level signature per mapped op kind.
+
+    Runs the model at float32: the CPU backend upcasts bf16 collectives
+    to f32 wholesale, which would skew every payload 2x against the
+    jaxpr-level bytes — at f32 both backends measure identical widths,
+    so totals must match EXACTLY."""
+    import dataclasses
+
+    import jax
+
+    from repro.analysis.signature import extract
+    from repro.configs.base import ShapeConfig
+    from repro.launch import hlo_analysis
+    from repro.launch.steps import batch_struct, build_prefill
+    from repro.models import lm
+
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    fn, info = build_prefill(cfg, plan=plan)
+    params = lm.abstract_params(cfg)
+    batch = batch_struct(cfg, ShapeConfig("x", S, B, "prefill"), "prefill")
+    sig = extract(fn, params, batch)
+    want: dict[str, float] = defaultdict(float)
+    for op, byts in sig.op_bytes().items():
+        want[_HLO_KIND[op]] += byts
+
+    hlo = (jax.jit(fn).lower(params, batch)
+           .compile().as_text())
+    got = hlo_analysis.collective_bytes(hlo)["per_op_bytes"]
+    errors = []
+    for kind in sorted(set(want) | set(got)):
+        w, g = want.get(kind, 0.0), got.get(kind, 0.0)
+        if w != g:
+            errors.append(f"{kind}: jaxpr says {int(w)} raw bytes, "
+                          f"optimized HLO says {int(g)}")
+    return errors
+
+
+def main(argv=None) -> int:
+    from repro.core.comm_matrix import PRESETS
+    from repro.configs.registry import get_config
+
+    ap = argparse.ArgumentParser(
+        description="lint every (config, preset, wire, phase) build "
+                    "against the plan that priced it")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated zoo subset (default: all)")
+    ap.add_argument("--presets", default=None,
+                    help="comma-separated topology presets (default: all)")
+    ap.add_argument("--wires", default=",".join(WIRES))
+    ap.add_argument("--phases", default=",".join(PHASES))
+    ap.add_argument("--hlo-check", action="store_true",
+                    help="compile %s per preset and cross-check jaxpr vs "
+                         "HLO byte totals" % HLO_CHECK_CONFIG)
+    ap.add_argument("--out", default="BENCH_analysis.json",
+                    help="result artifact path ('' disables)")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    configs = (args.configs.split(",") if args.configs else _zoo())
+    presets = (args.presets.split(",") if args.presets
+               else sorted(PRESETS))
+    wires = tuple(args.wires.split(","))
+    phases = tuple(args.phases.split(","))
+
+    plan_cache: dict[tuple, object] = {}
+    lint_cache: dict[tuple, tuple] = {}
+    preset_bytes: dict[str, float] = defaultdict(float)
+    failures, cases, built = [], 0, 0
+
+    for name in configs:
+        cfg = get_config(name).reduced()
+        for preset in presets:
+            for wire in wires:
+                try:
+                    key = (name, preset, wire)
+                    if key not in plan_cache:
+                        plan_cache[key] = searched_plan(cfg, preset, wire)
+                    plan = plan_cache[key]
+                except Exception as ex:  # search itself must not break
+                    failures.append(f"{name} [{preset} {wire}] search: "
+                                    f"{type(ex).__name__}: {ex}")
+                    continue
+                fp = _fingerprint(plan)
+                for phase in phases:
+                    if phase == "decode" and cfg.frontend == "vision_patches":
+                        continue
+                    cases += 1
+                    ck = (name, fp, phase)
+                    if ck not in lint_cache:
+                        built += 1
+                        try:
+                            lint_cache[ck] = lint_build(cfg, plan, phase)
+                        except Exception as ex:
+                            lint_cache[ck] = (
+                                [f"build/trace error: {type(ex).__name__}: "
+                                 f"{ex}"], {})
+                            if args.verbose:
+                                traceback.print_exc(limit=6)
+                    errors, op_bytes = lint_cache[ck]
+                    label = f"{name} [{preset} {wire}] {phase}"
+                    if wire == wires[0]:
+                        preset_bytes[preset] += sum(op_bytes.values())
+                    if errors:
+                        failures.append(label)
+                        print(f"FAIL {label}")
+                        for e in errors[:8]:
+                            print(f"     {e}")
+                    elif args.verbose:
+                        print(f"ok   {label}")
+
+    hlo_errs: list[str] = []
+    if args.hlo_check:
+        cfg = get_config(HLO_CHECK_CONFIG).reduced()
+        seen: set[str] = set()
+        for preset in presets:
+            plan = plan_cache.get((HLO_CHECK_CONFIG, preset, wires[0]))
+            if plan is None:
+                plan = searched_plan(cfg, preset, wires[0])
+            fp = _fingerprint(plan)
+            if fp in seen:
+                continue
+            seen.add(fp)
+            errs = hlo_cross_check(cfg, plan)
+            tag = f"hlo-check [{preset}]"
+            if errs:
+                hlo_errs += [f"{tag}: {e}" for e in errs]
+                print(f"FAIL {tag}")
+                for e in errs:
+                    print(f"     {e}")
+            else:
+                print(f"ok   {tag} (jaxpr == HLO byte totals)")
+        failures += hlo_errs
+
+    print(f"lint-plans: {cases} cases ({built} unique builds, "
+          f"{len(plan_cache)} searches), {len(failures)} failures")
+    if args.out:
+        doc = {
+            "summary": {
+                "cases": cases,
+                "unique_builds": built,
+                "failures": len(failures),
+                "conformant": not failures,
+            },
+            "per_preset_raw_bytes": {k: preset_bytes[k]
+                                     for k in sorted(preset_bytes)},
+            "failing": failures[:50],
+        }
+        with open(args.out, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

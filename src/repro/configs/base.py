@@ -6,7 +6,6 @@ expressed through optional sub-configs (MoE, MLA, SSM) and a block pattern.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Literal
 
 
@@ -123,7 +122,6 @@ class ModelConfig:
                 mlstm = h * d_up * 2 + 3 * d_up * d_up // 1 + d_up * h
                 slstm = 4 * h * h + 4 * h * h // self.num_heads + 2 * h * int(1.3 * h)
                 n_s = L // self.ssm.slstm_every
-                per = mlstm  # appr per-block
                 return emb + head + (L - n_s) * mlstm + n_s * slstm
             mamba = (
                 h * (2 * d_in + 2 * self.ssm.d_state + nheads)  # in_proj

@@ -41,6 +41,7 @@ Beyond-paper boundary modes (see docs/overlap.md):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Literal
 
@@ -400,6 +401,62 @@ def atp_boundary(x, axis: str | None):
     if axis is None:
         return x
     return lax.psum(x, axis)
+
+
+def vma_rewrite_active(ctx) -> bool:
+    """True when jax's vma rewrite types this build's shard_map bodies.
+
+    With the rewrite active (jax>=0.6 AND no ring boundary in any
+    segment's plan — the same condition under which whole-step shard_maps
+    pass ``check_vma=True``), jax inserts ``pvary`` casts wherever a
+    replicated value meets varying data, and the transpose of ``pvary``
+    is exactly the gradient psum that :func:`grad_sync` supplies by hand.
+    Callers use this to avoid double-reducing on rewrite builds and to
+    decide ``check_vma`` for whole-step shard_maps (one source of truth).
+    """
+    from repro.core.compat import LEGACY_REP_CHECKER
+
+    return not LEGACY_REP_CHECKER and not ctx.any_ring
+
+
+def grad_sync(ctx, x, axes):
+    """Identity forward, ``psum(ct, axes)`` backward.
+
+    TP-replicated params whose cotangent is rank-partial (norm scales and
+    biases — every norm feeds a column boundary whose output is
+    ax1-sharded, so the scale grad sums only the local columns' / local
+    tokens' contributions; MoE router and qk-norm gains, whose cotangent
+    flows back from rank-local experts/heads) drift apart across ranks
+    without an explicit gradient all-reduce.  Wrapping the param in this
+    barrier at its use site restores the reduction the vma replication
+    lint (``repro.analysis.replication``) demands — it is the classic
+    Megatron sequence-parallel "grads of RMSNorm need all-reduce" fix,
+    which applies to ATP's ax2-sharded-feature norms on every mesh with
+    d1 > 1, sequence-parallel or not.
+
+    No-op when the vma rewrite is active (see :func:`vma_rewrite_active`):
+    there jax's own ``pvary`` transpose performs the identical reduction,
+    and stacking this barrier on top would double-count the gradient.
+    """
+    if not axes or vma_rewrite_active(ctx):
+        return x
+    return _grad_sync(x, axes if isinstance(axes, str) else tuple(axes))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _grad_sync(x, axes):
+    return x
+
+
+def _grad_sync_fwd(x, axes):
+    return x, None
+
+
+def _grad_sync_bwd(axes, _res, ct):
+    return (lax.psum(ct, axes),)
+
+
+_grad_sync.defvjp(_grad_sync_fwd, _grad_sync_bwd)
 
 
 def atp_gather(x, axis: str | None, dim: int):

@@ -93,15 +93,18 @@ def _ring_reduce_scatter_raw(x, axis, d: int, dim: int, reverse: bool = False):
     """
     if d == 1:
         return x
-    xs = _split_stack(x, d, dim)
-    idx = lax.axis_index(axis)
-    sgn = -1 if reverse else 1
-    perm = _perm_prev(d) if reverse else _perm_next(d)
-    acc = _take_block(xs, idx - sgn, d)
-    for t in range(1, d):
-        acc = lax.ppermute(acc, axis, perm)
-        acc = acc + _take_block(xs, idx - sgn * (1 + t), d)
-    return acc
+    # the scope name is load-bearing: repro.analysis reads `ring_rs[axis]`
+    # regions out of the jaxpr name stack for attribution + vma semantics
+    with jax.named_scope(f"ring_rs[{axis}]"):
+        xs = _split_stack(x, d, dim)
+        idx = lax.axis_index(axis)
+        sgn = -1 if reverse else 1
+        perm = _perm_prev(d) if reverse else _perm_next(d)
+        acc = _take_block(xs, idx - sgn, d)
+        for t in range(1, d):
+            acc = lax.ppermute(acc, axis, perm)
+            acc = acc + _take_block(xs, idx - sgn * (1 + t), d)
+        return acc
 
 
 def _ring_all_gather_raw(x, axis, d: int, dim: int, reverse: bool = False):
@@ -112,17 +115,18 @@ def _ring_all_gather_raw(x, axis, d: int, dim: int, reverse: bool = False):
     ranks behind (ahead, when reversed)."""
     if d == 1:
         return x
-    idx = lax.axis_index(axis)
-    sgn = -1 if reverse else 1
-    perm = _perm_prev(d) if reverse else _perm_next(d)
-    buf = jnp.zeros((d,) + x.shape, x.dtype)
-    buf = lax.dynamic_update_index_in_dim(buf, x, idx, axis=0)
-    cur = x
-    for t in range(1, d):
-        cur = lax.ppermute(cur, axis, perm)
-        buf = lax.dynamic_update_index_in_dim(
-            buf, cur, jnp.mod(idx - sgn * t, d), axis=0)
-    return jnp.concatenate([buf[i] for i in range(d)], axis=dim)
+    with jax.named_scope(f"ring_ag[{axis}]"):
+        idx = lax.axis_index(axis)
+        sgn = -1 if reverse else 1
+        perm = _perm_prev(d) if reverse else _perm_next(d)
+        buf = jnp.zeros((d,) + x.shape, x.dtype)
+        buf = lax.dynamic_update_index_in_dim(buf, x, idx, axis=0)
+        cur = x
+        for t in range(1, d):
+            cur = lax.ppermute(cur, axis, perm)
+            buf = lax.dynamic_update_index_in_dim(
+                buf, cur, jnp.mod(idx - sgn * t, d), axis=0)
+        return jnp.concatenate([buf[i] for i in range(d)], axis=dim)
 
 
 def _ring_all_reduce_raw(x, axis, d: int, bidirectional: bool = True):
@@ -131,17 +135,18 @@ def _ring_all_reduce_raw(x, axis, d: int, bidirectional: bool = True):
     if d == 1:
         return x
     dim = _pick_ring_dim(x.shape, d)
-    if dim is None:
-        return lax.psum(x, axis)  # no dimension divides: monolithic fallback
-    if bidirectional and x.shape[dim] % (2 * d) == 0:
-        lo, hi = jnp.split(x, 2, axis=dim)
-        lo = _ring_reduce_scatter_raw(lo, axis, d, dim, reverse=False)
-        hi = _ring_reduce_scatter_raw(hi, axis, d, dim, reverse=True)
-        lo = _ring_all_gather_raw(lo, axis, d, dim)
-        hi = _ring_all_gather_raw(hi, axis, d, dim, reverse=True)
-        return jnp.concatenate([lo, hi], axis=dim)
-    y = _ring_reduce_scatter_raw(x, axis, d, dim)
-    return _ring_all_gather_raw(y, axis, d, dim)
+    with jax.named_scope(f"ring_ar[{axis}]"):
+        if dim is None:
+            return lax.psum(x, axis)  # no dim divides: monolithic fallback
+        if bidirectional and x.shape[dim] % (2 * d) == 0:
+            lo, hi = jnp.split(x, 2, axis=dim)
+            lo = _ring_reduce_scatter_raw(lo, axis, d, dim, reverse=False)
+            hi = _ring_reduce_scatter_raw(hi, axis, d, dim, reverse=True)
+            lo = _ring_all_gather_raw(lo, axis, d, dim)
+            hi = _ring_all_gather_raw(hi, axis, d, dim, reverse=True)
+            return jnp.concatenate([lo, hi], axis=dim)
+        y = _ring_reduce_scatter_raw(x, axis, d, dim)
+        return _ring_all_gather_raw(y, axis, d, dim)
 
 
 def _pick_ring_dim(shape, d: int) -> int | None:
@@ -251,22 +256,26 @@ def wire_quantize(x, axis, wire_dtype: str):
     if wire_dtype not in WIRE_DTYPES:
         raise ValueError(
             f"wire_dtype must be one of {WIRE_DTYPES}, got {wire_dtype!r}")
-    xf = x.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(xf))
-    if axis is not None:
-        amax = lax.pmax(amax, axis)
-    if wire_dtype == "fp8" and _FP8_DTYPE is not None:
-        scale = jnp.maximum(amax / _FP8_QMAX, 1e-12)
-        q = (xf / scale).astype(_FP8_DTYPE).astype(jnp.float32)
-    else:
-        scale = jnp.maximum(amax / _INT8_QMAX, 1e-12)
-        q = jnp.clip(jnp.round(xf / scale), -_INT8_QMAX, _INT8_QMAX)
-    return q, scale
+    with jax.named_scope(f"wireq[{axis}]"):
+        xf = x.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(xf))
+        if axis is not None:
+            amax = lax.pmax(amax, axis)
+        if wire_dtype == "fp8" and _FP8_DTYPE is not None:
+            scale = jnp.maximum(amax / _FP8_QMAX, 1e-12)
+            q = (xf / scale).astype(_FP8_DTYPE).astype(jnp.float32)
+        else:
+            scale = jnp.maximum(amax / _INT8_QMAX, 1e-12)
+            q = jnp.clip(jnp.round(xf / scale), -_INT8_QMAX, _INT8_QMAX)
+        return q, scale
 
 
 def _quant_ar_raw(x, axis, d, wire_dtype):
-    q, scale = wire_quantize(x, axis, wire_dtype)
-    return (_ring_all_reduce_raw(q, axis, d) * scale).astype(x.dtype)
+    # `quant[axis]` scopes mark every collective that carries a quantized
+    # payload — repro.analysis prices those at 1 wire byte per element
+    with jax.named_scope(f"quant[{axis}]"):
+        q, scale = wire_quantize(x, axis, wire_dtype)
+        return (_ring_all_reduce_raw(q, axis, d) * scale).astype(x.dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
@@ -291,8 +300,9 @@ quant_ring_all_reduce.defvjp(_qar_fwd, _qar_bwd)
 
 
 def _quant_psum_raw(x, axis, wire_dtype):
-    q, scale = wire_quantize(x, axis, wire_dtype)
-    return (lax.psum(q, axis) * scale).astype(x.dtype)
+    with jax.named_scope(f"quant[{axis}]"):
+        q, scale = wire_quantize(x, axis, wire_dtype)
+        return (lax.psum(q, axis) * scale).astype(x.dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
@@ -314,12 +324,13 @@ quant_psum.defvjp(_qpsum_fwd, _qpsum_bwd)
 
 
 def _quant_rs_raw(x, axis, d, dim, wire_dtype, ring):
-    q, scale = wire_quantize(x, axis, wire_dtype)
-    if ring:
-        y = _ring_reduce_scatter_raw(q, axis, d, dim)
-    else:
-        y = lax.psum_scatter(q, axis, scatter_dimension=dim, tiled=True)
-    return (y * scale).astype(x.dtype)
+    with jax.named_scope(f"quant[{axis}]"):
+        q, scale = wire_quantize(x, axis, wire_dtype)
+        if ring:
+            y = _ring_reduce_scatter_raw(q, axis, d, dim)
+        else:
+            y = lax.psum_scatter(q, axis, scatter_dimension=dim, tiled=True)
+        return (y * scale).astype(x.dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
@@ -339,12 +350,13 @@ def _qrs_fwd(x, axis, axis_size, dim, wire_dtype, ring):
 def _qrs_bwd(axis, axis_size, dim, wire_dtype, ring, _res, ct):
     # all-gather moves bytes but reduces nothing: quantize the cotangent
     # for the wire, gather the grid values, dequantize locally
-    q, scale = wire_quantize(ct, axis, wire_dtype)
-    if ring:
-        g = _ring_all_gather_raw(q, axis, axis_size, dim)
-    else:
-        g = lax.all_gather(q, axis, axis=dim, tiled=True)
-    return ((g * scale).astype(ct.dtype),)
+    with jax.named_scope(f"quant[{axis}]"):
+        q, scale = wire_quantize(ct, axis, wire_dtype)
+        if ring:
+            g = _ring_all_gather_raw(q, axis, axis_size, dim)
+        else:
+            g = lax.all_gather(q, axis, axis=dim, tiled=True)
+        return ((g * scale).astype(ct.dtype),)
 
 
 quant_reduce_scatter.defvjp(_qrs_fwd, _qrs_bwd)
@@ -416,14 +428,15 @@ def _rs_matmul_raw(x, w, axis, d, dim):
     if axis is None or d == 1:
         return _gemm(x, w)
     _require_divisible(x.shape[dim], d, "overlap_matmul_rs")
-    xs = _split_stack(x, d, dim)
-    idx = lax.axis_index(axis)
-    acc = _gemm(_take_block(xs, idx - 1, d), w)
-    perm = _perm_next(d)
-    for t in range(1, d):
-        acc = lax.ppermute(acc, axis, perm)
-        acc = acc + _gemm(_take_block(xs, idx - 1 - t, d), w)
-    return acc
+    with jax.named_scope(f"cm_rs[{axis}]"):
+        xs = _split_stack(x, d, dim)
+        idx = lax.axis_index(axis)
+        acc = _gemm(_take_block(xs, idx - 1, d), w)
+        perm = _perm_next(d)
+        for t in range(1, d):
+            acc = lax.ppermute(acc, axis, perm)
+            acc = acc + _gemm(_take_block(xs, idx - 1 - t, d), w)
+        return acc
 
 
 def _rs_matmul_fwd(x, w, axis, axis_size, dim):
@@ -455,17 +468,18 @@ def overlap_matmul_ag(x, w, axis, axis_size, dim):
 def _ag_matmul_raw(x, w, axis, d, dim):
     if axis is None or d == 1:
         return _gemm(x, w)
-    idx = lax.axis_index(axis)
-    g0 = _gemm(x, w)
-    buf = jnp.zeros((d,) + g0.shape, g0.dtype)
-    buf = lax.dynamic_update_index_in_dim(buf, g0, idx, axis=0)
-    cur = x
-    perm = _perm_next(d)
-    for t in range(1, d):
-        cur = lax.ppermute(cur, axis, perm)
-        buf = lax.dynamic_update_index_in_dim(
-            buf, _gemm(cur, w), jnp.mod(idx - t, d), axis=0)
-    return jnp.concatenate([buf[i] for i in range(d)], axis=dim)
+    with jax.named_scope(f"cm_ag[{axis}]"):
+        idx = lax.axis_index(axis)
+        g0 = _gemm(x, w)
+        buf = jnp.zeros((d,) + g0.shape, g0.dtype)
+        buf = lax.dynamic_update_index_in_dim(buf, g0, idx, axis=0)
+        cur = x
+        perm = _perm_next(d)
+        for t in range(1, d):
+            cur = lax.ppermute(cur, axis, perm)
+            buf = lax.dynamic_update_index_in_dim(
+                buf, _gemm(cur, w), jnp.mod(idx - t, d), axis=0)
+        return jnp.concatenate([buf[i] for i in range(d)], axis=dim)
 
 
 def _ag_matmul_fwd(x, w, axis, axis_size, dim):
@@ -493,19 +507,21 @@ def _ag_two_matmuls(ct, wt, x, axis, d, dim):
     """
     if axis is None or d == 1:
         return _gemm(ct, wt), ct
-    idx = lax.axis_index(axis)
-    dx0 = _gemm(ct, wt)
-    dxs = jnp.zeros((d,) + dx0.shape, dx0.dtype)
-    cts = jnp.zeros((d,) + ct.shape, ct.dtype)
-    dxs = lax.dynamic_update_index_in_dim(dxs, dx0, idx, axis=0)
-    cts = lax.dynamic_update_index_in_dim(cts, ct, idx, axis=0)
-    cur = ct
-    perm = _perm_next(d)
-    for t in range(1, d):
-        cur = lax.ppermute(cur, axis, perm)
-        j = jnp.mod(idx - t, d)
-        dxs = lax.dynamic_update_index_in_dim(dxs, _gemm(cur, wt), j, axis=0)
-        cts = lax.dynamic_update_index_in_dim(cts, cur, j, axis=0)
-    dx = jnp.concatenate([dxs[i] for i in range(d)], axis=dim)
-    ct_full = jnp.concatenate([cts[i] for i in range(d)], axis=dim)
-    return dx, ct_full
+    with jax.named_scope(f"cm_ag[{axis}]"):
+        idx = lax.axis_index(axis)
+        dx0 = _gemm(ct, wt)
+        dxs = jnp.zeros((d,) + dx0.shape, dx0.dtype)
+        cts = jnp.zeros((d,) + ct.shape, ct.dtype)
+        dxs = lax.dynamic_update_index_in_dim(dxs, dx0, idx, axis=0)
+        cts = lax.dynamic_update_index_in_dim(cts, ct, idx, axis=0)
+        cur = ct
+        perm = _perm_next(d)
+        for t in range(1, d):
+            cur = lax.ppermute(cur, axis, perm)
+            j = jnp.mod(idx - t, d)
+            dxs = lax.dynamic_update_index_in_dim(
+                dxs, _gemm(cur, wt), j, axis=0)
+            cts = lax.dynamic_update_index_in_dim(cts, cur, j, axis=0)
+        dx = jnp.concatenate([dxs[i] for i in range(d)], axis=dim)
+        ct_full = jnp.concatenate([cts[i] for i in range(d)], axis=dim)
+        return dx, ct_full

@@ -24,7 +24,6 @@ import sys
 import tempfile
 
 import jax
-import jax.numpy as jnp
 
 
 def check(ok: bool, what: str):
@@ -131,6 +130,25 @@ def main():
         check(any(k == "calibration" and v.startswith("recalibrated")
                   for k, v in new_plan.provenance),
               "recalibration recorded in provenance")
+
+        # 2b. static conformance: both the original 8-device plan and the
+        #     re-searched surviving-mesh plan must build steps that emit
+        #     exactly the collectives they priced
+        from repro.analysis import assert_step_conforms
+        from repro.configs.base import ShapeConfig
+        from repro.launch.steps import batch_struct, build_train_step
+        from repro.models import lm
+        from repro.optim import adamw
+
+        ap = lm.abstract_params(cfg)
+        for p, tag in ((plan, "initial"), (new_plan, "re-searched")):
+            fn, binfo = build_train_step(cfg, plan=p)
+            aopt = adamw.init_opt_state(ap, binfo.pspecs, binfo.ctx,
+                                        "zero1", abstract=True)
+            ab = batch_struct(cfg, ShapeConfig("x", 32, 8, "train"),
+                              "train")
+            assert_step_conforms(fn, cfg, p, "train", 8, 32, ap, aopt, ab)
+            check(True, f"{tag} plan's train build conforms (static lint)")
 
         # 3. restored state landed SHARDED on the new (d1,d2) mesh
         inf = live["info"]

@@ -18,7 +18,7 @@ collective) and are applied uniformly across strategies, so strategy
 """
 from __future__ import annotations
 
-import json
+import math
 import re
 from collections import defaultdict
 
@@ -26,6 +26,8 @@ DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
     "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    # sub-byte quantized storage: XLA packs two nibbles per byte
+    "s4": 0.5, "u4": 0.5,
 }
 
 COLLECTIVES = (
@@ -35,18 +37,23 @@ COLLECTIVES = (
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+# async pairs are counted once, uniformly: the ``*-start`` op carries the
+# payload, the matching ``*-done`` deliberately fails this pattern (the
+# alternation requires '(' straight after the op name or its -start form)
 _OP_KIND_RE = re.compile(
-    r"=\s*[^=]*?\b(all-reduce-start|all-reduce|all-gather-start|all-gather"
-    r"|reduce-scatter|all-to-all|collective-permute-start|collective-permute)\(")
+    r"=\s*[^=]*?\b(all-reduce(?:-start)?|all-gather(?:-start)?"
+    r"|reduce-scatter(?:-start)?|all-to-all(?:-start)?"
+    r"|collective-permute(?:-start)?)\(")
 _BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
 
-def shape_bytes(shape_str: str) -> int:
-    """Bytes of the result shape(s) on an HLO op line (handles tuples)."""
-    total = 0
+def _component_bytes(shape_str: str) -> list[int]:
+    """Per-array bytes for each typed component in a shape string
+    (sub-byte dtypes round up per component: packed storage)."""
+    out = []
     for dt, dims in _SHAPE_RE.findall(shape_str):
         if dt not in DTYPE_BYTES:
             continue
@@ -55,8 +62,29 @@ def shape_bytes(shape_str: str) -> int:
             for d in dims.split(","):
                 if d:
                     n *= int(d)
-        total += n * DTYPE_BYTES[dt]
-    return total
+        out.append(int(math.ceil(n * DTYPE_BYTES[dt])))
+    return out
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of the result shape(s) on an HLO op line (handles tuples)."""
+    return sum(_component_bytes(shape_str))
+
+
+def _async_start_bytes(kind: str, shape_str: str) -> int:
+    """Payload bytes of an async ``*-start`` result tuple.
+
+    Async starts return ``(operand, result, context...)``-style tuples
+    (u32 context scalars included), so summing the whole tuple would
+    double-count.  The destination buffer is the LARGEST component for
+    every kind except reduce-scatter — there the result is the small
+    shard (the caller re-multiplies by the group size, same as the sync
+    form).
+    """
+    comps = _component_bytes(shape_str)
+    if not comps:
+        return 0
+    return min(comps) if kind == "reduce-scatter" else max(comps)
 
 
 def _result_shape(line: str) -> str:
@@ -100,8 +128,11 @@ def _parse(hlo: str):
             continue
         mo = _OP_KIND_RE.search(s)
         if mo:
+            is_start = mo.group(1).endswith("-start")
             kind = mo.group(1).replace("-start", "")
-            b = shape_bytes(_result_shape(s))
+            shape = _result_shape(s)
+            b = (_async_start_bytes(kind, shape) if is_start
+                 else shape_bytes(shape))
             g = _group_size(s)
             if kind == "reduce-scatter":
                 b *= g

@@ -78,9 +78,28 @@ def main():
           (plan.chunks, plan.boundary_mode),
           "builder did not drop plan knobs")
 
-    # 5. three real training steps under the plan
+    # 5. static conformance: the built steps must emit exactly the
+    #    collectives the plan priced, with every out_spec claim proven
+    from repro.analysis import assert_step_conforms
+    from repro.configs.base import ShapeConfig
+    from repro.launch.steps import batch_struct
     from repro.models import lm
     from repro.optim import adamw
+
+    aparams = lm.abstract_params(cfg)
+    aopt = adamw.init_opt_state(aparams, t_info.pspecs, t_info.ctx, "zero1",
+                                abstract=True)
+    abatch = batch_struct(cfg, ShapeConfig("x", 32, 8, "train"), "train")
+    assert_step_conforms(t_step, cfg, plan, "train", 8, 32,
+                         aparams, aopt, abatch)
+    acaches, _ = lm.init_decode_caches(cfg, d_info.ctx, 4, 16, abstract=True)
+    atok = jax.ShapeDtypeStruct((4, 1), jnp.int32)
+    apos = jax.ShapeDtypeStruct((), jnp.int32)
+    assert_step_conforms(d_step, cfg, plan, "decode", 4, 1,
+                         aparams, atok, apos, acaches)
+    check(True, "train + decode builds conform to the plan (static lint)")
+
+    # 6. three real training steps under the plan
 
     src = TokenSource(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                  global_batch=8))

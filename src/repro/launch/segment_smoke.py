@@ -83,15 +83,35 @@ def main():
           "train dense segment: chunks=2 seq_parallel=True")
     check((mctx.chunks, mctx.seq_parallel) == (1, False),
           "train moe segment: chunks=1 seq_parallel masked")
-    _, d_info = build_decode_step(cfg, B=4, s_max=16, plan=loaded)
+    d_step, d_info = build_decode_step(cfg, B=4, s_max=16, plan=loaded)
     check(not any(s.seq_parallel for s in d_info.ctx.segment_plans),
           "decode masks seq_parallel in every segment plan")
 
-    # 4. three real training steps under the mixed plan, and loss parity
-    #    with the all-replicated plan (sequence parallelism is a layout
-    #    change, not a math change)
+    # 4. static conformance: the mixed-knob builds must emit exactly the
+    #    per-segment collectives the v2 plan priced (dense seq-parallel
+    #    reduce-scatters, MoE all-to-alls, decode masking), with every
+    #    out_spec replication claim proven
+    from repro.analysis import assert_step_conforms
+    from repro.configs.base import ShapeConfig
+    from repro.launch.steps import batch_struct
     from repro.models import lm
     from repro.optim import adamw
+
+    aparams = lm.abstract_params(cfg)
+    aopt = adamw.init_opt_state(aparams, t_info.pspecs, t_info.ctx, "zero1",
+                                abstract=True)
+    abatch = batch_struct(cfg, ShapeConfig("x", 32, 8, "train"), "train")
+    assert_step_conforms(t_step, cfg, loaded, "train", 8, 32,
+                         aparams, aopt, abatch)
+    acaches, _ = lm.init_decode_caches(cfg, d_info.ctx, 4, 16, abstract=True)
+    assert_step_conforms(d_step, cfg, loaded, "decode", 4, 1, aparams,
+                         jax.ShapeDtypeStruct((4, 1), jnp.int32),
+                         jax.ShapeDtypeStruct((), jnp.int32), acaches)
+    check(True, "mixed-plan train + decode builds conform (static lint)")
+
+    # 5. three real training steps under the mixed plan, and loss parity
+    #    with the all-replicated plan (sequence parallelism is a layout
+    #    change, not a math change)
 
     def run3(p):
         step, info = build_train_step(cfg, plan=p)

@@ -64,6 +64,27 @@ def main():
         loaded = ParallelPlan.load(path)
     check(loaded == plan, "v3 plan JSON round-trip is exact")
 
+    # 1b. static conformance: the plain prefill build (train-view) and the
+    #     decode-view decode build — exactly what the wave-loop reference
+    #     runs — must emit the collectives the serve plan priced
+    from repro.analysis import assert_step_conforms
+    from repro.configs.base import ShapeConfig
+    from repro.launch.steps import (batch_struct, build_decode_step,
+                                    build_prefill)
+
+    dview = loaded.decode_view()
+    ap = lm.abstract_params(cfg)
+    pfn, _ = build_prefill(cfg, plan=loaded)
+    ab = batch_struct(cfg, ShapeConfig("x", 16, 4, "prefill"), "prefill")
+    assert_step_conforms(pfn, cfg, loaded, "prefill", 4, 16, ap, ab)
+    dfn, dinfo = build_decode_step(cfg, B=4, s_max=32, plan=dview)
+    acaches, _ = lm.init_decode_caches(cfg, dinfo.ctx, 4, 32, abstract=True)
+    assert_step_conforms(dfn, cfg, dview, "decode", 4, 1, ap,
+                         jax.ShapeDtypeStruct((4, 1), np.int32),
+                         jax.ShapeDtypeStruct((), np.int32), acaches)
+    check(True, "prefill + decode-view builds conform to the serve plan "
+                "(static lint)")
+
     # 2. mixed-length workload through the paged continuous server built
     #    on the decode view
     rng = np.random.default_rng(0)

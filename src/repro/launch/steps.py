@@ -126,10 +126,13 @@ def _check_vma(ctx: ATPContext) -> bool:
     (jax 0.4/0.5) checker additionally has no rep rules for the
     custom_vjp ops every whole-step program contains (gpipe_loss, the
     overlap collectives), so it is skipped wholesale there.  Ring in ANY
-    segment's plan disqualifies the whole step."""
-    from repro.core.compat import LEGACY_REP_CHECKER
+    segment's plan disqualifies the whole step.  Delegates to
+    :func:`repro.core.atp.vma_rewrite_active` — the same predicate gates
+    the manual ``grad_sync`` barriers (no rewrite => manual psums), so
+    every build path has exactly one gradient reduction."""
+    from repro.core.atp import vma_rewrite_active
 
-    return not LEGACY_REP_CHECKER and not ctx.any_ring
+    return vma_rewrite_active(ctx)
 
 
 def build_train_step(cfg: ModelConfig, topo: MeshTopo | None = None,
@@ -196,15 +199,17 @@ def build_prefill(cfg: ModelConfig, topo: MeshTopo | None = None,
 
 def _greedy_pick(ctx: ATPContext, cfg: ModelConfig, logits):
     """Vocab-parallel greedy argmax.  logits [b, V/d1] -> token ids [b]."""
-    v_loc = logits.shape[-1]
-    lf = logits.astype(jnp.float32)
-    local_max = jnp.max(lf, axis=-1)
-    local_arg = jnp.argmax(lf, axis=-1).astype(jnp.int32) + ctx.index1() * v_loc
-    if ctx.ax1 is None:
-        return local_arg
-    gmax = lax.pmax(local_max, ctx.ax1)
-    cand = jnp.where(local_max >= gmax, local_arg, jnp.int32(2**30))
-    return lax.pmin(cand, ctx.ax1)
+    with jax.named_scope("shell:pick"):
+        v_loc = logits.shape[-1]
+        lf = logits.astype(jnp.float32)
+        local_max = jnp.max(lf, axis=-1)
+        local_arg = (jnp.argmax(lf, axis=-1).astype(jnp.int32)
+                     + ctx.index1() * v_loc)
+        if ctx.ax1 is None:
+            return local_arg
+        gmax = lax.pmax(local_max, ctx.ax1)
+        cand = jnp.where(local_max >= gmax, local_arg, jnp.int32(2**30))
+        return lax.pmin(cand, ctx.ax1)
 
 
 def build_paged_step(cfg: ModelConfig, topo: MeshTopo | None = None,

@@ -16,7 +16,6 @@ XLA_FLAGS=--xla_force_host_platform_device_count=N before launch).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import logging
 
 import jax

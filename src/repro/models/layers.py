@@ -14,8 +14,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.atp import (ATPContext, atp_boundary, atp_linear, seq_gather,
-                            shard_slice)
+from repro.core.atp import (ATPContext, atp_boundary, grad_sync,
+                            seq_gather, shard_slice)
 
 # ---------------------------------------------------------------------------
 # Param spec helpers (global tensor -> PartitionSpec over ATP axes).
@@ -68,6 +68,10 @@ def replicated_spec() -> P:
 
 def rms_norm(ctx: ATPContext, x, gamma, eps: float = 1e-6,
              plus_one: bool = False, gather_seq: bool = False):
+    # ax2-sharded scale, but its cotangent is ax1-PARTIAL: the norm output
+    # feeds a column boundary whose out dim is ax1-sharded, so each rank's
+    # scale grad sums only its columns (and, under sp, its tokens).
+    gamma = grad_sync(ctx, gamma, ctx.ax1)
     xf = x.astype(jnp.float32)
     ss = jnp.sum(xf * xf, axis=-1, keepdims=True)
     ss = atp_boundary(ss, ctx.ax2)  # full-feature sum of squares
@@ -80,6 +84,8 @@ def rms_norm(ctx: ATPContext, x, gamma, eps: float = 1e-6,
 
 def layer_norm(ctx: ATPContext, x, gamma, beta, eps: float = 1e-5,
                gather_seq: bool = False):
+    gamma = grad_sync(ctx, gamma, ctx.ax1)
+    beta = grad_sync(ctx, beta, ctx.ax1)
     xf = x.astype(jnp.float32)
     d = x.shape[-1] * ctx.d2
     s = atp_boundary(jnp.sum(xf, axis=-1, keepdims=True), ctx.ax2)

@@ -18,7 +18,6 @@ collectives) except the init/spec helpers.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any
 
@@ -30,7 +29,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import (ModelConfig, Segment,  # noqa: F401 (re-export)
                                 ShapeConfig, segments)
 from repro.core import compat
-from repro.core.atp import (ATPContext, atp_boundary, atp_linear,
+from repro.core.atp import (ATPContext, atp_boundary,
                             atp_reduce_scatter, seq_gather, seq_scatter,
                             shard_slice)
 from repro.models import layers as L
@@ -687,18 +686,22 @@ def forward(
     # knobs may request seq_parallel that the first segment's kind masks,
     # and the scatter must follow the masked decision
     entry_ctx = seg_ctxs[0] if seg_ctxs else ctx
-    if embeds is not None:
-        x = embeds
-        x_emb0 = x
-        # externally-supplied embeds are ax1-replicated: free local slice
-        x = seq_scatter(entry_ctx, x, dim=1)
-    else:
-        # seq-parallel entry fuses the vocab-parallel psum(ax1) with the
-        # seq slice into one psum_scatter (x_emb0 is then seq-sharded,
-        # fine: its consumers — zamba/MTP — never run seq-parallel)
-        x = embed_tokens(entry_ctx, cfg, params["embed"], tokens,
-                         scatter_seq=entry_sp)
-        x_emb0 = x
+    # `shell:*` / `seg{i}:{kind}` scope names are load-bearing: the
+    # repro.analysis conformance linter attributes collectives to plan
+    # segments by reading them out of the jaxpr name stacks
+    with jax.named_scope("shell:embed"):
+        if embeds is not None:
+            x = embeds
+            x_emb0 = x
+            # externally-supplied embeds are ax1-replicated: free local slice
+            x = seq_scatter(entry_ctx, x, dim=1)
+        else:
+            # seq-parallel entry fuses the vocab-parallel psum(ax1) with the
+            # seq slice into one psum_scatter (x_emb0 is then seq-sharded,
+            # fine: its consumers — zamba/MTP — never run seq-parallel)
+            x = embed_tokens(entry_ctx, cfg, params["embed"], tokens,
+                             scatter_seq=entry_sp)
+            x_emb0 = x
     aux_total = jnp.zeros((), jnp.float32)
     if cfg.moe is not None and ctx.dp_axes:
         # MoE aux loss varies with this rank's tokens -> type it varying
@@ -706,7 +709,6 @@ def forward(
         aux_total = compat.pcast(aux_total, ctx.dp_axes, to="varying")
     new_caches = {} if caches is not None else None
 
-    b_loc = x.shape[0]
     plan = (L.make_attn_plan(ctx, cfg.num_heads, cfg.num_kv_heads)
             if cfg.family != "ssm" else None)
 
@@ -716,10 +718,11 @@ def forward(
         sctx = seg_ctxs[i]
         # domain transition: the residual stream must enter each segment in
         # that segment's block I/O spec
-        if sctx.seq_parallel and not cur_sp:
-            x = seq_scatter(sctx, x, dim=1)      # free slice (replicated in)
-        elif cur_sp and not sctx.seq_parallel:
-            x = seq_gather(last_sp_ctx, x, dim=1)  # conjugate all-gather
+        with jax.named_scope(f"shell:trans{i}"):
+            if sctx.seq_parallel and not cur_sp:
+                x = seq_scatter(sctx, x, dim=1)    # free slice (replicated in)
+            elif cur_sp and not sctx.seq_parallel:
+                x = seq_gather(last_sp_ctx, x, dim=1)  # conjugate all-gather
         cur_sp = sctx.seq_parallel
         if cur_sp:
             last_sp_ctx = sctx
@@ -745,8 +748,9 @@ def forward(
                 return (h, aux + a), nc
 
             fn = jax.checkpoint(body) if remat else body
-            (x, aux_total), ncs = lax.scan(
-                fn, (x, aux_total), (sp, windows, seg_cache))
+            with jax.named_scope(f"seg{i}:{seg.kind}"):
+                (x, aux_total), ncs = lax.scan(
+                    fn, (x, aux_total), (sp, windows, seg_cache))
             if new_caches is not None:
                 new_caches[f"seg{i}"] = ncs
 
@@ -788,7 +792,9 @@ def forward(
                 return (h, aux), ncs
 
             fn = jax.checkpoint(zbody) if remat else zbody
-            (x, aux_total), ncs = lax.scan(fn, (x, aux_total), (sp, seg_cache))
+            with jax.named_scope(f"seg{i}:{seg.kind}"):
+                (x, aux_total), ncs = lax.scan(fn, (x, aux_total),
+                                               (sp, seg_cache))
             if new_caches is not None:
                 new_caches[f"seg{i}"] = ncs
 
@@ -822,16 +828,19 @@ def forward(
                 return (h, aux), ncs
 
             fn = jax.checkpoint(xbody) if remat else xbody
-            (x, aux_total), ncs = lax.scan(fn, (x, aux_total), (sp, seg_cache))
+            with jax.named_scope(f"seg{i}:{seg.kind}"):
+                (x, aux_total), ncs = lax.scan(fn, (x, aux_total),
+                                               (sp, seg_cache))
             if new_caches is not None:
                 new_caches[f"seg{i}"] = ncs
         else:
             raise ValueError(seg.kind)
 
-    x = L.norm(ctx, cfg, x, params["final_norm"])
-    # leave the sequence-parallel domain: heads/loss see the full sequence
-    if cur_sp:
-        x = seq_gather(last_sp_ctx, x, dim=1)
+    with jax.named_scope("shell:exit"):
+        x = L.norm(ctx, cfg, x, params["final_norm"])
+        # leave the sequence-parallel domain: heads/loss see the full sequence
+        if cur_sp:
+            x = seq_gather(last_sp_ctx, x, dim=1)
     return x, new_caches, aux_total, x_emb0
 
 
@@ -848,45 +857,53 @@ def train_loss(ctx: ATPContext, cfg: ModelConfig, params, batch, remat=True):
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     h, _, aux, x_emb0 = forward(ctx, cfg, params, tokens, positions,
                                 embeds=embeds, remat=remat)
-    logits = lm_logits(ctx, cfg, params, h)
-    per_tok = vocab_parallel_ce(ctx, logits, batch["labels"])
-    total = jnp.sum(per_tok)
-    count = jnp.asarray(per_tok.size, jnp.float32)
-    if ctx.dp_axes:
-        total = lax.psum(total, ctx.dp_axes)
-        count = lax.psum(count, ctx.dp_axes)
-    loss = total / count
+    with jax.named_scope("shell:head"):
+        logits = lm_logits(ctx, cfg, params, h)
+        per_tok = vocab_parallel_ce(ctx, logits, batch["labels"])
+    with jax.named_scope("shell:loss"):
+        total = jnp.sum(per_tok)
+        count = jnp.asarray(per_tok.size, jnp.float32)
+        if ctx.dp_axes:
+            total = lax.psum(total, ctx.dp_axes)
+            count = lax.psum(count, ctx.dp_axes)
+        loss = total / count
 
     if cfg.mtp and tokens is not None:
         # multi-token prediction: predict t+2 from (h_t, emb(t+1)).  h left
         # the sequence-parallel domain at forward()'s exit gather, so the
         # MTP head always runs on replicated full-sequence block I/O — use
         # an sp-free context view regardless of the plan's segment knobs.
-        mctx = dataclasses.replace(ctx, seq_parallel=False, segment_plans=())
-        mp = params["mtp"]
-        emb_next = embed_tokens(mctx, cfg, params["embed"],
-                                jnp.roll(tokens, -1, axis=1))
-        u = atp_boundary(
-            jnp.einsum("...k,kn->...n", h, mp["proj_h"])
-            + jnp.einsum("...k,kn->...n", emb_next, mp["proj_e"]), mctx.ax2)
-        if mctx.ax1 is not None:  # back to [.., h/d2] block I/O spec
-            u = lax.all_gather(u, mctx.ax1, axis=-1, tiled=True)
-        u = shard_slice(u, mctx.index2(), mctx.d2, dim=-1) if mctx.ax2 is not None else u
-        plan = L.make_attn_plan(mctx, cfg.num_heads, cfg.num_kv_heads)
-        u, _, _ = _apply_block("mla_dense" if cfg.mla else "dense",
-                               mctx, cfg, mp["block"], u, positions, plan, 0, None)
-        u = L.norm(mctx, cfg, u, mp["norm"])
-        logits2 = lm_logits(mctx, cfg, params, u)
-        mtp_labels = jnp.roll(batch["labels"], -1, axis=1)
-        l2 = jnp.sum(vocab_parallel_ce(ctx, logits2, mtp_labels))
-        if ctx.dp_axes:
-            l2 = lax.psum(l2, ctx.dp_axes)
-        loss = loss + cfg.mtp_loss_weight * l2 / count
+        with jax.named_scope("shell:mtp"):
+            mctx = dataclasses.replace(ctx, seq_parallel=False,
+                                       segment_plans=())
+            mp = params["mtp"]
+            emb_next = embed_tokens(mctx, cfg, params["embed"],
+                                    jnp.roll(tokens, -1, axis=1))
+            u = atp_boundary(
+                jnp.einsum("...k,kn->...n", h, mp["proj_h"])
+                + jnp.einsum("...k,kn->...n", emb_next, mp["proj_e"]),
+                mctx.ax2)
+            if mctx.ax1 is not None:  # back to [.., h/d2] block I/O spec
+                u = lax.all_gather(u, mctx.ax1, axis=-1, tiled=True)
+            u = (shard_slice(u, mctx.index2(), mctx.d2, dim=-1)
+                 if mctx.ax2 is not None else u)
+            plan = L.make_attn_plan(mctx, cfg.num_heads, cfg.num_kv_heads)
+            u, _, _ = _apply_block("mla_dense" if cfg.mla else "dense",
+                                   mctx, cfg, mp["block"], u, positions,
+                                   plan, 0, None)
+            u = L.norm(mctx, cfg, u, mp["norm"])
+            logits2 = lm_logits(mctx, cfg, params, u)
+            mtp_labels = jnp.roll(batch["labels"], -1, axis=1)
+            l2 = jnp.sum(vocab_parallel_ce(ctx, logits2, mtp_labels))
+            if ctx.dp_axes:
+                l2 = lax.psum(l2, ctx.dp_axes)
+            loss = loss + cfg.mtp_loss_weight * l2 / count
 
     if cfg.moe is not None:
-        if ctx.dp_axes:
-            aux = lax.pmean(aux, ctx.dp_axes)
-        loss = loss + cfg.moe.aux_loss_weight * aux / max(1, cfg.num_layers)
+        with jax.named_scope("shell:loss"):
+            if ctx.dp_axes:
+                aux = lax.pmean(aux, ctx.dp_axes)
+            loss = loss + cfg.moe.aux_loss_weight * aux / max(1, cfg.num_layers)
     return loss
 
 
@@ -902,7 +919,8 @@ def prefill_logits(ctx: ATPContext, cfg: ModelConfig, params, batch):
         b, s = ref.shape[0], ref.shape[1]
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     h, _, _, _ = forward(ctx, cfg, params, tokens, positions, embeds=embeds)
-    logits = lm_logits(ctx, cfg, params, h[:, -1:])
+    with jax.named_scope("shell:head"):
+        logits = lm_logits(ctx, cfg, params, h[:, -1:])
     return logits[:, 0]
 
 
@@ -918,7 +936,8 @@ def decode_step(ctx: ATPContext, cfg: ModelConfig, params, tokens, pos, caches):
         positions = jnp.broadcast_to(prange[None, :], (b, s))
     h, new_caches, _, _ = forward(ctx, cfg, params, tokens, positions,
                                   caches=caches)
-    logits = lm_logits(ctx, cfg, params, h[:, -1:])
+    with jax.named_scope("shell:head"):
+        logits = lm_logits(ctx, cfg, params, h[:, -1:])
     return logits[:, 0], new_caches
 
 
@@ -950,7 +969,8 @@ def paged_step(ctx: ATPContext, cfg: ModelConfig, params, tokens, start,
         paged["slot"] = slot
     h, new_caches, _, _ = forward(ctx, cfg, params, tokens, positions,
                                   caches=caches, paged=paged)
-    logits = lm_logits(ctx, cfg, params, h)
+    with jax.named_scope("shell:head"):
+        logits = lm_logits(ctx, cfg, params, h)
     if with_hidden:
         return logits, h, new_caches
     return logits, new_caches
@@ -970,17 +990,20 @@ def mtp_draft_logits(ctx: ATPContext, cfg: ModelConfig, params, h, positions,
     ``s`` positions): a weaker proposer, never a correctness issue —
     the trunk verifies every draft before it is kept.
     """
-    mctx = dataclasses.replace(ctx, seq_parallel=False, segment_plans=())
-    mp = params["mtp"]
-    emb_next = embed_tokens(mctx, cfg, params["embed"], next_tokens)
-    u = atp_boundary(
-        jnp.einsum("...k,kn->...n", h, mp["proj_h"])
-        + jnp.einsum("...k,kn->...n", emb_next, mp["proj_e"]), mctx.ax2)
-    if mctx.ax1 is not None:  # back to [.., h/d2] block I/O spec
-        u = lax.all_gather(u, mctx.ax1, axis=-1, tiled=True)
-    u = shard_slice(u, mctx.index2(), mctx.d2, dim=-1) if mctx.ax2 is not None else u
-    plan = L.make_attn_plan(mctx, cfg.num_heads, cfg.num_kv_heads)
-    u, _, _ = _apply_block("mla_dense" if cfg.mla else "dense",
-                           mctx, cfg, mp["block"], u, positions, plan, 0, None)
-    u = L.norm(mctx, cfg, u, mp["norm"])
-    return lm_logits(mctx, cfg, params, u)
+    with jax.named_scope("shell:mtp"):
+        mctx = dataclasses.replace(ctx, seq_parallel=False, segment_plans=())
+        mp = params["mtp"]
+        emb_next = embed_tokens(mctx, cfg, params["embed"], next_tokens)
+        u = atp_boundary(
+            jnp.einsum("...k,kn->...n", h, mp["proj_h"])
+            + jnp.einsum("...k,kn->...n", emb_next, mp["proj_e"]), mctx.ax2)
+        if mctx.ax1 is not None:  # back to [.., h/d2] block I/O spec
+            u = lax.all_gather(u, mctx.ax1, axis=-1, tiled=True)
+        u = (shard_slice(u, mctx.index2(), mctx.d2, dim=-1)
+             if mctx.ax2 is not None else u)
+        plan = L.make_attn_plan(mctx, cfg.num_heads, cfg.num_kv_heads)
+        u, _, _ = _apply_block("mla_dense" if cfg.mla else "dense",
+                               mctx, cfg, mp["block"], u, positions, plan,
+                               0, None)
+        u = L.norm(mctx, cfg, u, mp["norm"])
+        return lm_logits(mctx, cfg, params, u)

@@ -22,7 +22,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.atp import ATPContext, atp_boundary, atp_linear, shard_slice
+from repro.core.atp import (ATPContext, atp_boundary, atp_linear, grad_sync,
+                            shard_slice)
 from repro.models import layers as L
 
 
@@ -192,17 +193,26 @@ def mamba_block(ctx: ATPContext, cfg: ModelConfig, p, x, state=None):
     z = shard_slice(z, i2, ctx.d2, dim=-1)              # [b, s, d_inner/n]
     xin = shard_slice(xin, i2, ctx.d2, dim=-1)
 
-    # B/C/dt: replicated output via psum(ax2)
-    bcdt = atp_boundary(jnp.einsum("...k,kn->...n", h_in, p["w_bcdt"]), ctx.ax2)
+    # B/C/dt: replicated output via psum(ax2).  w_bcdt's storage is
+    # ax1-replicated (P(ax2, None)) while its cotangent — local heads'
+    # B/C/dt use, ax2-completed by the boundary transpose — stays
+    # ax1-partial, so its grad needs the ax1 barrier; the replicated
+    # per-head leaves (dt_bias/conv/A_log/D/gn) are shard_slice'd to the
+    # flat-rank head block, so their grads assemble over the whole group.
+    bcdt = atp_boundary(jnp.einsum("...k,kn->...n", h_in,
+                                   grad_sync(ctx, p["w_bcdt"], ctx.ax1)),
+                        ctx.ax2)
     B = bcdt[..., : sc.d_state]
     C = bcdt[..., sc.d_state: 2 * sc.d_state]
     dt_all = bcdt[..., 2 * sc.d_state:]                 # [b, s, nheads]
     dt = shard_slice(dt_all, flat, n, dim=-1)           # [b, s, nh_loc]
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + shard_slice(p["dt_bias"], flat, n, 0))
+    dt_bias = grad_sync(ctx, p["dt_bias"], ctx.tp_axes)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + shard_slice(dt_bias, flat, n, 0))
 
     # causal conv on (xin | B | C); xin channels are this rank's slice
-    conv_x = shard_slice(p["conv"][:, : d_inner], flat, n, dim=1)
-    conv_bc = p["conv"][:, d_inner:]
+    conv = grad_sync(ctx, p["conv"], ctx.tp_axes)
+    conv_x = shard_slice(conv[:, : d_inner], flat, n, dim=1)
+    conv_bc = conv[:, d_inner:]
     cs_x = state["conv_x"] if state is not None else None
     cs_bc = state["conv_bc"] if state is not None else None
     xin_c, ns_x = _causal_conv(xin, conv_x, cs_x)
@@ -212,8 +222,8 @@ def mamba_block(ctx: ATPContext, cfg: ModelConfig, p, x, state=None):
     B_c, C_c = jnp.split(bc_c, 2, axis=-1)
 
     xh = xin_c.reshape(xin_c.shape[0], xin_c.shape[1], nh_loc, hd)
-    A_log = shard_slice(p["A_log"], flat, n, 0)
-    D = shard_slice(p["D"], flat, n, 0)
+    A_log = shard_slice(grad_sync(ctx, p["A_log"], ctx.tp_axes), flat, n, 0)
+    D = shard_slice(grad_sync(ctx, p["D"], ctx.tp_axes), flat, n, 0)
 
     if state is None:
         y, _ = ssd_chunked(xh, dt, A_log, B_c, C_c, D, sc.chunk)
@@ -227,7 +237,7 @@ def mamba_block(ctx: ATPContext, cfg: ModelConfig, p, x, state=None):
         new_state = {"conv_x": ns_x, "conv_bc": ns_bc,
                      "ssd": ssd_new.astype(state["ssd"].dtype)}
 
-    gn = shard_slice(p["gn"], flat, n, 0).reshape(nh_loc, hd)
+    gn = shard_slice(grad_sync(ctx, p["gn"], ctx.tp_axes), flat, n, 0).reshape(nh_loc, hd)
     y = _group_rmsnorm(y, gn)
     y = y.reshape(y.shape[0], y.shape[1], nh_loc * hd)
     y = y * jax.nn.silu(z)

@@ -22,7 +22,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.atp import ATPContext, atp_boundary, atp_linear, shard_slice
+from repro.core.atp import (ATPContext, atp_boundary, atp_linear, grad_sync,
+                            shard_slice)
 from repro.models import layers as L
 from repro.models import paging
 
@@ -84,21 +85,29 @@ def mla_block(
 ):
     """Returns ([b, s, h/d2], new_cache)."""
     m = cfg.mla
-    H = cfg.num_heads
     qk_nope, qk_rope, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
     h_loc = _heads_per_rank(ctx, cfg)
     i2 = ctx.index2()
 
-    # ---- latents (replicated): rows of w_d* are ax2-sharded -> psum(ax2)
-    cq = atp_boundary(jnp.einsum("...k,kn->...n", x, p["w_dq"]), ctx.ax2)
-    cq = _latent_norm(cq, p["q_ln"], cfg.norm_eps)
-    ckv_full = atp_boundary(jnp.einsum("...k,kn->...n", x, p["w_dkv"]), ctx.ax2)
-    ckv = _latent_norm(ckv_full[..., : m.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    # ---- latents (replicated): rows of w_d* are ax2-sharded -> psum(ax2).
+    # Grad barriers: the latents' cotangent flows back from the rank-local
+    # (ax1-col x ax2-subslice) head shard, so the replicated latent-norm
+    # gains are tp-partial; the down-proj weights (ax1-replicated storage,
+    # ax2-completed ct via the boundary transpose) are ax1-partial.
+    cq = atp_boundary(jnp.einsum("...k,kn->...n", x,
+                                 grad_sync(ctx, p["w_dq"], ctx.ax1)), ctx.ax2)
+    cq = _latent_norm(cq, grad_sync(ctx, p["q_ln"], ctx.tp_axes), cfg.norm_eps)
+    ckv_full = atp_boundary(jnp.einsum("...k,kn->...n", x,
+                                       grad_sync(ctx, p["w_dkv"], ctx.ax1)),
+                            ctx.ax2)
+    ckv = _latent_norm(ckv_full[..., : m.kv_lora_rank],
+                       grad_sync(ctx, p["kv_ln"], ctx.tp_axes), cfg.norm_eps)
     k_rope = ckv_full[..., m.kv_lora_rank:]             # [b, s, rope_dim]
 
     # ---- q up-projection: heads over ax1, extra d2 factor sliced from ax1's
-    # block (w_uq columns are ax1-sharded; slice the ax2 sub-block locally)
-    uq = jnp.einsum("...k,kn->...n", cq, p["w_uq"])     # [b, s, H*(qk)/d1]
+    # block (w_uq columns are ax1-sharded; slice the ax2 sub-block locally —
+    # the slice makes the ax2-replicated up-proj grads ax2-partial)
+    uq = jnp.einsum("...k,kn->...n", cq, grad_sync(ctx, p["w_uq"], ctx.ax2))
     uq = shard_slice(uq, i2, ctx.d2, dim=-1)            # [b, s, H*(qk)/n]
     q = uq.reshape(uq.shape[:-1] + (h_loc, qk_nope + qk_rope))
     q_nope, q_pe = q[..., :qk_nope], q[..., qk_nope:]
@@ -107,7 +116,7 @@ def mla_block(
     new_cache = None
     if cache is None:
         # ---- train/prefill: expand latent to per-head k/v
-        ukv = jnp.einsum("...k,kn->...n", ckv, p["w_ukv"])
+        ukv = jnp.einsum("...k,kn->...n", ckv, grad_sync(ctx, p["w_ukv"], ctx.ax2))
         ukv = shard_slice(ukv, i2, ctx.d2, dim=-1)
         kv = ukv.reshape(ukv.shape[:-1] + (h_loc, qk_nope + dv))
         k_nope, v = kv[..., :qk_nope], kv[..., qk_nope:]

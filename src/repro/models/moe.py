@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.core.atp import ATPContext, atp_boundary, shard_slice
+from repro.core.atp import ATPContext, grad_sync, shard_slice
 from repro.models import layers as L
 
 
@@ -95,7 +95,10 @@ def moe_block(ctx: ATPContext, cfg: ModelConfig, p, x):
         tokens = shard_slice(t, ctx.index1(), ctx.d1, dim=0)         # [T/n, h]
 
     # ---- 2. route (router weight replicated; logits from full-h tokens)
-    logits = (tokens.astype(jnp.float32) @ p["router"])       # [T/n, E]
+    # each rank routes its own token shard (or combines only its local
+    # experts), so the router's cotangent is TP-partial: sync its grad
+    router = grad_sync(ctx, p["router"], ctx.tp_axes)
+    logits = (tokens.astype(jnp.float32) @ router)            # [T/n, E]
     gates = jax.nn.softmax(logits, axis=-1)
     topv, topi = lax.top_k(gates, mc.top_k)                   # [T/n, k]
     topv = topv / (jnp.sum(topv, axis=-1, keepdims=True) + 1e-9)

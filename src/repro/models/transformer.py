@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.core.atp import ATPContext, atp_boundary, atp_linear, shard_slice
+from repro.core.atp import (ATPContext, atp_boundary, atp_linear, grad_sync,
+                            shard_slice)
 from repro.models import layers as L
 from repro.models import paging
 
@@ -120,15 +121,18 @@ def attn_block(
     qd, kvd = cfg.q_dim // d1, cfg.kv_dim // d1
     qp, kp, vp = (qkv[..., :qd], qkv[..., qd:qd + kvd], qkv[..., qd + kvd:])
     if cfg.qkv_bias:
-        qp = qp + p["bq"]
-        kp = kp + p["bk"]
-        vp = vp + p["bv"]
+        # bias shards are ax2-replicated (P(ax1)) but consumed by the
+        # rank-local head/seq split below, so their cotangent is ax2-partial
+        qp = qp + grad_sync(ctx, p["bq"], ctx.ax2)
+        kp = kp + grad_sync(ctx, p["bk"], ctx.ax2)
+        vp = vp + grad_sync(ctx, p["bv"], ctx.ax2)
 
     q, k, v, bid, rid = L.split_qkv_heads(ctx, cfg, qp, kp, vp, plan)
 
     if cfg.qk_norm:
-        q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
-        k = _qk_norm(k, p["k_norm"], cfg.norm_eps)
+        # per-head norm gains see only the rank-local heads' cotangent
+        q = _qk_norm(q, grad_sync(ctx, p["q_norm"], ctx.tp_axes), cfg.norm_eps)
+        k = _qk_norm(k, grad_sync(ctx, p["k_norm"], ctx.tp_axes), cfg.norm_eps)
 
     decode = cache is not None
     sq_offset = 0
@@ -188,7 +192,7 @@ def attn_block(
 
 def dense_block_params(key, cfg: ModelConfig, dtype, d_ff: int | None = None):
     k1, k2, k3, k4 = jax.random.split(key, 4)
-    d2_local = 1  # norm params are created at GLOBAL size; sharded by spec
+    # norm params are created at GLOBAL size; sharded by spec
     p = {
         "ln_attn": L.norm_params(cfg, cfg.d_model),
         "attn": attn_params(k1, cfg, dtype),
@@ -198,7 +202,6 @@ def dense_block_params(key, cfg: ModelConfig, dtype, d_ff: int | None = None):
     if cfg.post_block_norms:
         p["ln_post_attn"] = L.norm_params(cfg, cfg.d_model)
         p["ln_post_mlp"] = L.norm_params(cfg, cfg.d_model)
-    del d2_local
     return p
 
 

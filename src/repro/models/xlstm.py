@@ -36,7 +36,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.atp import ATPContext, atp_boundary, atp_linear, shard_slice
+from repro.core.atp import (ATPContext, atp_boundary, grad_sync,
+                            shard_slice, vma_rewrite_active)
 from repro.models import layers as L
 
 
@@ -173,7 +174,6 @@ def mlstm_block(ctx: ATPContext, cfg: ModelConfig, p, x, state=None):
     state (decode): dict(conv=[b,k-1,d_inner/n], C=[b,1,nh_loc,dk,dv_loc+1])."""
     d_inner, nh, dk, dv = mlstm_dims(cfg)
     g, r = mlstm_plan(ctx, cfg)
-    n = ctx.tp
     flat = ctx.tp_index()
     hb = flat // r       # head block (nh_loc == 1 when r > 1)
     nh_loc = nh // g
@@ -204,9 +204,14 @@ def mlstm_block(ctx: ATPContext, cfg: ModelConfig, p, x, state=None):
         qk = lax.all_gather(qk, ctx.ax1, axis=-1, tiled=True)
     qf = qk[..., : nh * dk].reshape(*qk.shape[:2], nh, dk)
     kf = qk[..., nh * dk:].reshape(*qk.shape[:2], nh, dk)
-    # i/f gates: replicated-output projection (tiny)
-    if_pre = atp_boundary(jnp.einsum("...k,kn->...n", h_in, p["w_if"]),
-                          ctx.ax2).astype(jnp.float32) + p["b_if"]
+    # i/f gates: replicated-output projection (tiny).  The gate cotangent
+    # is rank-head-partial: w_if (ax1-replicated storage) needs the ax1
+    # barrier after the boundary transpose's psum(ax2); b_if (fully
+    # replicated, added past the boundary) needs the whole flat group.
+    if_pre = atp_boundary(jnp.einsum("...k,kn->...n", h_in,
+                                     grad_sync(ctx, p["w_if"], ctx.ax1)),
+                          ctx.ax2).astype(jnp.float32) \
+        + grad_sync(ctx, p["b_if"], ctx.tp_axes)
     li_all = jax.nn.log_sigmoid(if_pre[..., :nh])
     lf_all = jax.nn.log_sigmoid(if_pre[..., nh:])
     q = lax.dynamic_slice_in_dim(qf, hb * nh_loc, nh_loc, axis=2)
@@ -288,9 +293,14 @@ def slstm_block(ctx: ATPContext, cfg: ModelConfig, p, x, state=None):
     xg = x
     if ctx.ax2 is not None:  # need full h for the recurrent mixing
         xg = lax.all_gather(x, ctx.ax2, axis=-1, tiled=True)
-    h_in = _rms_full(xg, p["ln"], cfg.norm_eps)
-    r_gates = p["r_gates"]
-    pre = h_in.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]   # [b,s,4h]
+    # All sLSTM params are fully replicated (P()) while the block's
+    # cotangent is rank-partial over the whole flat group (residual ct is
+    # ax1-partial by the row-boundary convention and ax2-chunked by the
+    # exit shard_slice), so every param grad needs the full-group barrier.
+    h_in = _rms_full(xg, grad_sync(ctx, p["ln"], ctx.tp_axes), cfg.norm_eps)
+    r_gates = grad_sync(ctx, p["r_gates"], ctx.tp_axes)
+    pre = h_in.astype(jnp.float32) @ grad_sync(ctx, p["w_gates"], ctx.tp_axes) \
+        + grad_sync(ctx, p["b_gates"], ctx.tp_axes)                # [b,s,4h]
 
     def step(carry, u):
         c, n, hs = carry                                # [b, nh, dh] each
@@ -320,12 +330,21 @@ def slstm_block(ctx: ATPContext, cfg: ModelConfig, p, x, state=None):
     # §Perf: cotangent barrier — psum the incoming (Partial-over-ax1)
     # cotangent ONCE here, so the scan transpose runs fully invariant and
     # does NOT emit a psum of d(r_gates) per TIME STEP (the baseline's
-    # dominant collective: 4096 all-reduces per sLSTM block).
-    y = _ct_psum_barrier(y, ctx.ax1)
+    # dominant collective: 4096 all-reduces per sLSTM block).  vma builds
+    # only: there the rewrite would otherwise insert those per-step psums
+    # and the barrier's early reduction is absorbed by the invariant type.
+    # On legacy jax no psums are auto-inserted, so a mid-chain psum would
+    # BREAK the rank-partial cotangent convention (over-counting every
+    # grad upstream of it); the per-param grad_sync barriers handle the
+    # reduction instead, once per leaf.
+    if vma_rewrite_active(ctx):
+        y = _ct_psum_barrier(y, ctx.ax1)
     new_state = {"c": c, "n": n, "h": hs} if state is not None else None
 
-    y = _rms_full(y, p["gn"], cfg.norm_eps).astype(x.dtype)
-    y = jax.nn.gelu(y @ p["w_ff1"], approximate=True) @ p["w_ff2"]
+    y = _rms_full(y, grad_sync(ctx, p["gn"], ctx.tp_axes),
+                  cfg.norm_eps).astype(x.dtype)
+    y = jax.nn.gelu(y @ grad_sync(ctx, p["w_ff1"], ctx.tp_axes),
+                    approximate=True) @ grad_sync(ctx, p["w_ff2"], ctx.tp_axes)
     if ctx.ax2 is not None:  # back to the block I/O feature shard
         y = shard_slice(y, ctx.index2(), ctx.d2, dim=-1)
     return x + y, new_state

@@ -16,8 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -324,7 +322,6 @@ def apply_adamw(
 
     Returns (new_params, new_opt_state, metrics)."""
     dp_axes = ctx.dp_axes
-    dp = ctx.dp
     step = opt_state["step"]
     lr = lr_at(cfg, step)
 

@@ -20,7 +20,6 @@ import time
 from typing import Any, Callable
 
 import jax
-import numpy as np
 
 from repro.checkpoint import manager as ckpt
 from repro.data.pipeline import TokenSource

@@ -19,6 +19,44 @@ def test_shape_bytes():
     assert shape_bytes("pred[]") == 1
 
 
+def test_shape_bytes_quantized_dtypes():
+    assert shape_bytes("f8e5m2[16]") == 16
+    assert shape_bytes("f8e4m3fn[16]") == 16
+    assert shape_bytes("s4[16]") == 8     # two nibbles per byte
+    assert shape_bytes("u4[7]") == 4      # packed: ceil(7/2)
+
+
+_ASYNC_HLO = """\
+HloModule async
+
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %ars = f32[8,16]{1,0} all-reduce-start(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ard = f32[8,16]{1,0} all-reduce-done(%ars)
+  %ags = (f32[8,16]{1,0}, f32[32,16]{1,0}) all-gather-start(%ard), replica_groups={{0,1,2,3}}, dimensions={0}
+  %agd = f32[32,16]{1,0} all-gather-done(%ags)
+  %rss = (f32[32,16]{1,0}, f32[8,16]{1,0}) reduce-scatter-start(%agd), replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add
+  %rsd = f32[8,16]{1,0} reduce-scatter-done(%rss)
+  %a2a = f32[8,16]{1,0} all-to-all-start(%rsd), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2d = f32[8,16]{1,0} all-to-all-done(%a2a)
+  %cps = (f32[8,16]{1,0}, f32[8,16]{1,0}, u32[], u32[]) collective-permute-start(%a2d), source_target_pairs={{0,1},{1,2}}
+  ROOT %cpd = f32[8,16]{1,0} collective-permute-done(%cps)
+}
+"""
+
+
+def test_async_pairs_counted_once_uniformly():
+    """*-start carries the payload; *-done contributes nothing; async
+    tuple results (operand, dest, contexts) are not double-counted."""
+    got = collective_bytes(_ASYNC_HLO)["per_op_bytes"]
+    buf = 8 * 16 * 4
+    assert got["all-reduce"] == buf
+    assert got["all-gather"] == 4 * buf          # result on each device
+    assert got["reduce-scatter"] == 4 * buf      # shard x group = operand
+    assert got["all-to-all"] == buf
+    assert got["collective-permute"] == buf
+
+
 def _compile(f, in_specs, out_specs, *args, mesh=None):
     mesh = mesh or compat.make_mesh((4,), ("m",))
     return jax.jit(shard_map(f, mesh=mesh, in_specs=in_specs,
