@@ -8,7 +8,9 @@ XLA_DEVICES ?= 8
 # elastic-restart gate (failure -> shrink -> recalibrate -> re-search ->
 # resharded restore -> loss continuity), the serving gate (decode-
 # searched plan -> paged continuous batching -> wave-loop token parity),
-# the plan-conformance lint (every searched plan's built step must emit
+# the chaos gate (scripted fault scenarios: membership quorum, deadline
+# budget, server degradation, remesh parity, torn checkpoints), the
+# plan-conformance lint (every searched plan's built step must emit
 # exactly the collectives the cost model priced) and the bench-baseline
 # replay (checked-in BENCH_*.json metrics must not regress >10%).
 .PHONY: test
@@ -20,6 +22,7 @@ test:
 	$(MAKE) segment-smoke
 	$(MAKE) elastic-smoke
 	$(MAKE) serve-smoke
+	$(MAKE) chaos-smoke
 	$(MAKE) lint-plans
 	$(MAKE) bench-regress
 
@@ -51,6 +54,16 @@ elastic-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 	$(PYTHON) -m repro.launch.elastic_smoke
+
+# Chaos gate: five seeded fault scenarios through the production hooks
+# (membership-elastic shrink under lease delay, deadline-budgeted
+# recalibration, server degradation ladder, decode-mesh remesh parity,
+# torn checkpoint writes); writes BENCH_chaos.json for bench-regress.
+.PHONY: chaos-smoke
+chaos-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=$(XLA_DEVICES) \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	$(PYTHON) -m repro.launch.chaos_smoke
 
 .PHONY: serve-smoke
 serve-smoke:

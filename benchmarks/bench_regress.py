@@ -50,6 +50,23 @@ TRACKED = {
         ("summary.greedy_parity", "flag"),
         ("summary.search_flips_mesh", "flag"),
     ],
+    "BENCH_chaos.json": [
+        # recovery invariants from the scripted chaos scenarios
+        # (launch.chaos_smoke): any flip means a degradation-ladder or
+        # membership regression
+        ("loss_continuity", "flag"),
+        ("single_replanner", "flag"),
+        ("budget_respected", "flag"),
+        ("pool_drained", "flag"),
+        ("remesh_parity", "flag"),
+        ("torn_ckpt_recovered", "flag"),
+        # deterministic recovery metrics: sim-seconds from failure to the
+        # first quorum commit, and the served/expired split under the
+        # scripted backpressure window
+        ("recovery_sim_s", "drift"),
+        ("served_fraction", "ratio"),
+        ("expired_request_rate", "drift"),
+    ],
     "BENCH_analysis.json": [
         ("summary.conformant", "flag"),
     ] + [

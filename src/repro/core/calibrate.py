@@ -58,6 +58,16 @@ class CalibEntry:
     launch overhead against the alpha_s term.  A slow measured chunk path
     (either number) still steers the search back to chunks=1.
 
+    ``provenance`` records where THIS entry's numbers came from:
+    ``"measured"`` (on-mesh micro-benchmark), ``"carried"`` (copied from
+    the pre-shrink table when a recovery deadline ran out before this
+    factorization's turn), or ``"analytic"`` (Eq. 3/4 model values — the
+    budget-exhausted fallback when there is nothing to carry).  Deadline-
+    budgeted recovery (``recalibrate_surviving(deadline_s=...)``) is the
+    writer; ``CalibrationTable.provenance_counts`` and
+    ``ParallelPlan.describe`` surface it so a partially-calibrated
+    recovery is visible in the artifact.
+
     b1_q / b2_q are the *quantized-collective* algorithm bandwidths: the
     same micro-benchmark run over the int8 wire
     (``overlap.quant_psum``), in the WIRE-byte convention — a quantized
@@ -79,6 +89,7 @@ class CalibEntry:
     launch_s: float | None = None
     b1_q: float | None = None
     b2_q: float | None = None
+    provenance: str = "measured"
 
     @property
     def boundary_mode(self) -> str | None:
@@ -101,7 +112,8 @@ class CalibEntry:
                               else [list(t) for t in self.chunk_eff]),
                 "launch_s": self.launch_s,
                 "b1_q": (None if self.b1_q is None else _enc_inf(self.b1_q)),
-                "b2_q": (None if self.b2_q is None else _enc_inf(self.b2_q))}
+                "b2_q": (None if self.b2_q is None else _enc_inf(self.b2_q)),
+                "provenance": self.provenance}
 
     @staticmethod
     def from_dict(d: Mapping) -> "CalibEntry":
@@ -115,7 +127,10 @@ class CalibEntry:
                               for c, e1, e2 in ce)),
                           launch_s=d.get("launch_s"),
                           b1_q=(None if b1_q is None else _dec_inf(b1_q)),
-                          b2_q=(None if b2_q is None else _dec_inf(b2_q)))
+                          b2_q=(None if b2_q is None else _dec_inf(b2_q)),
+                          # absent in pre-v5 files: every entry was a
+                          # real on-mesh measurement back then
+                          provenance=d.get("provenance", "measured"))
 
 
 def _enc_inf(v: float):
@@ -177,6 +192,17 @@ class CalibrationTable:
             return None
         return (e.b1_q if e.b1_q is not None else e.b1,
                 e.b2_q if e.b2_q is not None else e.b2)
+
+    def provenance_counts(self) -> dict[str, int]:
+        """Entry counts by provenance (measured / carried / analytic) —
+        how calibrated this table actually is.  A deadline-budgeted
+        recovery that ran out of time shows up here (and in
+        ``ParallelPlan.describe``) instead of masquerading as fully
+        measured."""
+        out: dict[str, int] = {}
+        for _, e in self.entries:
+            out[e.provenance] = out.get(e.provenance, 0) + 1
+        return out
 
     def covers_tp(self, tp_degree: int) -> bool:
         """True if any entry measures a factorization of ``tp_degree``.
@@ -248,23 +274,66 @@ class CalibrationTable:
 # ---------------------------------------------------------------------------
 
 
+#: samples above this multiple of the raw median are treated as outliers
+_TRIM_FACTOR = 2.5
+
+
+def robust_seconds(samples) -> float:
+    """Median-of-k with high-side outlier trimming.
+
+    The pre-fix statistic was best-of-N (min) — robust against slow
+    outliers but maximally credulous of FAST ones: a single spuriously
+    quick sample (clock glitch, coalesced dispatch) becomes the measured
+    time, inflates the derived bandwidth, and can flip ``plan_search``
+    to a mesh the fabric cannot actually sustain (the ic1 pin in
+    tests/test_robustness.py).  The median is robust on both sides as
+    long as fewer than half the samples are outliers; samples more than
+    ``_TRIM_FACTOR``x the raw median (stragglers: GC pause, scheduler
+    preemption) are dropped first so they cannot drag the median of a
+    small k either.
+    """
+    xs = sorted(float(s) for s in samples)
+    if not xs:
+        raise ValueError("no timing samples")
+    med = xs[len(xs) // 2]
+    kept = [x for x in xs if x <= _TRIM_FACTOR * med] or xs
+    n = len(kept)
+    return kept[n // 2] if n % 2 else 0.5 * (kept[n // 2 - 1] + kept[n // 2])
+
+
 def _time_fn(fn, *args, repeats: int = 3,
-             timer: Callable[[], float] = time.perf_counter) -> float:
-    """Best-of-N wall time of a blocking call (min filters scheduler noise)."""
+             timer: Callable[[], float] = time.perf_counter,
+             budget_s: float | None = None) -> float:
+    """Robust wall time of a blocking call: up to ``repeats`` samples,
+    stopping early once ``budget_s`` is spent (always at least one —
+    a deadline bounds the repeat count k, never the truth of a sample),
+    reduced by :func:`robust_seconds`."""
     import jax
 
     jax.block_until_ready(fn(*args))  # compile + warm up
-    best = math.inf
+    t_start = timer()
+    samples = []
     for _ in range(max(1, repeats)):
         t0 = timer()
         jax.block_until_ready(fn(*args))
-        best = min(best, timer() - t0)
-    return best
+        samples.append(timer() - t0)
+        if budget_s is not None and timer() - t_start >= budget_s:
+            break
+    return robust_seconds(samples)
 
 
 def _measure_factorization(d1: int, d2: int, payload_bytes: int,
-                           repeats: int, devices=None) -> CalibEntry:
-    """All-reduce timing over each TP mesh dim + psum-vs-ring boundary."""
+                           repeats: int, devices=None,
+                           budget_s: float | None = None,
+                           timer: Callable[[], float] = time.perf_counter
+                           ) -> CalibEntry:
+    """All-reduce timing over each TP mesh dim + psum-vs-ring boundary.
+
+    ``budget_s`` (deadline-budgeted recovery) caps the wall time spent
+    here: every inner timing loop sees the remaining budget and stops
+    sampling once it is gone — k shrinks before coverage does, and the
+    overrun is bounded by one sample per measurement kind.
+    """
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -279,6 +348,12 @@ def _measure_factorization(d1: int, d2: int, payload_bytes: int,
     mesh = topo.build(devices[: topo.size])
     ax1, ax2 = tp_axis_names(topo)
     elems = max(1, payload_bytes // 4)
+    t_begin = timer()
+
+    def rem() -> float | None:
+        if budget_s is None:
+            return None
+        return max(0.0, budget_s - (timer() - t_begin))
 
     def time_allreduce(axis: str, d: int, ring: bool = False,
                        n_elems: int | None = None,
@@ -292,7 +367,7 @@ def _measure_factorization(d1: int, d2: int, payload_bytes: int,
             red = lambda v: lax.psum(v, axis)  # noqa: E731
         f = jax.jit(shard_map(red, mesh=mesh, in_specs=P(axis),
                               out_specs=P(axis), check_vma=True))
-        return _time_fn(f, x, repeats=repeats)
+        return _time_fn(f, x, repeats=repeats, budget_s=rem())
 
     def quant_bw(axis: str | None, d: int) -> float | None:
         """Quantized-collective bandwidth in the WIRE-byte convention:
@@ -325,7 +400,7 @@ def _measure_factorization(d1: int, d2: int, payload_bytes: int,
 
         f = jax.jit(shard_map(red, mesh=mesh, in_specs=P(axis),
                               out_specs=P(axis), check_vma=True))
-        return _time_fn(f, x, repeats=repeats)
+        return _time_fn(f, x, repeats=repeats, budget_s=rem())
 
     def launch_axis(axis: str | None, d: int,
                     whole: float | None) -> float | None:
@@ -450,6 +525,51 @@ def surviving_tp(tp_degree: int, n_devices: int) -> int:
     return tp
 
 
+def analytic_entry(matrix: HierarchicalCommMatrix | None, d1: int,
+                   d2: int) -> CalibEntry:
+    """Eq. 3/4 model bandwidths lifted into a ``CalibEntry`` (provenance
+    ``"analytic"``) — the budget-exhausted fallback when a recovery
+    deadline leaves a factorization unmeasured and the carried table has
+    nothing for it.  Only (b1, b2) are filled: the model has no opinion
+    on boundary-mode timings or chunk efficiencies, and pretending it
+    did would defeat the provenance record."""
+    if matrix is None:
+        return CalibEntry(b1=math.inf, b2=math.inf, provenance="analytic")
+    from repro.core.cost_model import axis_algorithm_bw
+
+    _, _, b1, b2 = axis_algorithm_bw(matrix, d1, d2)
+    return CalibEntry(b1=b1, b2=b2, provenance="analytic")
+
+
+def sensitivity_order(keys, matrix: HierarchicalCommMatrix | None, *,
+                      model=None, batch: int | None = None,
+                      seq: int | None = None) -> list[tuple[int, int]]:
+    """Order factorization keys by descending cost-model sensitivity
+    (``cost_model.factorization_sensitivity``): the entries whose
+    bandwidth numbers move the strategy ranking most get measured first,
+    so a recovery deadline degrades the *least important* entries to
+    carried/analytic.  Without a matrix the natural order stands (there
+    is no model to rank by); without a workload a generic dense block is
+    assumed — the ordering across factorizations is dominated by the
+    fabric's bandwidths, not the exact layer shape."""
+    keys = list(keys)
+    if matrix is None or len(keys) < 2:
+        return keys
+    from repro.core.cost_model import (LayerCommProfile, SegmentWorkload,
+                                       factorization_sensitivity,
+                                       segment_workloads)
+
+    if model is not None:
+        workloads = segment_workloads(model)
+    else:
+        workloads = (SegmentWorkload(kind="dense", layers=1,
+                                     profile=LayerCommProfile.gpt(4096)),)
+    b = batch if batch is not None else 8
+    s = seq if seq is not None else 512
+    return sorted(keys, key=lambda k: (-factorization_sensitivity(
+        matrix, k[0], k[1], workloads=workloads, batch=b, seq=s), k))
+
+
 def recalibrate_surviving(
     plan,
     devices=None,
@@ -457,6 +577,11 @@ def recalibrate_surviving(
     payload_kb: int = 256,
     repeats: int = 3,
     measure: Callable[[int, int], CalibEntry] | None = None,
+    deadline_s: float | None = None,
+    model=None,
+    batch: int | None = None,
+    seq: int | None = None,
+    timer: Callable[[], float] = time.perf_counter,
 ):
     """Re-measure a plan's calibration on the surviving mesh (paper §5.3).
 
@@ -474,10 +599,26 @@ def recalibrate_surviving(
     degree (and the merged table covers its factorizations) — the
     re-planned artifact is not re-tagged stale.
 
+    **Deadline budget** (``deadline_s``): recovery time is downtime, so
+    instead of fixed repeat counts the micro-benchmarks spend a wall-
+    clock budget — factorizations are visited in descending cost-model
+    sensitivity (``sensitivity_order``, using ``model``/``batch``/``seq``
+    when the caller knows the workload), each measurement's repeat count
+    k shrinks as the budget drains (``_time_fn(budget_s=...)``), and once
+    the budget is gone the remaining factorizations fall back to the
+    carried table's entry (provenance ``"carried"``) or the analytic
+    model (``"analytic"``).  The per-entry provenance rides the table,
+    the plan's provenance records the budget spend, and the
+    ``recalibrated tp=`` tag — what lets ``replan_elastic`` skip the
+    stale tag — is only written when at least one entry was actually
+    measured: a fully-exhausted budget yields a usable but honestly
+    stale-tagged plan.
+
     ``plan`` is any ParallelPlan-shaped object (duck-typed to avoid a
     module cycle: plan.py imports this module).  ``measure`` injects the
     per-factorization benchmark (tests, simulators); ``devices`` is the
-    surviving pool (default: all attached).
+    surviving pool (default: all attached); ``timer`` injects the budget
+    clock (tests script deterministic deadlines with it).
     """
     import jax
 
@@ -489,12 +630,68 @@ def recalibrate_surviving(
     if plan.topology is not None:
         preset = comm_matrix.PRESETS.get(plan.topology)
         matrix = preset() if preset is not None else None
-    fresh = calibrate_mesh(tp, matrix, payload_kb=payload_kb,
-                           repeats=repeats, measure=measure, devices=devs)
+    keys = []
+    for d1, d2 in factorizations(tp):
+        if matrix is not None:
+            try:
+                matrix.axis_bandwidths(d1, d2)
+            except ValueError:
+                continue
+        if measure is None and d1 * d2 > len(devs):
+            continue
+        keys.append((d1, d2))
+    if deadline_s is not None:
+        keys = sensitivity_order(keys, matrix, model=model, batch=batch,
+                                 seq=seq)
+    t0 = timer()
+    entries = []
+    counts = {"measured": 0, "carried": 0, "analytic": 0}
+    # adaptive gate: once one factorization has been timed, a later one is
+    # only measured if the remaining budget covers what the last one cost
+    # — so the deadline is respected even through an injected ``measure``
+    # that cannot see the budget (the real path additionally threads
+    # budget_s down to every sampling loop).
+    last_cost = 0.0
+    for d1, d2 in keys:
+        remaining = (None if deadline_s is None
+                     else deadline_s - (timer() - t0))
+        if remaining is not None and (remaining <= 0.0
+                                      or remaining < last_cost):
+            old = (plan.calibration.get(d1, d2)
+                   if plan.calibration is not None else None)
+            e = (dataclasses.replace(old, provenance="carried")
+                 if old is not None else analytic_entry(matrix, d1, d2))
+        else:
+            t_meas = timer()
+            if measure is not None:
+                e = dataclasses.replace(measure(d1, d2),
+                                        provenance="measured")
+            else:
+                e = dataclasses.replace(
+                    _measure_factorization(d1, d2, payload_kb * 1024,
+                                           repeats, devs,
+                                           budget_s=remaining, timer=timer),
+                    provenance="measured")
+            last_cost = timer() - t_meas
+        counts[e.provenance] += 1
+        entries.append(((d1, d2), e))
+    entries.sort()
+    source = ("measured" if counts["measured"] == len(entries)
+              else "deadline-budgeted")
+    fresh = CalibrationTable(entries=tuple(entries), source=source)
     merged = fresh if plan.calibration is None \
         else plan.calibration.merged(fresh)
     prov = tuple(p for p in plan.provenance
                  if p != ("calibration", "stale"))
-    prov += (("calibration",
-              f"recalibrated tp={tp} on {len(devs)} devices"),)
+    if counts["measured"] > 0:
+        prov += (("calibration",
+                  f"recalibrated tp={tp} on {len(devs)} devices"),)
+    if deadline_s is not None:
+        spent = timer() - t0
+        # key "calibration" so replan_elastic's re-search carries it
+        prov += (("calibration",
+                  f"budget deadline_s={deadline_s:g} spent_s={spent:.3f} "
+                  f"measured={counts['measured']} "
+                  f"carried={counts['carried']} "
+                  f"analytic={counts['analytic']}"),)
     return plan.with_(calibration=merged, provenance=prov)

@@ -291,6 +291,36 @@ def t_comm(
     return StrategyCost(d1, d2, b1_raw, b2_raw, b1, b2, t)
 
 
+def factorization_sensitivity(
+    matrix: HierarchicalCommMatrix,
+    d1: int,
+    d2: int,
+    *,
+    workloads: tuple[SegmentWorkload, ...],
+    batch: int,
+    seq: int,
+    bytes_per_elem: int = 2,
+) -> float:
+    """Modelled step-seconds riding on this factorization's bandwidth
+    numbers: Eq. 2's comm time under the analytic (B1, B2), summed over
+    the model's segment workloads.
+
+    Because T is proportional to 1/B, the first-order |dT/d ln B| *is*
+    the comm time itself — so this one number ranks how much the
+    strategy ranking moves if the analytic bandwidths are wrong for
+    this (d1, d2).  Deadline-budgeted recovery
+    (``calibrate.recalibrate_surviving(deadline_s=...)``) measures
+    factorizations in descending sensitivity: §5.3's IC1 mis-ranking is
+    exactly a high-sensitivity entry being wrong, and those are the
+    entries a shrinking budget must spend its micro-benchmarks on
+    first.
+    """
+    return sum(
+        t_comm(matrix, d1, d2, layers=w.layers, batch=batch, seq=seq,
+               profile=w.profile, bytes_per_elem=bytes_per_elem).t_comm
+        for w in workloads)
+
+
 # ---------------------------------------------------------------------------
 # Overlap-aware extension (docs/overlap.md).
 # ---------------------------------------------------------------------------

@@ -207,6 +207,16 @@ class ParallelPlan:
             out += " " + self.decode.describe()
         if self.calibration_stale:
             out += " [calibration:stale]"
+        if self.calibration is not None:
+            counts = self.calibration.provenance_counts()
+            budgeted = any(k == "calibration" and v.startswith("budget ")
+                           for k, v in self.provenance)
+            # only worth a line when recovery actually degraded something
+            # (or a deadline budget ran): all-measured tables are the norm
+            if budgeted or any(p != "measured" for p in counts):
+                out += (" calib["
+                        + " ".join(f"{k}={counts[k]}"
+                                   for k in sorted(counts)) + "]")
         return out
 
     def with_(self, **changes) -> "ParallelPlan":

@@ -1,0 +1,389 @@
+"""Chaos smoke gate (``make chaos-smoke``): scripted faults, end to end.
+
+Five seeded scenarios drive the fault-domain runtime through its
+recovery invariants and exit non-zero on any violation:
+
+  S1  membership-elastic: device loss kills 2 of 4 simulated hosts while
+      a lease-delay fault makes a survivor look suspect — the loop must
+      converge on ONE quorum-committed view per epoch (no double-reshard
+      from concurrent detectors), re-plan once on the agreed 4-device
+      pool, and replay to loss continuity vs an uninterrupted run.
+  S2  deadline-budgeted recalibration under a scripted clock: the spend
+      must stay within ``deadline_s``, most-sensitive factorizations
+      measured first, the rest degraded to carried/analytic entries with
+      provenance recorded in the plan artifact.
+  S3  server degradation: a backpressure window + per-request deadlines
+      walk the full ladder (admission backoff -> skipped beats ->
+      expiry) and the page pool must fully drain.
+  S4  decode-mesh shrink: ``remesh_paged_server`` replays in-flight
+      prefill on the survivors with greedy-token parity for every
+      request.
+  S5  torn checkpoint write + straggler window: the torn save is
+      counted/retried/swept by the trainer (not fatal), the straggler
+      trips the watchdog.
+
+Metrics land in ``BENCH_chaos.json`` (tracked by ``make bench-regress``).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.chaos_smoke
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import json
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+
+def check(ok: bool, what: str):
+    if not ok:
+        print(f"[chaos-smoke] FAIL: {what}")
+        sys.exit(1)
+    print(f"[chaos-smoke] ok: {what}")
+
+
+def tiny_cfg(num_kv_heads: int = 2):
+    from repro.configs.base import ModelConfig
+
+    return ModelConfig(name="smoke-chaos", family="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=num_kv_heads,
+                       d_ff=128, vocab_size=256, head_dim=16,
+                       dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# S1: membership-driven elastic recovery under device loss + lease delay.
+# ---------------------------------------------------------------------------
+
+FAIL_STEP = 5
+TOTAL_STEPS = 8
+
+
+def _train_run(cfg, plan, ckpt_dir, fplan=None):
+    from repro.data.pipeline import DataConfig, TokenSource
+    from repro.launch.train import make_elastic_trainer
+    from repro.optim import adamw
+    from repro.runtime.faults import delivery_schedule, trainer_injector
+    from repro.runtime.membership import (MembershipRuntime,
+                                          fabric_over_devices)
+    from repro.runtime.trainer import TrainerConfig
+
+    delivery = delivery_schedule(fplan) if fplan is not None else None
+    fabric = fabric_over_devices(4, jax.devices()[:8], delivery=delivery)
+    injector = (trainer_injector(fplan, fabric)
+                if fplan is not None else None)
+    source = TokenSource(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                    global_batch=8))
+    trainer, live = make_elastic_trainer(
+        cfg, plan, adamw.AdamWConfig(lr=1e-3, mode="zero1",
+                                     total_steps=TOTAL_STEPS),
+        TrainerConfig(total_steps=TOTAL_STEPS, ckpt_dir=ckpt_dir,
+                      ckpt_every=2, max_failures=2),
+        source, batch=8, seq=32,
+        membership=MembershipRuntime(fabric, local_rank=0),
+        recalibrate=True, recalib_deadline_s=120.0)
+    trainer.run(fail_injector=injector)
+    losses = {h["step"]: h["loss"] for h in trainer.history}
+    return trainer, live, fabric, losses
+
+
+def scenario_membership_elastic(metrics):
+    from repro.core.plan import plan_search
+    from repro.runtime.faults import FaultEvent, FaultPlan
+
+    cfg = tiny_cfg()
+    plan = plan_search("ic3", 4, model=cfg, batch=8, seq=32, dp=2).best
+    check(plan.devices == 8, f"S1 plan uses the full pod: {plan.describe()}")
+
+    # hosts 2+3 die at step 5; host 1's heartbeats lag 0.25s for the
+    # first simulated second — long enough to flicker past lease_s, so
+    # hosts 0 and 1 DISAGREE while both detect the death concurrently.
+    # The quorum must hold the reshard until they agree on (0, 1).
+    fplan = FaultPlan.scripted(
+        FaultEvent("device_loss", at=FAIL_STEP, hosts=(2, 3)),
+        FaultEvent("lease_delay", at=0.0, hosts=(1,), duration=1.0,
+                   severity=0.25),
+        seed=1001)
+    # the scripted plan must survive a JSON round-trip byte-identically
+    check(FaultPlan.from_dict(fplan.to_dict()) == fplan,
+          "S1 FaultPlan JSON round-trips")
+
+    with tempfile.TemporaryDirectory() as td:
+        _, _, _, base_losses = _train_run(
+            cfg, plan, os.path.join(td, "base"))
+        tr, live, fabric, losses = _train_run(
+            cfg, plan, os.path.join(td, "chaos"), fplan)
+
+    check(tr.replans == [FAIL_STEP],
+          f"S1 exactly one re-plan despite concurrent detectors: "
+          f"{tr.replans}")
+    epochs = fabric.epochs()
+    check(bool(epochs) and all(len(v) == 1 for v in epochs.values()),
+          f"S1 one committed view per epoch (no split-brain): {epochs}")
+    final = fabric.hosts[0].committed
+    check(final.alive == (0, 1) and final.planner == 0,
+          f"S1 converged on the survivor set with host 0 planning: {final}")
+    new_plan = live["plan"]
+    check(new_plan.devices <= 4 and not new_plan.calibration_stale,
+          f"S1 re-plan fits 4 survivors, recalibrated: "
+          f"{new_plan.describe()}")
+    check(any(k == "calibration" and v.startswith("budget")
+              for k, v in new_plan.provenance),
+          "S1 recovery budget spend recorded in plan provenance")
+    drift = max(abs(losses[s] - base_losses[s])
+                / max(1.0, abs(base_losses[s])) for s in base_losses)
+    check(drift < 5e-4, f"S1 loss continuity after shrink "
+                        f"(max rel drift {drift:.2e})")
+    # first originating commit of epoch 1 = agreement latency (sim time)
+    t_commit = min(c.t for c in fabric.commits if c.view.epoch == 1)
+    metrics["loss_continuity"] = 1.0
+    metrics["single_replanner"] = 1.0
+    metrics["recovery_sim_s"] = round(t_commit, 3)
+
+
+# ---------------------------------------------------------------------------
+# S2: deadline-budgeted recalibration under a scripted clock.
+# ---------------------------------------------------------------------------
+
+
+def scenario_budget(metrics):
+    from repro.core.calibrate import (CalibEntry, CalibrationTable,
+                                      recalibrate_surviving)
+    from repro.core.plan import ParallelPlan, replan_elastic
+
+    cfg = tiny_cfg()
+    old = CalibrationTable(entries=(
+        ((4, 1), CalibEntry(b1=10.0, b2=float("inf"))),
+        ((2, 2), CalibEntry(b1=9.0, b2=8.0)),
+        ((1, 4), CalibEntry(b1=float("inf"), b2=7.0)),
+    ), source="measured")
+    plan = ParallelPlan(d1=4, d2=1, dp=2, topology="ic3", calibration=old,
+                        provenance=(("calibration", "stale"),))
+    clock = [0.0]
+
+    def timer():
+        return clock[0]
+
+    def measure(d1, d2):
+        clock[0] += 1.0   # every factorization costs 1 scripted second
+        return CalibEntry(b1=100.0, b2=100.0)
+
+    deadline = 1.5
+    new = recalibrate_surviving(plan, devices=list(range(4)),
+                                measure=measure, deadline_s=deadline,
+                                timer=timer)
+    spent = clock[0]
+    check(spent <= deadline,
+          f"S2 recalibration stayed within deadline_s "
+          f"({spent:.1f}s <= {deadline}s)")
+    counts = new.calibration.provenance_counts()
+    check(counts.get("measured", 0) == 1 and counts.get("carried", 0) == 2,
+          f"S2 budget degraded the tail to carried entries: {counts}")
+    check(" calib[" in new.describe(),
+          f"S2 describe() shows provenance counts: {new.describe()}")
+    check(any(k == "calibration" and v.startswith("budget")
+              for k, v in new.provenance),
+          "S2 budget spend recorded in provenance")
+    # the partially-calibrated artifact still re-searches cleanly and is
+    # NOT re-tagged stale (>=1 fresh measurement covers the survivors)
+    replanned = replan_elastic(new, 4, model=cfg, batch=8, seq=32)
+    check(not replanned.calibration_stale,
+          f"S2 re-planned artifact not stale: {replanned.describe()}")
+
+    # exhausted budget: nothing measured -> honesty demands the stale tag
+    clock[0] = 0.0
+    empty = recalibrate_surviving(plan, devices=list(range(4)),
+                                  measure=measure, deadline_s=0.0,
+                                  timer=timer)
+    check(empty.calibration.provenance_counts().get("measured", 0) == 0
+          and not any(v.startswith("recalibrated")
+                      for _, v in empty.provenance),
+          "S2 fully-exhausted budget does not claim recalibration")
+    metrics["budget_respected"] = 1.0
+
+
+# ---------------------------------------------------------------------------
+# S3 + S4: server degradation ladder and decode-mesh shrink parity.
+# ---------------------------------------------------------------------------
+
+
+def _make_server(cfg, params, topo, *, num_pages, devices=None):
+    from repro.launch.serve import _build_paged_step_fn, make_paged_server
+    from repro.models.paging import PagedConfig
+    from repro.runtime.server import ServerConfig
+
+    scfg = ServerConfig(batch_slots=2, prefill_chunk=4,
+                        paged=PagedConfig(page_size=4, num_pages=num_pages,
+                                          pages_per_slot=8))
+    if devices is None:
+        server, _ = make_paged_server(cfg, scfg, params, topo=topo)
+        return server
+    step_fn, init_caches, _ = _build_paged_step_fn(cfg, scfg, params, topo,
+                                                   None, devices=devices)
+    from repro.runtime.server import Server
+
+    return Server(scfg, step_fn, init_caches)
+
+
+def scenario_server_degradation(metrics):
+    from repro.core.mesh import atp_topo
+    from repro.models import lm
+    from repro.runtime.faults import BackpressureAllocator, FaultEvent, \
+        FaultPlan
+    from repro.runtime.server import Request
+
+    cfg = tiny_cfg(num_kv_heads=4)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    server = _make_server(cfg, params, atp_topo(1, 2, 1), num_pages=40)
+    fplan = FaultPlan.scripted(
+        FaultEvent("backpressure", at=2, duration=12), seed=1003)
+    bp = BackpressureAllocator(server.alloc, fplan, lambda: server.ticks)
+    server.alloc = bp
+
+    for rid in range(6):
+        p = rng.integers(0, cfg.vocab_size, size=6, dtype=np.int32)
+        # 4 deadlined requests die inside the window; 2 patient ones must
+        # survive it and complete
+        server.submit(Request(rid=rid, prompt=p, max_new=6,
+                              deadline_ticks=12 if rid < 4 else None))
+    server.run_until_drained()
+    st = server.stats()
+    check(bp.denied > 0, f"S3 backpressure window denied allocations "
+                         f"({bp.denied})")
+    check(st["admission_retries"] > 0,
+          f"S3 admissions retried with backoff "
+          f"({st['admission_retries']} retries)")
+    check(st["expired"] > 0,
+          f"S3 deadlined requests expired under pressure "
+          f"({st['expired']}/{6})")
+    for r in server.expired:
+        check(r.expired and not r.done, f"S3 request {r.rid} marked expired")
+    check(len(server.completed) == 2
+          and sorted(r.rid for r in server.completed) == [4, 5],
+          f"S3 patient requests completed: "
+          f"{sorted(r.rid for r in server.completed)}")
+    check(server.alloc.held_pages == 0 and not server.busy,
+          "S3 page pool fully drained (expired requests returned pages)")
+    metrics["pool_drained"] = 1.0
+    metrics["served_fraction"] = len(server.completed) / 6.0
+    metrics["expired_request_rate"] = st["expired"] / 6.0
+
+
+def scenario_remesh_parity(metrics):
+    from repro.core.mesh import atp_topo
+    from repro.launch.serve import remesh_paged_server
+    from repro.models import lm
+    from repro.runtime.server import Request
+
+    cfg = tiny_cfg(num_kv_heads=4)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in (5, 9, 7, 12)]
+
+    base = _make_server(cfg, params, atp_topo(1, 2, 2), num_pages=40)
+    for rid, p in enumerate(prompts):
+        base.submit(Request(rid=rid, prompt=p.copy(), max_new=6))
+    base.run_until_drained()
+    base_out = {r.rid: list(r.out) for r in base.completed}
+
+    srv = _make_server(cfg, params, atp_topo(1, 2, 2), num_pages=40)
+    for rid, p in enumerate(prompts):
+        srv.submit(Request(rid=rid, prompt=p.copy(), max_new=6))
+    for _ in range(7):
+        srv.step()   # leave some requests mid-prefill / mid-decode
+    in_flight = sum(s is not None for s in srv.slots) + len(srv.queue)
+    check(in_flight > 0, f"S4 requests in flight at the shrink "
+                         f"({in_flight})")
+    remesh_paged_server(srv, cfg, params, topo=atp_topo(1, 2, 1),
+                        devices=jax.devices()[:2])
+    srv.run_until_drained()
+    out = {r.rid: list(r.out) for r in srv.completed}
+    check(srv.stats()["reshapes"] == 1, "S4 reshape counted")
+    check(out == base_out,
+          f"S4 greedy-token parity across the remesh for all "
+          f"{len(out)} requests")
+    check(srv.alloc.held_pages == 0, "S4 pool drained after the remesh run")
+    metrics["remesh_parity"] = 1.0
+
+
+# ---------------------------------------------------------------------------
+# S5: torn checkpoint write + straggler window.
+# ---------------------------------------------------------------------------
+
+
+def scenario_torn_checkpoint(metrics):
+    from repro.checkpoint import manager as ckpt
+    from repro.core.plan import ParallelPlan
+    from repro.data.pipeline import DataConfig, TokenSource
+    from repro.launch.train import make_elastic_trainer
+    from repro.optim import adamw
+    from repro.runtime.faults import (FaultEvent, FaultPlan,
+                                      TornCheckpointWrites,
+                                      VirtualStepClock)
+    from repro.runtime.trainer import TrainerConfig
+
+    cfg = tiny_cfg()
+    plan = ParallelPlan(d1=2, d2=1, dp=1,
+                        provenance=(("searcher", "chaos-smoke"),))
+    fplan = FaultPlan.scripted(
+        FaultEvent("torn_ckpt", at=4),
+        FaultEvent("straggler", at=2, duration=1, severity=20.0),
+        seed=1005)
+    source = TokenSource(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                    global_batch=8))
+    vclock = VirtualStepClock(fplan)
+    mitigated = []
+    with tempfile.TemporaryDirectory() as td:
+        trainer, _ = make_elastic_trainer(
+            cfg, plan, adamw.AdamWConfig(lr=1e-3, total_steps=6),
+            TrainerConfig(total_steps=6, ckpt_dir=td, ckpt_every=2,
+                          max_failures=2),
+            source, batch=8, seq=32, recalibrate=False)
+        trainer.time_fn = vclock
+        trainer.mitigation_hook = mitigated.append
+        with TornCheckpointWrites(fplan) as torn:
+            trainer.run()
+        check(torn.torn == [4], f"S5 save torn exactly once: {torn.torn}")
+        check(trainer.total_failures == 1,
+              f"S5 torn write counted in failure accounting "
+              f"({trainer.total_failures})")
+        check(ckpt.latest_step(td) == 6,
+              f"S5 run completed through the torn save "
+              f"(latest ckpt step {ckpt.latest_step(td)})")
+        check(not [n for n in os.listdir(td) if n.startswith(".tmp_")],
+              "S5 orphan .tmp_ staging dir swept on retry")
+    check(len(trainer.history) == 6, "S5 all 6 steps committed")
+    check(any(s == 2 for s, _, _ in trainer.watchdog.events),
+          f"S5 scripted straggler tripped the watchdog: "
+          f"{trainer.watchdog.events}")
+    check(mitigated == [2], f"S5 mitigation hook fired: {mitigated}")
+    metrics["torn_ckpt_recovered"] = 1.0
+
+
+def main():
+    ndev = len(jax.devices())
+    check(ndev >= 8, f"8 simulated devices attached (have {ndev})")
+    metrics: dict = {}
+    scenario_budget(metrics)           # cheapest first: pure host code
+    scenario_torn_checkpoint(metrics)
+    scenario_server_degradation(metrics)
+    scenario_remesh_parity(metrics)
+    scenario_membership_elastic(metrics)
+    out = os.environ.get("BENCH_CHAOS_OUT", "BENCH_chaos.json")
+    with open(out, "w") as f:
+        json.dump(metrics, f, indent=1, sort_keys=True)
+    print(f"[chaos-smoke] metrics -> {out}: "
+          f"{json.dumps(metrics, sort_keys=True)}")
+    print("[chaos-smoke] PASS")
+
+
+if __name__ == "__main__":
+    main()

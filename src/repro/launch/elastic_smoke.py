@@ -38,22 +38,29 @@ TOTAL_STEPS = 8
 
 
 def run(cfg, plan, ckpt_dir, *, shrink: bool):
-    """One fault-tolerant training run; optionally fail + shrink to 2."""
+    """One fault-tolerant training run; optionally fail + shrink to 2.
+
+    The pool is observed through the membership fabric (4 simulated
+    hosts x 2 devices): the injected failure kills hosts 1-3 on the
+    fabric and raises — recovery then waits for lease expiry + quorum
+    commit before re-planning on the agreed 2-device survivor pool.
+    """
     from repro.data.pipeline import DataConfig, TokenSource
     from repro.launch.train import make_elastic_trainer
     from repro.optim import adamw
+    from repro.runtime.membership import (MembershipRuntime,
+                                          fabric_over_devices)
     from repro.runtime.trainer import TrainerConfig
 
-    pool = {"n": 8}
+    fabric = fabric_over_devices(4, jax.devices()[:8])
+    membership = MembershipRuntime(fabric, local_rank=0)
     fired = {"n": 0}
-
-    def devices_fn():
-        return jax.devices()[: pool["n"]]
 
     def injector(step):
         if shrink and step == FAIL_STEP and fired["n"] == 0:
             fired["n"] = 1
-            pool["n"] = 2  # the pod lost 6 of 8 devices
+            for r in (1, 2, 3):   # the pod lost 6 of 8 devices
+                fabric.fail_host(r)
             raise RuntimeError("injected device loss")
 
     source = TokenSource(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
@@ -63,12 +70,12 @@ def run(cfg, plan, ckpt_dir, *, shrink: bool):
                                      total_steps=TOTAL_STEPS),
         TrainerConfig(total_steps=TOTAL_STEPS, ckpt_dir=ckpt_dir,
                       ckpt_every=2, max_failures=2),
-        source, batch=8, seq=32, devices_fn=devices_fn,
-        recalibrate=True)
+        source, batch=8, seq=32, membership=membership,
+        recalibrate=True, recalib_deadline_s=120.0)
     params, opt = trainer.run(fail_injector=injector)
     # last loss per step (replayed steps overwrite their first attempt)
     losses = {h["step"]: h["loss"] for h in trainer.history}
-    return trainer, live, (params, opt), losses
+    return trainer, live, fabric, (params, opt), losses
 
 
 def main():
@@ -100,13 +107,21 @@ def main():
         base_dir = os.path.join(td, "base")
         elas_dir = os.path.join(td, "elastic")
 
-        _, _, _, base_losses = run(cfg, plan, base_dir, shrink=False)
-        tr, live, (params, opt), elas_losses = run(cfg, plan, elas_dir,
-                                                   shrink=True)
+        _, _, _, _, base_losses = run(cfg, plan, base_dir, shrink=False)
+        tr, live, fabric, (params, opt), elas_losses = run(
+            cfg, plan, elas_dir, shrink=True)
 
         # 1. the failure was recovered through the re-plan path
         check(tr.replans == [FAIL_STEP],
               f"one elastic re-plan at step {FAIL_STEP}: {tr.replans}")
+        # 1b. the shrink was agreed through the membership protocol: one
+        #     quorum-committed view per epoch, host 0 the elected planner
+        epochs = fabric.epochs()
+        check(all(len(v) == 1 for v in epochs.values()),
+              f"one committed view per epoch (no split-brain): {epochs}")
+        final = fabric.hosts[0].committed
+        check(final.alive == (0,) and final.planner == 0,
+              f"converged view is the survivor set: {final}")
         check(tr.total_failures == 1 and tr.failures == 0,
               "failure counter decayed after recovery "
               f"(total={tr.total_failures}, consecutive={tr.failures})")
@@ -130,6 +145,12 @@ def main():
         check(any(k == "calibration" and v.startswith("recalibrated")
                   for k, v in new_plan.provenance),
               "recalibration recorded in provenance")
+        check(any(k == "calibration" and v.startswith("budget")
+                  for k, v in new_plan.provenance),
+              "recovery budget spend recorded in provenance")
+        check(" calib[" in new_plan.describe(),
+              f"describe() surfaces calibration provenance counts: "
+              f"{new_plan.describe()}")
 
         # 2b. static conformance: both the original 8-device plan and the
         #     re-searched surviving-mesh plan must build steps that emit
@@ -182,6 +203,27 @@ def main():
         check(drift < 5e-4,
               f"loss trajectory continuous vs uninterrupted run "
               f"(max rel drift {drift:.2e})")
+
+        # 5. the deprecated devices_fn poll still works — behind the
+        #    SingleObserverMembership shim and a loud warning
+        import warnings
+
+        from repro.data.pipeline import DataConfig, TokenSource
+        from repro.launch.train import make_elastic_trainer
+        from repro.optim import adamw
+        from repro.runtime.trainer import TrainerConfig
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            make_elastic_trainer(
+                cfg, plan, adamw.AdamWConfig(lr=1e-3, total_steps=1),
+                TrainerConfig(total_steps=1,
+                              ckpt_dir=os.path.join(td, "shim")),
+                TokenSource(DataConfig(vocab_size=cfg.vocab_size,
+                                       seq_len=32, global_batch=8)),
+                batch=8, seq=32, devices_fn=lambda: jax.devices()[:8])
+        check(any(issubclass(w.category, DeprecationWarning)
+                  and "devices_fn" in str(w.message) for w in caught),
+              "devices_fn= raises a DeprecationWarning (shimmed)")
     print("[elastic-smoke] PASS")
 
 

@@ -111,7 +111,24 @@ def make_paged_server(cfg, scfg: ServerConfig, params,
         log.info("prefix cache off: recurrent state is not page-addressable")
         scfg = dataclasses.replace(scfg, prefix_cache=False)
     scfg = dataclasses.replace(scfg, recurrent=recurrent)
-    mesh = topo.build()
+    step_fn, init_caches, info = _build_paged_step_fn(cfg, scfg, params,
+                                                      topo, plan)
+    return Server(scfg, step_fn, init_caches), info
+
+
+def _build_paged_step_fn(cfg, scfg: ServerConfig, params, topo,
+                         plan: ParallelPlan | None, devices=None):
+    """Compile the paged step for one mesh and wrap it in the Server's
+    host-side calling convention.
+
+    The mode flags in ``scfg`` must already be resolved (see
+    ``make_paged_server``).  ``devices`` restricts the mesh to a device
+    subset — the elastic remesh path passes the survivors.  Returns
+    ``(step_fn, init_caches, info)``: everything ``Server(...)`` or
+    ``Server.reshape(...)`` needs.
+    """
+    recurrent = scfg.recurrent
+    mesh = topo.build(devices) if devices is not None else topo.build()
     step, info = build_paged_step(
         cfg, topo, paged_cfg=scfg.paged, mesh=mesh, plan=plan,
         slots=scfg.batch_slots if recurrent else None,
@@ -143,7 +160,39 @@ def make_paged_server(cfg, scfg: ServerConfig, params,
                                 caches)
             return np.asarray(toks), caches
 
-    return Server(scfg, step_fn, init_caches), info
+    return step_fn, init_caches, info
+
+
+def remesh_paged_server(server: Server, cfg, params,
+                        plan: ParallelPlan | None = None, topo=None,
+                        devices=None):
+    """Shrink (or re-mesh) a live paged server onto surviving devices.
+
+    Recompiles the paged step on the new mesh — ``plan`` should be the
+    re-searched survivors' plan (its ``decode_view`` wins, exactly as at
+    construction) or ``topo`` an explicit topology; ``devices`` the
+    surviving pool — and hands it to ``Server.reshape``, which replays
+    every in-flight request's progress as prompt continuation on the new
+    mesh (greedy-token parity; see its docstring).  The server keeps its
+    queue, completed/expired lists, deadlines and counters: from the
+    client's side a remesh is just a burst of re-prefill latency.
+    Returns the new step ``info``.
+    """
+    if plan is not None:
+        view = plan.decode_view()
+        if (view.d1, view.d2) != (plan.d1, plan.d2):
+            log.info("remesh: decode sub-plan wins: %s -> DeviceMesh(%d,%d)",
+                     plan.describe(), view.d1, view.d2)
+        topo = view.topo()
+        plan = view
+    elif topo is None:
+        raise TypeError("remesh_paged_server needs a plan or a topo")
+    step_fn, init_caches, info = _build_paged_step_fn(
+        cfg, server.cfg, params, topo, plan, devices=devices)
+    server.reshape(step_fn, init_caches)
+    log.info("server remeshed onto %s: %d in-flight requests replaying",
+             topo, len(server.queue))
+    return info
 
 
 def main():

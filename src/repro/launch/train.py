@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import logging
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +32,7 @@ from repro.data.pipeline import DataConfig, TokenSource
 from repro.launch.steps import build_train_step
 from repro.models import lm
 from repro.optim import adamw
+from repro.runtime.membership import SingleObserverMembership
 from repro.runtime.trainer import Trainer, TrainerConfig
 
 log = logging.getLogger("repro.train")
@@ -71,8 +73,9 @@ def pick_plan(cfg, tp: int, seq: int, batch: int, topology: str = "v5e",
 
 def make_elastic_trainer(cfg, plan: ParallelPlan, opt_cfg, trainer_cfg,
                          source, *, batch: int, seq: int,
-                         devices_fn=None, recalibrate: bool = True,
-                         measure=None):
+                         membership=None, devices_fn=None,
+                         recalibrate: bool = True, measure=None,
+                         recalib_deadline_s: float | None = None):
     """Wire plan -> builders -> fault-tolerant Trainer, elastic end to end.
 
     The recovery loop on a shrunken device pool is *complete* (the PR-2/3
@@ -85,18 +88,41 @@ def make_elastic_trainer(cfg, plan: ParallelPlan, opt_cfg, trainer_cfg,
     params/opt_state sharded on the new (d1, d2) mesh instead of
     replicated on the default device.
 
-    ``devices_fn`` injects the device pool (tests/smokes shrink it to
-    simulate failures; default ``jax.devices``).  ``recalibrate=False``
-    skips the on-mesh micro-benchmarks (the re-search then ranks with the
-    stale-tagged table, the pre-PR-4 behavior).  ``measure`` forwards to
-    ``recalibrate_surviving`` (injectable benchmark for tests).
+    ``membership`` answers *what pool survived, and is this host the
+    elected re-planner* — a ``runtime.membership.MembershipRuntime`` over
+    a lease/heartbeat fabric (recovery waits for a converged, epoch-
+    numbered, quorum-committed view, and only the elected planner runs
+    the re-search), or any object with the same ``converged_view()/
+    devices()/is_planner()`` surface.  ``devices_fn`` is the DEPRECATED
+    PR-4 single-observer poll, kept behind
+    ``SingleObserverMembership`` with a loud warning; default (neither
+    given) is the single-observer view of ``jax.devices``.
+
+    ``recalibrate=False`` skips the on-mesh micro-benchmarks (the
+    re-search then ranks with the stale-tagged table, the pre-PR-4
+    behavior).  ``measure`` forwards to ``recalibrate_surviving``
+    (injectable benchmark for tests).  ``recalib_deadline_s`` budgets the
+    recovery micro-benchmarks: most-sensitive factorizations measured
+    first, the rest degraded to carried/analytic entries when the
+    deadline runs out (provenance recorded in the plan).
 
     Returns ``(trainer, live)`` — ``live`` is the mutable holder the
     closures read, so callers can observe the post-recovery plan/step/info.
     """
-    devices_fn = devices_fn or jax.devices
+    if membership is not None and devices_fn is not None:
+        raise TypeError("pass membership= or devices_fn=, not both")
+    if membership is None:
+        if devices_fn is not None:
+            warnings.warn(
+                "devices_fn= is deprecated: it is the PR-4 single-"
+                "observer poll — one omniscient host, no leases, no "
+                "quorum, no planner election.  Pass membership= "
+                "(runtime.membership.MembershipRuntime over a "
+                "MembershipFabric) instead.",
+                DeprecationWarning, stacklevel=2)
+        membership = SingleObserverMembership(devices_fn or jax.devices)
     topo = plan.topo()
-    devs = devices_fn()
+    devs = membership.devices()
     assert topo.size <= len(devs), \
         f"need {topo.size} devices, have {len(devs)}"
     mesh = topo.build(devs)
@@ -172,17 +198,35 @@ def make_elastic_trainer(cfg, plan: ParallelPlan, opt_cfg, trainer_cfg,
         change the strategy — the executed plan stays the artifact the
         user saved.  'Intact' is membership, not a head-count: enough
         spare devices with a dead one still in the live mesh would
-        otherwise hand back a step bound to the dead device forever."""
-        surviving = devices_fn()
+        otherwise hand back a step bound to the dead device forever.
+
+        The pool itself comes from the membership layer: recovery blocks
+        on a CONVERGED, quorum-committed view (a glitchy lease cannot
+        trigger a reshard — the fabric needs ``quorum_views`` stable
+        reviews plus a majority ack before any view commits), and only
+        the view's elected planner may run the re-search."""
+        view = membership.converged_view()
+        surviving = membership.devices(view)
         alive = {d.id for d in surviving}
         mesh_alive = all(d.id in alive
                          for d in live["info"].mesh.devices.flat)
         if mesh_alive and len(surviving) >= live["plan"].devices:
             return live["step"], restore_shardings()
+        if not membership.is_planner(view):
+            # a real non-planner host would wait for the planner's plan
+            # artifact; the single-process simulation has no one to wait
+            # for, so losing the planner role is a scenario bug
+            raise RuntimeError(
+                f"epoch {view.epoch}: this host is not the elected "
+                f"re-planner (view {view.alive}, planner {view.planner})")
+        log.info("membership epoch %d committed view %s; this host is "
+                 "the elected re-planner", view.epoch, view.alive)
         old = live["plan"]
         if recalibrate:
             old = recalibrate_surviving(old, devices=surviving,
-                                        measure=measure)
+                                        measure=measure,
+                                        deadline_s=recalib_deadline_s,
+                                        model=cfg, batch=batch, seq=seq)
             log.info("recalibrated on surviving mesh: %d entries (%s)",
                      len(old.calibration), old.calibration.source)
         new_plan = replan_elastic(old, len(surviving), model=cfg,

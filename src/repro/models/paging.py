@@ -315,10 +315,23 @@ class PageAllocator:
             del self._refs[page]
             self._free.append(page)
 
-    def _evict(self, n: int) -> None:
+    def evict_pinned(self, n: int) -> int:
+        """Pressure-eviction hook: free up to ``n`` index-only pages.
+
+        The degradation ladder (``runtime.server``) calls this *before*
+        pool exhaustion forces reactive eviction inside ``ensure`` — the
+        same leaf-first, refcount-safe walk, surfaced so a scheduler can
+        shed cache weight on a low-water-mark signal instead of on the
+        first failed allocation.  Returns the number of pages freed
+        (less than ``n`` when only slot-mapped or interior pages remain).
+        """
+        return self._evict(n)
+
+    def _evict(self, n: int) -> int:
         """Free up to ``n`` pages held only by the prefix index —
         leaf-first (never a node with indexed children, so surviving
-        chains stay reachable), newest-registered first."""
+        chains stay reachable), newest-registered first.  Returns pages
+        freed."""
         freed = 0
         while freed < n and self._radix:
             mapped = {p for owned in self._owned for p in owned}
@@ -329,9 +342,10 @@ class PageAllocator:
                     victim = page
                     break
             if victim is None:
-                return
+                return freed
             self._unpin(victim)
             freed += 1
+        return freed
 
     def table(self) -> np.ndarray:
         """The ``[slots, pages_per_slot]`` int32 device table; unmapped

@@ -67,6 +67,14 @@ class Request:
     max_new: int = 16
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    #: scheduler-tick budget from submit; None = no deadline.  A request
+    #: still incomplete when the budget elapses is expired at the next
+    #: tick: its pages/state return to the pool immediately and it lands
+    #: in ``Server.expired`` (graceful degradation — under pressure the
+    #: pool drains instead of wedging on doomed work)
+    deadline_ticks: int | None = None
+    #: set when the deadline fired (partial ``out`` is kept as-is)
+    expired: bool = False
 
 
 @dataclasses.dataclass
@@ -86,6 +94,19 @@ class ServerConfig:
     #: recurrent state pools (mamba/zamba/xlstm) — the compiled step
     #: takes a per-row slot-id array (build_paged_step(slots=...))
     recurrent: bool = False
+    #: admission retry-with-backoff: after a back-pressured admission the
+    #: scheduler waits ``base * 2**(consecutive_failures - 1)`` ticks
+    #: (capped at ``max``) before retrying, so a saturated pool is not
+    #: hammered with doomed ensure() calls every tick while live slots
+    #: drain.  base=1, max=1 recovers the pre-backoff retry-every-tick
+    #: behavior.
+    admission_backoff_base: int = 1
+    admission_backoff_max: int = 8
+    #: pressure-triggered prefix-cache eviction: when the pool's free
+    #: pages dip below this mark, index-only pages are evicted
+    #: (leaf-first, refcount-safe) back up to it BEFORE allocation
+    #: failures force reactive eviction.  0 disables (default).
+    eviction_low_water: int = 0
 
 
 @dataclasses.dataclass
@@ -129,11 +150,19 @@ class Server:
         self.slots: list[_Slot | None] = [None] * cfg.batch_slots
         self.queue: list[Request] = []
         self.completed: list[Request] = []
+        self.expired: list[Request] = []
         self.ticks = 0
         self._prompt_tokens = 0
         self._prefix_hit_tokens = 0
         self._spec_drafts = 0
         self._spec_accepted = 0
+        #: rid -> absolute expiry tick (set at submit from deadline_ticks)
+        self._deadline: dict[int, int] = {}
+        self._admit_fails = 0
+        self._next_admit_tick = 0
+        self._admission_retries = 0
+        self._evicted_pages = 0
+        self._reshapes = 0
 
     # -- bookkeeping -------------------------------------------------------
 
@@ -151,6 +180,8 @@ class Server:
                 f"request {req.rid}: {len(req.prompt)} prompt + "
                 f"{req.max_new} new tokens need {need} positions, over "
                 f"the page-table ceiling {self.cfg.paged.max_seq}")
+        if req.deadline_ticks is not None:
+            self._deadline[req.rid] = self.ticks + req.deadline_ticks
         self.queue.append(req)
 
     @property
@@ -204,7 +235,11 @@ class Server:
                 "prefix_hit_rate": hit,
                 "spec_drafts": self._spec_drafts,
                 "spec_accepted": self._spec_accepted,
-                "spec_accept_rate": acc}
+                "spec_accept_rate": acc,
+                "expired": len(self.expired),
+                "admission_retries": self._admission_retries,
+                "evicted_pages": self._evicted_pages,
+                "reshapes": self._reshapes}
 
     def _chunk_rounded(self, n: int) -> int:
         c = self.cfg.prefill_chunk
@@ -228,6 +263,47 @@ class Server:
         toks, self.caches = out
         return toks, None
 
+    # -- graceful degradation ---------------------------------------------
+
+    def _expire_one(self, req: Request):
+        req.expired = True
+        self._deadline.pop(req.rid, None)
+        self.expired.append(req)
+
+    def _expire(self):
+        """Deadline enforcement (ladder rung 3): every request whose tick
+        budget has elapsed is dropped NOW — queued requests simply leave
+        the queue; live slots release their pages/state back to the pool
+        in the same tick, so expiry is also how a saturated pool drains.
+        The partial ``out`` stays on the request (a client may still use
+        a truncated stream)."""
+        if not self._deadline:
+            return
+
+        def over(r):
+            return self._deadline.get(r.rid, self.ticks + 1) <= self.ticks
+
+        doomed = [r for r in self.queue if over(r)]
+        self.queue = [r for r in self.queue if not over(r)]
+        for r in doomed:
+            self._expire_one(r)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            if self._deadline.get(s.req.rid, self.ticks + 1) <= self.ticks:
+                self.alloc.release(i)
+                self.slots[i] = None
+                self._expire_one(s.req)
+
+    def _evict_pressure(self):
+        """Low-water prefix-cache eviction (ladder rung 2): shed
+        index-only pages before the pool runs dry, instead of waiting for
+        an allocation failure to force it."""
+        lw = self.cfg.eviction_low_water
+        if lw and self.cfg.prefix_cache and self.alloc.free_pages < lw:
+            self._evicted_pages += self.alloc.evict_pinned(
+                lw - self.alloc.free_pages)
+
     # -- scheduling --------------------------------------------------------
 
     def _admit(self):
@@ -237,7 +313,14 @@ class Server:
         cache on, the longest page-aligned cached prefix is adopted
         read-only and its prefill is skipped entirely; the match is
         capped below the last prompt position because the first output
-        token needs that position's logits from a real prefill step."""
+        token needs that position's logits from a real prefill step.
+
+        Back-pressured admissions retry with exponential backoff (ladder
+        rung 1): each consecutive failure doubles the wait before the
+        next attempt (``admission_backoff_base``..``_max`` ticks), and
+        any successful admission resets the clock."""
+        if self.ticks < self._next_admit_tick:
+            return
         for i, s in enumerate(self.slots):
             if s is not None or not self.queue:
                 continue
@@ -256,8 +339,15 @@ class Server:
             if not self.alloc.ensure(i, rounded):
                 if matched:
                     self.alloc.release(i)   # roll the adoption back
-                break  # backpressure: keep decoding, retry next tick
+                self._admit_fails += 1
+                self._admission_retries += 1
+                self._next_admit_tick = self.ticks + min(
+                    self.cfg.admission_backoff_max,
+                    self.cfg.admission_backoff_base
+                    * 2 ** (self._admit_fails - 1))
+                break  # backpressure: keep decoding, retry after backoff
             self.queue.pop(0)
+            self._admit_fails = 0
             skip = len(matched) * self.cfg.paged.page_size
             self.slots[i] = _Slot(req=req, fed=skip, length=skip)
             self._prompt_tokens += len(prompt)
@@ -447,12 +537,69 @@ class Server:
         return True
 
     def step(self):
-        """One scheduler tick: admit, feed prefill chunks, decode tick."""
+        """One scheduler tick: expire, evict, admit, feed prefill chunks,
+        decode tick.  The first two are the degradation ladder's passive
+        rungs — under pressure they run every tick so the pool can only
+        drain, never wedge."""
+        self._expire()
+        self._evict_pressure()
         self._admit()
         self._prefill_some()
         decoded = self._decode_tick()
         self.ticks += 1
         return decoded or any(s is not None for s in self.slots)
+
+    # -- elastic remesh ----------------------------------------------------
+
+    def reshape(self, paged_step_fn: Callable,
+                init_caches: Callable[[], Any]):
+        """Drain-and-remesh (ladder rung 4): swap in a step compiled for
+        a different decode mesh and replay in-flight work on it.
+
+        The old mesh's caches are unreadable after a shrink (their pages
+        lived on devices that may be gone), so every live slot's progress
+        is converted back into *prompt* form: the request's feed sequence
+        becomes ``original prompt + tokens emitted so far`` (``prompt``
+        is extended in place; ``out`` keeps the already-delivered
+        tokens), and the request re-queues for ordinary admission +
+        chunked prefill on the survivors.  Greedy decode makes this
+        exact: re-prefilling prompt+out reproduces bit-identical KV for
+        those positions, and the argmax at the last valid position IS the
+        next token of the uninterrupted stream — token parity for every
+        replayed request, with no checkpoint of cache state.
+
+        Speculative drafts are dropped (never delivered, cheap to
+        re-derive); the prefix-cache radix index resets with the
+        allocator (its pages died with the old pool).  A continuation
+        whose chunk-rounded feed no longer fits the page table
+        (``prompt+out`` rounds past ``max_seq``) cannot be replayed and
+        is expired instead — the same contract as a deadline.
+        """
+        live = [s for s in self.slots if s is not None]
+        self.step_fn = paged_step_fn
+        self.caches = init_caches()
+        self.alloc = PageAllocator(self.cfg.paged, self.cfg.batch_slots,
+                                   prefix_cache=self.cfg.prefix_cache)
+        self.slots = [None] * self.cfg.batch_slots
+        self._admit_fails = 0
+        self._next_admit_tick = 0
+        self._reshapes += 1
+        requeue = []
+        for s in live:
+            req = s.req
+            if req.out:
+                req.prompt = np.concatenate(
+                    [np.asarray(req.prompt, np.int32),
+                     np.asarray(req.out, np.int32)])
+            remaining = req.max_new - len(req.out)
+            grow = remaining if self.cfg.speculate else max(0, remaining - 1)
+            need = max(self._chunk_rounded(len(req.prompt)),
+                       len(req.prompt) + grow)
+            if need > self.cfg.paged.max_seq:
+                self._expire_one(req)
+                continue
+            requeue.append(req)
+        self.queue = requeue + self.queue
 
     def run_until_drained(self, max_ticks: int = 10000) -> int:
         t0 = self.ticks

@@ -141,6 +141,41 @@ class Trainer:
                  " (resharded)" if shardings is not None else "")
         return params, opt_state, meta["step"]
 
+    def _checkpoint(self, step: int, params, opt_state):
+        """Save + prune under the SAME consecutive-failure budget as the
+        train step.  A torn write (fail-injected OSError, device error
+        while materializing leaves) used to escape ``run``'s guard and
+        kill the job even though ``ckpt.save`` is atomic (tmp + rename:
+        the committed checkpoint set is never corrupted, only the attempt
+        is lost).  Here each failed attempt is counted, its orphan tmp is
+        swept, and the save retries immediately — same-process retry is
+        correct because the state being written is host-reachable and
+        committed checkpoints are untouched.  Budget exhaustion raises,
+        exactly like a step that cannot recover.
+        """
+        while True:
+            try:
+                ckpt.save(self.cfg.ckpt_dir, step,
+                          self.encode_ckpt(params, opt_state))
+                ckpt.prune(self.cfg.ckpt_dir, self.cfg.keep_ckpts)
+                return
+            except (RuntimeError, OSError,
+                    jax.errors.JaxRuntimeError) as e:
+                self.failures += 1
+                self.total_failures += 1
+                log.error("checkpoint at step %d failed (%s); retrying "
+                          "(%d/%d)", step, e, self.failures,
+                          self.cfg.max_failures)
+                if self.failures > self.cfg.max_failures:
+                    raise
+                swept = ckpt.sweep_orphan_tmps(self.cfg.ckpt_dir)
+                if swept:
+                    log.info("swept %d torn checkpoint tmp(s)", swept)
+                # like step recovery, the budget only decays once the
+                # NEXT train step commits — a flapping disk still trips
+                # max_failures
+                self._recovering = True
+
     def run(self, fail_injector: Callable[[int], None] | None = None):
         train_step = self.build_step()
         params, opt_state, start = self._restore_or_init()
@@ -168,11 +203,6 @@ class Trainer:
                     self.failures = 0
                 if step % self.cfg.log_every == 0:
                     log.info("step %d loss %.4f (%.3fs)", step, loss, dt)
-                step += 1
-                if step % self.cfg.ckpt_every == 0 or step == self.cfg.total_steps:
-                    ckpt.save(self.cfg.ckpt_dir, step,
-                              self.encode_ckpt(params, opt_state))
-                    ckpt.prune(self.cfg.ckpt_dir, self.cfg.keep_ckpts)
             except (RuntimeError, jax.errors.JaxRuntimeError) as e:
                 self.failures += 1
                 self.total_failures += 1
@@ -204,4 +234,8 @@ class Trainer:
                     train_step = self.build_step()
                 self._recovering = True
                 params, opt_state, step = self._restore_or_init(shardings)
+                continue
+            step += 1
+            if step % self.cfg.ckpt_every == 0 or step == self.cfg.total_steps:
+                self._checkpoint(step, params, opt_state)
         return params, opt_state

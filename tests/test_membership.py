@@ -1,0 +1,223 @@
+"""Membership protocol: leases, quorum commits, planner election.
+
+The split-brain probe in every test is :meth:`MembershipFabric.epochs`
+— for each epoch number the set of committed alive-sets must be a
+singleton — plus the quorum evidence recorded on every
+:class:`CommitRecord` (acks from a majority of the electorate, proposal
+stable for ``quorum_views`` consecutive reviews).  The property test at
+the bottom drives the fabric through arbitrary seeded failure/delivery
+interleavings via the hypothesis shim.
+"""
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.membership import (MembershipConfig, MembershipFabric,
+                                      MembershipRuntime,
+                                      SingleObserverMembership, View,
+                                      fabric_over_devices)
+
+
+def assert_quorum_evidence(fabric: MembershipFabric):
+    """Every originating commit carries majority + stability evidence."""
+    for c in fabric.commits:
+        majority = len(c.electorate) // 2 + 1
+        assert c.acks >= majority, c
+        assert c.stable >= fabric.cfg.quorum_views, c
+        assert c.rank in c.view.alive or c.rank not in c.electorate, c
+
+
+def assert_no_split_brain(fabric: MembershipFabric):
+    for epoch, views in fabric.epochs().items():
+        assert len(views) == 1, f"epoch {epoch} split-brain: {views}"
+
+
+class TestView:
+    def test_planner_is_lowest_surviving_rank(self):
+        assert View(epoch=1, alive=(2, 5, 3)).planner == 2
+
+    def test_empty_view_has_no_planner(self):
+        with pytest.raises(ValueError):
+            View(epoch=1, alive=()).planner
+
+
+class TestFabric:
+    def test_intact_cluster_stays_at_epoch_zero(self):
+        fabric = MembershipFabric(4)
+        view = fabric.converge()
+        assert view == View(epoch=0, alive=(0, 1, 2, 3))
+        assert fabric.commits == []
+
+    def test_single_failure_converges_on_survivors(self):
+        fabric = MembershipFabric(4)
+        fabric.fail_host(2)
+        view = fabric.converge()
+        assert view.alive == (0, 1, 3)
+        assert view.epoch == 1
+        assert view.planner == 0
+        assert_no_split_brain(fabric)
+        assert_quorum_evidence(fabric)
+
+    def test_majority_loss_converges_through_hard_expiry(self):
+        # suspicion alone can never assemble a majority of the old
+        # electorate here — only dead_after_s expiry shrinks the
+        # denominator enough for the lone survivor to commit
+        fabric = MembershipFabric(4)
+        for r in (1, 2, 3):
+            fabric.fail_host(r)
+        view = fabric.converge()
+        assert view.alive == (0,) and view.planner == 0
+        assert_no_split_brain(fabric)
+        assert_quorum_evidence(fabric)
+        [c] = [c for c in fabric.commits if c.rank == 0]
+        assert c.electorate == (0,)   # the dead were expired, not out-voted
+
+    def test_cascading_failures_one_view_per_epoch(self):
+        fabric = MembershipFabric(4)
+        fabric.fail_host(3)
+        v1 = fabric.converge()
+        fabric.fail_host(1)
+        v2 = fabric.converge()
+        assert v1.alive == (0, 1, 2) and v2.alive == (0, 2)
+        assert v2.epoch > v1.epoch
+        assert_no_split_brain(fabric)
+        assert_quorum_evidence(fabric)
+
+    def test_election_follows_lowest_rank(self):
+        fabric = MembershipFabric(3)
+        fabric.fail_host(0)
+        view = fabric.converge()
+        assert view.alive == (1, 2) and view.planner == 1
+        rt1 = MembershipRuntime(fabric, local_rank=1)
+        rt2 = MembershipRuntime(fabric, local_rank=2)
+        assert rt1.is_planner(view) and not rt2.is_planner(view)
+
+    def test_short_delay_never_commits(self):
+        # beats lagging UNDER the lease never even raise suspicion
+        cfg = MembershipConfig()
+        fabric = MembershipFabric(
+            4, cfg, delivery=lambda s, d, t: cfg.lease_s * 0.5)
+        fabric.run_until(5.0)
+        assert fabric.commits == []
+        assert fabric.converge().epoch == 0
+
+    def test_false_suspicion_heals_by_readmission(self):
+        # host 1's beats are DROPPED for a while: the quorum may evict it
+        # (that is correct — the evidence said dead), but once beats
+        # resume the cluster must re-admit it in a later epoch, and no
+        # epoch may ever hold two views
+        def delivery(src, dst, t):
+            if src == 1 and t < 1.0:
+                return None
+            return 0.0
+
+        fabric = MembershipFabric(4, delivery=delivery)
+        fabric.run_until(2.0)   # live through the deaf window + healing
+        view = fabric.converge()
+        assert view.alive == (0, 1, 2, 3)
+        assert_no_split_brain(fabric)
+        assert_quorum_evidence(fabric)
+        # the deaf window really did evict it on the way
+        assert any(c.view.alive == (0, 2, 3) for c in fabric.commits)
+
+    def test_revive_rejoins_in_new_epoch(self):
+        fabric = MembershipFabric(3)
+        fabric.fail_host(2)
+        v1 = fabric.converge()
+        fabric.revive_host(2)
+        v2 = fabric.converge()
+        assert v1.alive == (0, 1) and v2.alive == (0, 1, 2)
+        assert v2.epoch > v1.epoch
+        assert_no_split_brain(fabric)
+
+    def test_no_survivors_fails_loudly(self):
+        fabric = MembershipFabric(2)
+        fabric.fail_host(0)
+        fabric.fail_host(1)
+        with pytest.raises(TimeoutError):
+            fabric.converge(timeout_s=1.0)
+
+    def test_deterministic_replay(self):
+        def script(fabric):
+            fabric.run_until(0.12)
+            fabric.fail_host(3)
+            fabric.run_until(0.3)
+            fabric.fail_host(1)
+            fabric.converge()
+            return fabric.commits
+
+        assert script(MembershipFabric(4)) == script(MembershipFabric(4))
+
+
+class TestFabricOverDevices:
+    def test_even_slices_and_survivor_concatenation(self):
+        devices = [f"d{i}" for i in range(8)]
+        fabric = fabric_over_devices(4, devices)
+        assert fabric.host_devices[1] == ["d2", "d3"]
+        fabric.fail_host(1)
+        fabric.fail_host(3)
+        view = fabric.converge()
+        assert fabric.surviving_devices(view) == ["d0", "d1", "d4", "d5"]
+
+    def test_indivisible_pool_rejected(self):
+        with pytest.raises(ValueError):
+            fabric_over_devices(3, list(range(8)))
+
+
+class TestSingleObserverShim:
+    def test_always_planner_epoch_bumps_on_pool_change(self):
+        pool = [object(), object()]
+        shim = SingleObserverMembership(lambda: pool)
+        v0 = shim.converged_view()
+        assert shim.is_planner(v0) and v0.epoch == 0
+        assert shim.devices(v0) == pool
+        pool.pop()
+        assert shim.converged_view().epoch == 1
+
+
+# ---------------------------------------------------------------------------
+# Property: arbitrary failure/delivery interleavings keep the invariants.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30)
+@given(n_hosts=st.integers(3, 5),
+       kill_mask=st.integers(0, 15),
+       stagger_ds=st.integers(0, 3),
+       delay_cs=st.integers(0, 35),       # 0..0.35s, under dead_after_s
+       delayed_src=st.integers(0, 4),
+       delay_until_ds=st.integers(0, 12))
+def test_property_membership_invariants(n_hosts, kill_mask, stagger_ds,
+                                        delay_cs, delayed_src,
+                                        delay_until_ds):
+    """Single elected planner per epoch, convergence on the healthy set,
+    and no commit without quorum — for any seeded interleaving of
+    failures (simultaneous or staggered) and bounded heartbeat delays."""
+    kills = [r for r in range(1, n_hosts) if (kill_mask >> (r - 1)) & 1]
+
+    def delivery(src, dst, t):
+        if src == delayed_src % n_hosts and t < delay_until_ds / 10.0:
+            return delay_cs / 100.0
+        return 0.0
+
+    fabric = MembershipFabric(n_hosts, delivery=delivery)
+    t = 0.0
+    for r in kills:
+        fabric.run_until(t)
+        fabric.fail_host(r)
+        t += stagger_ds / 10.0
+    view = fabric.converge(timeout_s=30.0)
+
+    healthy = tuple(r for r in range(n_hosts) if r not in kills)
+    assert view.alive == healthy
+    assert view.planner == min(healthy)
+    assert_no_split_brain(fabric)
+    assert_quorum_evidence(fabric)
+    # the election is a pure function of the view, so a singleton view
+    # per epoch IS a single elected re-planner per epoch
+    planners: dict[int, set[int]] = {}
+    for c in fabric.commits:
+        planners.setdefault(c.view.epoch, set()).add(c.view.planner)
+    assert all(len(p) == 1 for p in planners.values())

@@ -1,0 +1,463 @@
+"""Fault-domain runtime: budgeted recalibration, robust timing, the
+server degradation ladder, torn-checkpoint accounting, FaultPlan.
+
+Server tests drive the REAL scheduler with a fake compiled step — a
+pure function of (token, absolute position) — so admission backoff,
+deadline expiry, pool drain and reshape replay are exercised without an
+XLA compile, and greedy-token parity across a reshape is exact by
+construction iff the scheduler replays positions faithfully.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import comm_matrix
+from repro.core.calibrate import (CalibEntry, CalibrationTable,
+                                  analytic_entry, recalibrate_surviving,
+                                  robust_seconds, sensitivity_order)
+from repro.core.plan import ParallelPlan, plan_search
+from repro.models.paging import PagedConfig
+from repro.runtime.faults import (KINDS, BackpressureAllocator, FaultEvent,
+                                  FaultPlan, TornCheckpointWrites,
+                                  VirtualStepClock, delivery_schedule,
+                                  trainer_injector)
+from repro.runtime.server import Request, Server, ServerConfig
+
+
+# ---------------------------------------------------------------------------
+# Robust micro-benchmark timing (satellite: median-of-k + outlier trim).
+# ---------------------------------------------------------------------------
+
+
+class TestRobustSeconds:
+    def test_median_of_clean_samples(self):
+        assert robust_seconds([0.012, 0.010, 0.011]) == pytest.approx(0.011)
+
+    def test_high_outlier_trimmed(self):
+        # a 25x GC-pause sample must not drag the estimate
+        assert robust_seconds([0.010, 0.011, 0.25]) == pytest.approx(0.0105)
+
+    def test_single_sample_passthrough(self):
+        assert robust_seconds([0.3]) == pytest.approx(0.3)
+
+    def test_outlier_does_not_flip_ic1_factorization(self):
+        """The regression this satellite pins: one polluted sample in the
+        (2, 2) micro-benchmark used to flip the ic1 search to (4, 1)."""
+        from repro.configs.base import ModelConfig
+
+        cfg = ModelConfig(name="t", family="dense", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2,
+                          d_ff=128, vocab_size=256, head_dim=16)
+        payload = 1e6
+        # ground truth: (2,2) genuinely fastest; one 200x outlier sample
+        # (a GC pause mid-benchmark) pollutes its set
+        samples = {(4, 1): [5e-3, 5e-3, 5e-3],
+                   (2, 2): [5e-4, 5e-4, 1e-1],
+                   (1, 4): [1e-2, 1e-2, 1e-2]}
+
+        def table(estimate):
+            entries = []
+            for (d1, d2), ss in samples.items():
+                b = payload / estimate(ss)
+                entries.append(((d1, d2), CalibEntry(
+                    b1=b if d1 > 1 else float("inf"),
+                    b2=b if d2 > 1 else float("inf"))))
+            return CalibrationTable(entries=tuple(sorted(entries)),
+                                    source="measured")
+
+        def best(tbl):
+            p = plan_search("ic1", 4, model=cfg, batch=8, seq=64,
+                            calibration=tbl).best
+            return (p.d1, p.d2)
+
+        clean = best(table(lambda ss: sorted(ss)[1]))
+        assert best(table(robust_seconds)) == clean
+        assert best(table(lambda ss: sum(ss) / len(ss))) != clean
+
+
+# ---------------------------------------------------------------------------
+# Deadline-budgeted recalibration.
+# ---------------------------------------------------------------------------
+
+
+def budget_fixture():
+    old = CalibrationTable(entries=(
+        ((4, 1), CalibEntry(b1=10.0, b2=float("inf"))),
+        ((2, 2), CalibEntry(b1=9.0, b2=8.0)),
+    ), source="measured")
+    plan = ParallelPlan(d1=4, d2=1, dp=1, topology="ic3", calibration=old)
+    clock = [0.0]
+
+    def timer():
+        return clock[0]
+
+    def measure(d1, d2):
+        clock[0] += 1.0
+        return CalibEntry(b1=100.0, b2=100.0)
+
+    return plan, clock, timer, measure
+
+
+class TestDeadlineBudget:
+    def test_spend_never_exceeds_deadline(self):
+        # the budget is checked before each micro-benchmark and a running
+        # one cannot be preempted, so the hard bound is deadline_s plus
+        # at most ONE measurement quantum (here each costs 1.0s); any
+        # deadline past the first quantum is respected exactly
+        plan, clock, timer, measure = budget_fixture()
+        for deadline in (0.0, 0.5, 1.0, 1.5, 2.5, 10.0):
+            clock[0] = 0.0
+            recalibrate_surviving(plan, devices=list(range(4)),
+                                  measure=measure, deadline_s=deadline,
+                                  timer=timer)
+            assert clock[0] <= deadline + 1.0, f"deadline_s={deadline}"
+            if deadline >= 1.0 or deadline == 0.0:
+                assert clock[0] <= deadline, f"deadline_s={deadline}"
+
+    def test_sensitivity_order_spends_budget_first(self):
+        plan, clock, timer, measure = budget_fixture()
+        new = recalibrate_surviving(plan, devices=list(range(4)),
+                                    measure=measure, deadline_s=1.5,
+                                    timer=timer)
+        by_key = dict(new.calibration.entries)
+        order = sensitivity_order(list(by_key), comm_matrix.PRESETS["ic3"]())
+        assert by_key[order[0]].provenance == "measured"
+        assert all(by_key[k].provenance != "measured" for k in order[1:])
+
+    def test_carried_and_analytic_fallbacks(self):
+        plan, clock, timer, measure = budget_fixture()
+        new = recalibrate_surviving(plan, devices=list(range(4)),
+                                    measure=measure, deadline_s=0.0,
+                                    timer=timer)
+        by_key = dict(new.calibration.entries)
+        # old table had (4,1) and (2,2) -> carried; (1,4) never measured
+        # -> analytic from the topology model
+        assert by_key[(4, 1)].provenance == "carried"
+        assert by_key[(4, 1)].b1 == 10.0
+        assert by_key[(1, 4)].provenance == "analytic"
+        # the merged table keeps the old table's lineage in its source
+        assert "deadline-budgeted" in new.calibration.source
+        # an exhausted budget must not claim a recalibration happened
+        assert not any(v.startswith("recalibrated")
+                       for _, v in new.provenance)
+        assert any(k == "calibration" and v.startswith("budget")
+                   for k, v in new.provenance)
+
+    def test_unbudgeted_path_all_measured(self):
+        plan, clock, timer, measure = budget_fixture()
+        new = recalibrate_surviving(plan, devices=list(range(4)),
+                                    measure=measure)
+        counts = new.calibration.provenance_counts()
+        assert counts == {"measured": len(new.calibration.entries)}
+        assert new.calibration.source == "measured"
+
+    def test_describe_shows_counts_only_when_degraded(self):
+        plan, clock, timer, measure = budget_fixture()
+        budgeted = recalibrate_surviving(plan, devices=list(range(4)),
+                                         measure=measure, deadline_s=1.5,
+                                         timer=timer)
+        assert " calib[" in budgeted.describe()
+        # fully-measured, unbudgeted plans keep their historical describe
+        # string (other tests pin it)
+        full = recalibrate_surviving(plan, devices=list(range(4)),
+                                     measure=measure)
+        assert " calib[" not in full.describe()
+
+    def test_analytic_entry_matches_topology_model(self):
+        matrix = comm_matrix.PRESETS["ic3"]()
+        e = analytic_entry(matrix, 2, 2)
+        assert e.provenance == "analytic"
+        assert np.isfinite(e.b1) and np.isfinite(e.b2)
+        assert analytic_entry(matrix, 1, 4).b1 == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan + adapters.
+# ---------------------------------------------------------------------------
+
+
+class TestFaultPlan:
+    def test_json_round_trip(self, tmp_path):
+        plan = FaultPlan.scripted(
+            FaultEvent("device_loss", at=5, hosts=(2, 3)),
+            FaultEvent("straggler", at=2, duration=3, severity=8.0),
+            seed=7)
+        assert FaultPlan.from_dict(plan.to_dict()) == plan
+        p = tmp_path / "plan.json"
+        plan.dump(str(p))
+        assert FaultPlan.load(str(p)) == plan
+
+    def test_sample_is_seeded_and_never_kills_host_zero(self):
+        for seed in range(20):
+            plan = FaultPlan.sample(seed, n_events=6, n_hosts=4)
+            assert plan == FaultPlan.sample(seed, n_events=6, n_hosts=4)
+            for ev in plan.by_kind("device_loss"):
+                assert 0 not in ev.hosts
+            assert all(ev.kind in KINDS for ev in plan.events)
+
+    def test_events_sorted_and_validated(self):
+        plan = FaultPlan.scripted(FaultEvent("torn_ckpt", at=9),
+                                  FaultEvent("straggler", at=1, duration=1))
+        assert [e.at for e in plan.events] == [1, 9]
+        with pytest.raises(ValueError):
+            FaultEvent("disk_on_fire", at=1)
+        with pytest.raises(ValueError):
+            FaultEvent("torn_ckpt", at=-1)
+        with pytest.raises(ValueError):
+            plan.by_kind("disk_on_fire")
+
+    def test_virtual_step_clock_manufactures_stragglers(self):
+        plan = FaultPlan.scripted(
+            FaultEvent("straggler", at=1, duration=1, severity=5.0))
+        clock = VirtualStepClock(plan, base_dt=0.01)
+        reads = [clock() for _ in range(6)]   # three (t0, t1) step pairs
+        dts = [reads[2 * i + 1] - reads[2 * i] for i in range(3)]
+        assert dts == pytest.approx([0.01, 0.05, 0.01])
+
+    def test_backpressure_allocator_windows_and_delegates(self):
+        class StubAlloc:
+            free_pages = 11
+
+            def ensure(self, slot, n):
+                return True
+
+        ticks = [0]
+        bp = BackpressureAllocator(
+            StubAlloc(), FaultPlan.scripted(
+                FaultEvent("backpressure", at=2, duration=3)),
+            lambda: ticks[0])
+        got = []
+        for ticks[0] in range(7):
+            got.append(bp.ensure(0, 4))
+        assert got == [True, True, False, False, False, True, True]
+        assert bp.denied == 3
+        assert bp.free_pages == 11   # everything else delegates
+
+    def test_delivery_schedule_delays_named_senders(self):
+        plan = FaultPlan.scripted(
+            FaultEvent("lease_delay", at=1.0, hosts=(2,), duration=0.5,
+                       severity=0.3))
+        delivery = delivery_schedule(plan, base_delay=0.01)
+        assert delivery(2, 0, 1.2) == pytest.approx(0.31)
+        assert delivery(1, 0, 1.2) == pytest.approx(0.01)   # other senders
+        assert delivery(2, 0, 2.0) == pytest.approx(0.01)   # window over
+
+    def test_trainer_injector_fires_once_per_event(self):
+        plan = FaultPlan.scripted(FaultEvent("device_loss", at=3))
+        inject = trainer_injector(plan)
+        inject(2)
+        with pytest.raises(RuntimeError):
+            inject(3)
+        inject(3)   # the replayed step after recovery must survive
+
+
+# ---------------------------------------------------------------------------
+# Trainer: torn checkpoint writes share the failure budget.
+# ---------------------------------------------------------------------------
+
+
+def make_fake_trainer(ckpt_dir, total=6, every=2, max_failures=2):
+    from repro.data.pipeline import DataConfig, TokenSource
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    def build_step():
+        def step(params, opt, batch):
+            return params, opt, {"loss": 1.0}
+        return step
+
+    return Trainer(
+        TrainerConfig(total_steps=total, ckpt_dir=str(ckpt_dir),
+                      ckpt_every=every, max_failures=max_failures),
+        build_step,
+        TokenSource(DataConfig(vocab_size=64, seq_len=8, global_batch=2)),
+        init_state=lambda: ({"w": np.zeros(3, np.float32)},
+                            {"m": np.zeros(3, np.float32)}),
+        put_batch=lambda b: b)
+
+
+class TestTornCheckpoint:
+    def test_torn_save_counted_swept_and_retried(self, tmp_path):
+        from repro.checkpoint import manager as ckpt
+
+        trainer = make_fake_trainer(tmp_path)
+        plan = FaultPlan.scripted(FaultEvent("torn_ckpt", at=4))
+        with TornCheckpointWrites(plan) as torn:
+            trainer.run()
+        assert torn.torn == [4]
+        assert trainer.total_failures == 1
+        assert len(trainer.history) == 6
+        assert ckpt.latest_step(str(tmp_path)) == 6
+        assert not [n for n in os.listdir(tmp_path)
+                    if n.startswith(".tmp_")]
+
+    def test_consecutive_failure_reset_after_commit(self, tmp_path):
+        trainer = make_fake_trainer(tmp_path)
+        with TornCheckpointWrites(FaultPlan.scripted(
+                FaultEvent("torn_ckpt", at=2), FaultEvent("torn_ckpt", at=4))):
+            trainer.run()
+        # each torn save recovered, and the committed step between them
+        # decayed the consecutive counter — the lifetime count keeps both
+        assert trainer.total_failures == 2
+        assert trainer.failures == 0
+
+    def test_budget_exhaustion_raises(self, tmp_path, monkeypatch):
+        trainer = make_fake_trainer(tmp_path, max_failures=2)
+        monkeypatch.setattr(
+            "repro.checkpoint.manager.save",
+            lambda *a, **k: (_ for _ in ()).throw(OSError("disk gone")))
+        with pytest.raises(OSError):
+            trainer.run()
+        assert trainer.failures == trainer.cfg.max_failures + 1
+
+
+# ---------------------------------------------------------------------------
+# Server degradation ladder + reshape, on a fake compiled step.
+# ---------------------------------------------------------------------------
+
+VOCAB = 97
+
+
+def fake_step(tokens, start, table, caches):
+    """Greedy 'model': output at absolute position p is a pure function
+    of (input token at p, p) — so a faithful replay reproduces the exact
+    token stream, and any position bookkeeping bug breaks parity."""
+    tokens = np.asarray(tokens)
+    out = np.zeros_like(tokens)
+    for b in range(tokens.shape[0]):
+        for j in range(tokens.shape[1]):
+            out[b, j] = (int(tokens[b, j]) * 31
+                         + (int(start[b]) + j) * 7 + 13) % VOCAB
+    return out, caches
+
+
+def make_server(num_pages=40, **kw):
+    pcfg = PagedConfig(page_size=4, num_pages=num_pages, pages_per_slot=8)
+    scfg = ServerConfig(batch_slots=2, prefill_chunk=4, paged=pcfg, **kw)
+    return Server(scfg, fake_step,
+                  lambda: np.zeros((1, pcfg.num_pages, pcfg.page_size),
+                                   np.float32))
+
+
+def submit_all(server, n, max_new=6, deadline=None, seed=0):
+    # prompt lengths 5..7: admission reserves 2 pages (one rounded
+    # chunk), decode grows each request to 3 — so the tiny num_pages=4
+    # pool (3 usable) can run any ONE request but never two, and every
+    # queued request fails admission while one runs (sustained,
+    # recoverable backpressure rather than a deadlock)
+    rng = np.random.default_rng(seed)
+    for rid in range(n):
+        server.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, VOCAB, size=5 + rid % 3,
+                                dtype=np.int32),
+            max_new=max_new,
+            deadline_ticks=deadline(rid) if deadline else None))
+
+
+class TestServerDegradation:
+    def test_deadlines_expire_and_pool_drains(self):
+        # 3 usable pages for 2 slots: the pool itself is the fault
+        server = make_server(num_pages=4)
+        submit_all(server, 4, deadline=lambda rid: 15)
+        server.run_until_drained()
+        st = server.stats()
+        assert st["expired"] > 0
+        assert st["admission_retries"] > 0
+        assert len(server.completed) + len(server.expired) == 4
+        for r in server.expired:
+            assert r.expired and not r.done
+        assert server.alloc.held_pages == 0 and not server.busy
+
+    def test_no_deadline_waits_out_the_pressure(self):
+        server = make_server(num_pages=4)
+        submit_all(server, 4)
+        server.run_until_drained()
+        assert len(server.completed) == 4 and not server.expired
+
+    def test_backoff_reduces_doomed_retries(self):
+        def retries(**kw):
+            server = make_server(num_pages=4, **kw)
+            submit_all(server, 4)
+            server.run_until_drained()
+            assert len(server.completed) == 4
+            return server.stats()["admission_retries"]
+
+        eager = retries(admission_backoff_base=1, admission_backoff_max=1)
+        backed = retries()
+        assert 0 < backed < eager
+
+    def test_expiry_frees_pages_for_the_queue(self):
+        # with deadlines, the doomed front-runners die and the rest are
+        # served; without eager expiry the pool would wedge on them
+        server = make_server(num_pages=4)
+        submit_all(server, 6, deadline=lambda rid: 12 if rid < 4 else None)
+        server.run_until_drained()
+        assert sorted(r.rid for r in server.completed)[-2:] == [4, 5]
+
+    def test_low_water_evicts_pinned_prefix_pages(self):
+        server = make_server(num_pages=8, prefix_cache=True,
+                             eviction_low_water=6)
+        server.submit(Request(rid=0,
+                              prompt=np.arange(8, dtype=np.int32),
+                              max_new=1))
+        server.run_until_drained()   # registers a 2-page pinned prefix
+        pinned = server.alloc.pinned_pages
+        assert pinned > 0
+        server.step()                # free 5 < low-water 6 -> evict
+        # only the shortfall is shed (leaf-first), not the whole prefix
+        assert server.stats()["evicted_pages"] == 1
+        assert server.alloc.pinned_pages == pinned - 1
+        assert server.alloc.free_pages >= 6
+
+
+class TestServerReshape:
+    def run_baseline(self, n=4, max_new=6, **kw):
+        server = make_server(**kw)
+        submit_all(server, n, max_new=max_new, seed=11)
+        server.run_until_drained()
+        return {r.rid: list(r.out) for r in server.completed}
+
+    def test_greedy_parity_across_reshape(self):
+        baseline = self.run_baseline()
+        server = make_server()
+        submit_all(server, 4, seed=11)
+        for _ in range(6):
+            server.step()    # leave requests mid-prefill and mid-decode
+        assert any(s is not None for s in server.slots)
+        server.reshape(fake_step, lambda: None)
+        server.run_until_drained()
+        assert {r.rid: list(r.out) for r in server.completed} == baseline
+        assert server.stats()["reshapes"] == 1
+        assert server.alloc.held_pages == 0
+
+    def test_reshape_at_every_tick_preserves_parity(self):
+        # the drain-and-remesh replay must be parity-exact no matter
+        # where in the request lifecycle the mesh change lands
+        baseline = self.run_baseline(n=3, max_new=4)
+        full = make_server()
+        submit_all(full, 3, max_new=4, seed=11)
+        total = full.run_until_drained()
+        for cut in range(1, total):
+            server = make_server()
+            submit_all(server, 3, max_new=4, seed=11)
+            for _ in range(cut):
+                server.step()
+            server.reshape(fake_step, lambda: None)
+            server.run_until_drained()
+            got = {r.rid: list(r.out) for r in server.completed}
+            assert got == baseline, f"parity broke at cut={cut}"
+
+    def test_reshape_keeps_deadlines_and_counters(self):
+        server = make_server(num_pages=4)
+        submit_all(server, 4, deadline=lambda rid: 15)
+        for _ in range(4):
+            server.step()
+        server.reshape(fake_step, lambda: None)
+        server.run_until_drained()
+        st = server.stats()
+        assert st["reshapes"] == 1
+        assert len(server.completed) + len(server.expired) == 4
+        assert server.alloc.held_pages == 0
